@@ -1,0 +1,39 @@
+//! Paper Fig 10: normalized IPC of the six schemes on four VGG CONV
+//! layers (64/128/256/512 channels). SE ratio 50% (paper §3.4 default).
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme};
+use seal::stats::Table;
+use seal::traffic::{self, layers};
+
+fn main() {
+    let cfg = GpuConfig::default();
+    let sample = 1440;
+    let mut t = Table::new(
+        "Fig 10: CONV-layer IPC normalized to Baseline (SE ratio 0.5)",
+        &["conv64", "conv128", "conv256", "conv512"],
+    );
+    let layer_set = zoo::fig10_conv_layers();
+    let base: Vec<f64> = layer_set
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let w = layers::conv_workload(l, 1.0, &cfg, sample, i as u64);
+            traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
+        })
+        .collect();
+    for (name, scheme) in Scheme::ALL_SIX {
+        let vals: Vec<f64> = layer_set
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let ratio = if scheme.smart { 0.5 } else { 1.0 };
+                let w = layers::conv_workload(l, ratio, &cfg, sample, i as u64);
+                let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
+                s.ipc() / base[i]
+            })
+            .collect();
+        t.row(name, vals);
+    }
+    t.emit("fig10_conv_ipc.csv");
+}

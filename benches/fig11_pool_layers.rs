@@ -1,0 +1,39 @@
+//! Paper Fig 11: normalized IPC of the six schemes on the five VGG POOL
+//! layers (more bandwidth-bound than CONV, so encryption hurts more).
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme};
+use seal::stats::Table;
+use seal::traffic::{self, layers};
+
+fn main() {
+    let cfg = GpuConfig::default();
+    let sample = 64 * 1440;
+    let mut t = Table::new(
+        "Fig 11: POOL-layer IPC normalized to Baseline (SE ratio 0.5)",
+        &["pool1", "pool2", "pool3", "pool4", "pool5"],
+    );
+    let layer_set = zoo::fig11_pool_layers();
+    let base: Vec<f64> = layer_set
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let w = layers::pool_workload(l, 1.0, &cfg, sample, i as u64);
+            traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
+        })
+        .collect();
+    for (name, scheme) in Scheme::ALL_SIX {
+        let vals: Vec<f64> = layer_set
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let ratio = if scheme.smart { 0.5 } else { 1.0 };
+                let w = layers::pool_workload(l, ratio, &cfg, sample, i as u64);
+                let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
+                s.ipc() / base[i]
+            })
+            .collect();
+        t.row(name, vals);
+    }
+    t.emit("fig11_pool_ipc.csv");
+}

@@ -1,0 +1,40 @@
+//! Paper Fig 12: SEAL IPC vs encryption ratio (100% → 0%) for a CONV
+//! and a POOL layer. Paper shape: dropping from 100% to ~50% recovers
+//! most of the loss (CONV 65%→95%, POOL 54%→87% of baseline).
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme};
+use seal::stats::Table;
+use seal::traffic::{self, layers};
+
+fn main() {
+    let cfg = GpuConfig::default();
+    let conv = zoo::fig10_conv_layers()[1];
+    let pool = zoo::fig11_pool_layers()[1];
+    let scheme = Scheme::SEAL;
+
+    let conv_base = {
+        let w = layers::conv_workload(&conv, 1.0, &cfg, 1440, 1);
+        traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
+    };
+    let pool_base = {
+        let w = layers::pool_workload(&pool, 1.0, &cfg, 64 * 1440, 1);
+        traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
+    };
+    let mut t = Table::new(
+        "Fig 12: SEAL IPC vs encryption ratio (normalized to Baseline)",
+        &["CONV", "POOL"],
+    );
+    for pct in (0..=10).rev() {
+        let ratio = pct as f64 / 10.0;
+        let wc = layers::conv_workload(&conv, ratio, &cfg, 1440, 1);
+        let sc = traffic::simulate(&wc, cfg.clone().with_scheme(scheme));
+        let wp = layers::pool_workload(&pool, ratio, &cfg, 64 * 1440, 1);
+        let sp = traffic::simulate(&wp, cfg.clone().with_scheme(scheme));
+        t.row(
+            &format!("{}%", pct * 10),
+            vec![sc.ipc() / conv_base, sp.ipc() / pool_base],
+        );
+    }
+    t.emit("fig12_ratio_sweep.csv");
+}

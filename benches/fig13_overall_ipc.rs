@@ -1,0 +1,29 @@
+//! Paper Fig 13: whole-network IPC for VGG-16 / ResNet-18 / ResNet-34
+//! under all six schemes (normalized to Baseline). Results are cached
+//! under results/ and reused by the Fig 14/15 benches.
+
+use seal::stats::Table;
+use seal::traffic::network::cached_all_schemes;
+
+fn main() {
+    let sample = bench_sample();
+    let mut t = Table::new(
+        &format!("Fig 13: whole-network IPC normalized to Baseline (sample {sample})"),
+        &["vgg16", "resnet18", "resnet34"],
+    );
+    let nets = ["vgg16", "resnet18", "resnet34"];
+    let per_net: Vec<_> = nets.iter().map(|n| cached_all_schemes(n, 0.5, sample)).collect();
+    for i in 0..per_net[0].len() {
+        let name = per_net[0][i].scheme.clone();
+        let vals: Vec<f64> = per_net
+            .iter()
+            .map(|rows| rows[i].ipc / rows[0].ipc.max(1e-12))
+            .collect();
+        t.row(&name, vals);
+    }
+    t.emit("fig13_overall_ipc.csv");
+}
+
+fn bench_sample() -> usize {
+    std::env::var("SEAL_NET_SAMPLE").ok().and_then(|s| s.parse().ok()).unwrap_or(240)
+}

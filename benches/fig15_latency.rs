@@ -1,0 +1,28 @@
+//! Paper Fig 15: inference latency normalized to Baseline.
+//! Paper shape: Direct/Counter +39–60%; Direct+SE/Counter+SE +5–18%;
+//! SEAL +5–7%.
+
+use seal::stats::Table;
+use seal::traffic::network::cached_all_schemes;
+
+fn main() {
+    let sample = std::env::var("SEAL_NET_SAMPLE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(240);
+    let mut t = Table::new(
+        "Fig 15: inference latency normalized to Baseline",
+        &["vgg16", "resnet18", "resnet34"],
+    );
+    let nets = ["vgg16", "resnet18", "resnet34"];
+    let per_net: Vec<_> = nets.iter().map(|n| cached_all_schemes(n, 0.5, sample)).collect();
+    for i in 0..per_net[0].len() {
+        let name = per_net[0][i].scheme.clone();
+        let vals: Vec<f64> = per_net
+            .iter()
+            .map(|rows| rows[i].latency / rows[0].latency.max(1e-12))
+            .collect();
+        t.row(&name, vals);
+    }
+    t.emit("fig15_latency.csv");
+}

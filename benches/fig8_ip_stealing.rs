@@ -1,0 +1,63 @@
+//! Paper Fig 8: inference accuracy of the adversary's substitute models
+//! (IP stealing). Series: white-box, black-box, SE at several ratios.
+//! Paper shape: white ≫ black; SE(ratio ≥ ~40–50%) ≈ black-box.
+//!
+//! Runs entirely through the PJRT artifacts (victim training is cached
+//! in artifacts/victim_<m>.bin). Knobs:
+//!   SEAL_FIG89_MODELS   comma list (default resnet18m)
+//!   SEAL_FIG89_RATIOS   comma list (default 0.2,0.5,0.8)
+//!   SEAL_FIG89_STEPS    substitute steps (default 120)
+
+use seal::security::{SecurityCtx, SubstituteKind, TrainCfg};
+use seal::stats::Table;
+
+fn env_list(key: &str, default: &str) -> Vec<String> {
+    std::env::var(key)
+        .unwrap_or_else(|_| default.to_string())
+        .split(',')
+        .map(str::to_string)
+        .collect()
+}
+
+fn main() {
+    let models = env_list("SEAL_FIG89_MODELS", "resnet18m");
+    let ratios: Vec<f64> = env_list("SEAL_FIG89_RATIOS", "0.2,0.5,0.8")
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let cfg = TrainCfg {
+        victim_steps: std::env::var("SEAL_FIG89_VICTIM_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300),
+        substitute_steps: std::env::var("SEAL_FIG89_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(120),
+        aug_rounds: 1,
+        ..TrainCfg::default()
+    };
+    let mut ctx = SecurityCtx::new(std::path::Path::new("artifacts")).expect("artifacts");
+    let mut cols: Vec<String> = vec!["white-box".into(), "black-box".into()];
+    cols.extend(ratios.iter().map(|r| format!("SE {:.0}%", r * 100.0)));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig 8: substitute-model test accuracy", &col_refs);
+
+    for model in &models {
+        let victim = ctx.train_victim(model, &cfg).expect("victim");
+        let vacc = ctx.test_accuracy(model, &victim).expect("acc");
+        eprintln!("[fig8] victim {model} accuracy {vacc:.4}");
+        let mut row = Vec::new();
+        for kind in std::iter::once(SubstituteKind::WhiteBox)
+            .chain(std::iter::once(SubstituteKind::BlackBox))
+            .chain(ratios.iter().map(|&r| SubstituteKind::Se { ratio: r }))
+        {
+            let sub = ctx.extract_substitute(model, &victim, kind, &cfg).expect("substitute");
+            let acc = ctx.test_accuracy(model, &sub).expect("acc");
+            eprintln!("[fig8] {model} {kind:?} accuracy {acc:.4}");
+            row.push(acc);
+        }
+        t.row(model, row);
+    }
+    t.emit("fig8_ip_stealing.csv");
+}

@@ -1,0 +1,62 @@
+//! Paper Fig 9: targeted I-FGSM transferability of adversarial examples
+//! generated on each substitute, replayed on the victim.
+//! Paper shape: white-box near 100%; black-box ~20%; SE(ratio ≥ ~50%)
+//! at or below black-box; low ratios leak (transferability rises).
+//!
+//! Same knobs as fig8 (SEAL_FIG89_*), plus SEAL_FIG9_EXAMPLES.
+
+use seal::security::{SecurityCtx, SubstituteKind, TrainCfg};
+use seal::stats::Table;
+
+fn env_list(key: &str, default: &str) -> Vec<String> {
+    std::env::var(key)
+        .unwrap_or_else(|_| default.to_string())
+        .split(',')
+        .map(str::to_string)
+        .collect()
+}
+
+fn main() {
+    let models = env_list("SEAL_FIG89_MODELS", "resnet18m");
+    let ratios: Vec<f64> = env_list("SEAL_FIG89_RATIOS", "0.2,0.5,0.8")
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let n_examples: usize = std::env::var("SEAL_FIG9_EXAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let cfg = TrainCfg {
+        victim_steps: std::env::var("SEAL_FIG89_VICTIM_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300),
+        substitute_steps: std::env::var("SEAL_FIG89_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(120),
+        aug_rounds: 1,
+        ..TrainCfg::default()
+    };
+    let mut ctx = SecurityCtx::new(std::path::Path::new("artifacts")).expect("artifacts");
+    let mut cols: Vec<String> = vec!["white-box".into(), "black-box".into()];
+    cols.extend(ratios.iter().map(|r| format!("SE {:.0}%", r * 100.0)));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig 9: I-FGSM transferability to the victim", &col_refs);
+
+    for model in &models {
+        let victim = ctx.train_victim(model, &cfg).expect("victim");
+        let mut row = Vec::new();
+        for kind in std::iter::once(SubstituteKind::WhiteBox)
+            .chain(std::iter::once(SubstituteKind::BlackBox))
+            .chain(ratios.iter().map(|&r| SubstituteKind::Se { ratio: r }))
+        {
+            let sub = ctx.extract_substitute(model, &victim, kind, &cfg).expect("substitute");
+            let tr = ctx.transferability(model, &sub, &victim, n_examples).expect("attack");
+            eprintln!("[fig9] {model} {kind:?} transferability {tr:.4}");
+            row.push(tr);
+        }
+        t.row(model, row);
+    }
+    t.emit("fig9_transferability.csv");
+}

@@ -1,0 +1,38 @@
+//! §Perf: simulator throughput (the repo's own hot path — every figure
+//! is sim-bound). Reports simulated Mcycles/s and memory-request rate
+//! for a representative conv layer under SEAL.
+
+use std::time::Instant;
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme};
+use seal::stats::Table;
+use seal::traffic::{self, layers};
+
+fn main() {
+    let cfg = GpuConfig::default();
+    let layer = zoo::fig10_conv_layers()[2];
+    let mut t = Table::new(
+        "§Perf: simulator throughput",
+        &["sim Mcycles/s", "M mem-accesses/s", "wall ms"],
+    );
+    for (name, scheme) in [
+        ("Baseline", Scheme::BASELINE),
+        ("SEAL", Scheme::SEAL),
+        ("Counter", Scheme::COUNTER),
+    ] {
+        let w = layers::conv_workload(&layer, 0.5, &cfg, 1440, 2);
+        let t0 = Instant::now();
+        let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(
+            name,
+            vec![
+                s.cycles as f64 / dt / 1e6,
+                (s.l1_hits + s.l1_misses) as f64 / dt / 1e6,
+                dt * 1e3,
+            ],
+        );
+    }
+    t.emit("perf_simulator.csv");
+}

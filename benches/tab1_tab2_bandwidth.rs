@@ -1,0 +1,49 @@
+//! Paper Tables 1 & 2: bandwidth of the buses vs the AES engine.
+//! We *measure* the modeled components (GDDR5 channel streaming, AES
+//! engine streaming) and print them against the paper's constants.
+
+use seal::sim::aes_engine::AesEngine;
+use seal::sim::config::{AesCfg, DramCfg, LINE};
+use seal::sim::dram::Channel;
+use seal::stats::Table;
+
+const CORE_HZ: f64 = 700e6;
+
+fn main() {
+    // Measured GDDR5 per-channel streaming bandwidth.
+    let mut ch = Channel::new(DramCfg::default());
+    let n = 100_000u64;
+    let mut done = 0;
+    for i in 0..n {
+        done = ch.access(i * LINE, false, 0);
+    }
+    let chan_gbps = (n * LINE) as f64 / (done as f64 / CORE_HZ) / 1e9;
+    let total_gbps = chan_gbps * 6.0;
+
+    // Measured AES engine streaming bandwidth.
+    let mut aes = AesEngine::new(AesCfg::default());
+    let mut adone = 0;
+    for _ in 0..n {
+        adone = aes.submit(0);
+    }
+    let aes_gbps = (n * LINE) as f64 / (adone as f64 / CORE_HZ) / 1e9;
+
+    let mut t = Table::new(
+        "Tables 1+2: modeled bandwidths vs paper",
+        &["measured GB/s", "paper GB/s"],
+    );
+    t.row("GDDR5 bus (6 ch)", vec![total_gbps, 177.4]);
+    t.row("GDDR5 per channel", vec![chan_gbps, 177.4 / 6.0]);
+    t.row("AES engine (1x)", vec![aes_gbps, 8.0]);
+    t.row("AES engines (6x)", vec![aes_gbps * 6.0, 48.0]);
+    t.row("DDR3/DDR4 (ref)", vec![f64::NAN, 21.3]);
+    t.row("PCIe 3.0 x16 (ref)", vec![f64::NAN, 16.0]);
+    t.emit("tab1_tab2_bandwidth.csv");
+
+    println!(
+        "bandwidth gap (GDDR / 6xAES): measured {:.1}x, paper ~{:.1}x",
+        total_gbps / (aes_gbps * 6.0),
+        177.4 / 48.0
+    );
+    assert!((aes_gbps - 8.0).abs() < 0.5, "AES engine model drifted: {aes_gbps}");
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the Pallas-kernel inference artifact, seal the
+//! model with SEAL (SE row selection + functional ColoE encryption),
+//! decrypt at the "chip boundary", and classify a batch — end to end
+//! through the three layers (Pallas kernel → JAX HLO → Rust PJRT).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use seal::coordinator::SecureModelStore;
+use seal::model::manifest::{Dataset, Manifest};
+use seal::runtime::{argmax_rows, lit_f32, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load(std::path::Path::new("artifacts"))?;
+    let data = Dataset::load(&man)?;
+    let model = "vgg16m";
+    let info = man.model(model)?.clone();
+
+    // Prefer a trained victim if the security pipeline already ran.
+    let theta = man
+        .load_f32(&format!("victim_{model}.bin"))
+        .unwrap_or(man.theta_init(model)?);
+
+    // 1. Seal: SE selection at ratio 0.5 + real AES-CTR over the
+    //    selected lines (what DRAM holds; what a bus snooper sees).
+    let store = SecureModelStore::seal(&info, &theta, 0.5, b"quickstart-key!!");
+    println!(
+        "sealed {}: {}/{} lines encrypted ({:.0}%)",
+        model,
+        store.encrypted_lines(),
+        store.n_lines(),
+        100.0 * store.encrypted_lines() as f64 / store.n_lines() as f64
+    );
+
+    // 2. On-chip boundary: decrypt into the accelerator's view.
+    let onchip = store.decrypt();
+    assert_eq!(onchip, theta, "decrypt must be exact");
+
+    // 3. Run the Pallas-conv inference artifact under PJRT.
+    let mut rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load(&man.hlo_path(&format!("predict_pallas_{model}.hlo.txt")))?;
+    let b = man.batch_pallas;
+    let img = data.image_len();
+    let x = &data.x_test[..b * img];
+    let dims = [b as i64, data.hw as i64, data.hw as i64, data.channels as i64];
+    let out = exe.run(&[lit_f32(&onchip, &[onchip.len() as i64])?, lit_f32(x, &dims)?])?;
+    let preds = argmax_rows(&out[0], data.n_classes)?;
+    let truth: Vec<i32> = data.y_test[..b].to_vec();
+    println!("predictions : {preds:?}");
+    println!("ground truth: {truth:?}");
+    let correct = preds.iter().zip(&truth).filter(|(p, y)| **p == **y as usize).count();
+    println!("{correct}/{b} correct (Pallas conv kernel, AOT HLO, rust PJRT)");
+    Ok(())
+}

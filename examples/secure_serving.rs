@@ -1,0 +1,49 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve batched inference
+//! requests from an encrypted model under every scheme, reporting
+//! latency/throughput with the cycle-simulator's memory-scheme slowdown
+//! folded in. This is the deployment story the paper's intro motivates:
+//! a self-driving-car edge accelerator that must not leak its model
+//! over the GDDR bus.
+//!
+//!     cargo run --release --example secure_serving [n_requests]
+
+use seal::coordinator::server::{serve, ServeCfg};
+use seal::sim::Scheme;
+use seal::stats::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let mut t = Table::new(
+        "secure serving: latency/throughput per scheme",
+        &["mean us", "p99 us", "req/s", "mem slowdown", "accuracy"],
+    );
+    for (name, scheme) in [
+        ("Baseline", Scheme::BASELINE),
+        ("Direct", Scheme::DIRECT),
+        ("SEAL", Scheme::SEAL),
+    ] {
+        let report = serve(ServeCfg {
+            model: "vgg16m".into(),
+            artifacts: "artifacts".into(),
+            n_requests: n,
+            batch_max: 8,
+            scheme,
+            se_ratio: 0.5,
+            arrival_per_ms: 0.4,
+            use_pallas: true,
+        })?;
+        report.print();
+        t.row(
+            name,
+            vec![
+                report.latency_us.mean(),
+                report.latency_us.quantile(0.99) as f64,
+                report.throughput_rps,
+                report.slowdown,
+                report.sample_accuracy,
+            ],
+        );
+    }
+    t.emit("e2e_secure_serving.csv");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT compiler: lower every L2 export to HLO *text* + write sidecars.
+
+HLO text (NOT `lowered.compile()`/proto `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` 0.1.6
+rust crate binds) rejects; the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs under artifacts/:
+  *.hlo.txt            one per exported function
+  manifest.json        param layouts, batch contracts, dataset stanza
+  dataset.bin          synthetic dataset (data.py)
+  theta_init_<m>.bin   He-init theta (f32 LE) per model
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, models
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_export(name: str, fn, example_args, outdir: str) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}.hlo.txt  ({len(text) / 1e6:.2f} MB)")
+    return f"{name}.hlo.txt"
+
+
+def model_manifest(m) -> dict:
+    return {
+        "name": m.name,
+        "input_hw": m.input_hw,
+        "input_channels": m.cin,
+        "n_classes": models.N_CLASSES,
+        "theta_len": m.theta_len,
+        "params": [
+            {
+                "name": p.name,
+                "shape": list(p.shape),
+                "offset": p.offset,
+                "size": p.size,
+                "row_axis": p.row_axis,
+                "layer_id": p.layer_id,
+                "kind": p.kind,
+                "se_eligible": p.se_eligible,
+            }
+            for p in m.params
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--models", default="vgg16m,resnet18m,resnet34m")
+    ap.add_argument("--seed", type=int, default=2020)
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+    model_names = [s for s in args.models.split(",") if s]
+
+    manifest: dict = {
+        "batches": {
+            "train": model.TRAIN_BATCH,
+            "eval": model.EVAL_BATCH,
+            "grad": model.GRAD_BATCH,
+            "pallas": model.PALLAS_BATCH,
+        },
+        "ifgsm": {"alpha": model.IFGSM_ALPHA, "eps": model.IFGSM_EPS},
+        "seed": args.seed,
+        "models": [],
+        "artifacts": [],
+    }
+
+    print("[aot] dataset")
+    ds = data.generate(args.seed)
+    manifest["dataset"] = data.write_bin(ds, os.path.join(outdir, "dataset.bin"))
+
+    print("[aot] lowering exports")
+    exports: dict[str, tuple] = {}
+    exports.update(model.common_exports())
+    exports.update(model.pallas_predict_export())
+    for name in model_names:
+        exports.update(model.exports_for(name))
+        m = models.build(name)
+        manifest["models"].append(model_manifest(m))
+        theta0 = np.asarray(m.init_theta(jax.random.PRNGKey(args.seed)))
+        theta0.astype("<f4").tofile(os.path.join(outdir, f"theta_init_{name}.bin"))
+        print(f"  theta_init_{name}.bin  ({m.theta_len} params)")
+
+    for name, (fn, ex) in exports.items():
+        manifest["artifacts"].append(lower_export(name, fn, ex, outdir))
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

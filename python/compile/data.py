@@ -1,0 +1,113 @@
+"""Synthetic 10-class image dataset (CIFAR-10 stand-in, DESIGN.md §1).
+
+No dataset download is available in this environment, so we generate a
+procedurally defined classification task with the paper's split
+proportions: a victim-training split, a small adversary split (the
+paper's 10% that the attacker owns), and a held-out test split.
+
+Construction: each class gets a smooth low-frequency prototype image;
+samples are prototype + random translation + per-sample gain + Gaussian
+pixel noise. The noise/jitter level is chosen so a mini-CNN victim
+reaches ~90%+ accuracy while an adversary with 8x less data lands well
+below it — reproducing the white-box / black-box accuracy gap structure
+of paper Fig 8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+HW = 32
+C = 3
+N_CLASSES = 10
+# Intra-class modes: each class is a mixture of sub-prototypes, so a
+# model must see many samples per class to cover all modes — this is
+# what makes the victim's 8x data advantage matter (the Fig 8
+# white-box/black-box gap).
+MODES = 12
+NOISE = 0.15
+JITTER = 4
+GAIN = 0.2
+
+N_VICTIM = 8192
+N_ADV = 1024
+N_TEST = 2048
+
+
+@dataclasses.dataclass
+class Dataset:
+    x_victim: np.ndarray
+    y_victim: np.ndarray
+    x_adv: np.ndarray
+    y_adv: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+
+def _prototypes(rng: np.random.Generator) -> np.ndarray:
+    """Smooth patterns: per (class, mode), low-freq noise upsampled 4x.
+
+    Modes of a class share a common class pattern (60%) blended with a
+    mode-specific pattern (40%), so classes are coherent but multimodal.
+    """
+    base = rng.normal(size=(N_CLASSES, 1, HW // 4, HW // 4, C))
+    mode = rng.normal(size=(N_CLASSES, MODES, HW // 4, HW // 4, C))
+    low = (0.35 * base + 0.65 * mode).reshape(N_CLASSES * MODES, HW // 4, HW // 4, C)
+    protos = low.repeat(4, axis=1).repeat(4, axis=2)
+    # Box-blur twice for smoothness.
+    for _ in range(2):
+        protos = (
+            protos
+            + np.roll(protos, 1, axis=1)
+            + np.roll(protos, -1, axis=1)
+            + np.roll(protos, 1, axis=2)
+            + np.roll(protos, -1, axis=2)
+        ) / 5.0
+    protos -= protos.min(axis=(1, 2, 3), keepdims=True)
+    protos /= protos.max(axis=(1, 2, 3), keepdims=True) + 1e-9
+    return 0.2 + 0.6 * protos  # keep headroom for noise within [0,1]
+
+
+def _sample(rng, protos, n) -> tuple[np.ndarray, np.ndarray]:
+    y = rng.integers(0, N_CLASSES, size=n)
+    m = rng.integers(0, MODES, size=n)
+    x = protos[y * MODES + m].copy()
+    for i in range(n):
+        dx, dy = rng.integers(-JITTER, JITTER + 1, size=2)
+        x[i] = np.roll(np.roll(x[i], dx, axis=0), dy, axis=1)
+    gain = 1.0 + rng.normal(scale=GAIN, size=(n, 1, 1, 1))
+    x = x * gain + rng.normal(scale=NOISE, size=x.shape)
+    return np.clip(x, 0.0, 1.0).astype(np.float32), y.astype(np.int32)
+
+
+def generate(seed: int = 2020) -> Dataset:
+    rng = np.random.default_rng(seed)
+    protos = _prototypes(rng)
+    xv, yv = _sample(rng, protos, N_VICTIM)
+    xa, ya = _sample(rng, protos, N_ADV)
+    xt, yt = _sample(rng, protos, N_TEST)
+    return Dataset(xv, yv, xa, ya, xt, yt)
+
+
+def write_bin(ds: Dataset, path: str) -> dict:
+    """Serialize as u8 images + u8 labels; returns the manifest stanza.
+
+    Layout: [victim imgs][adv imgs][test imgs][victim y][adv y][test y],
+    images quantized x*255 -> u8, each image HW*HW*C bytes, C-order.
+    """
+    with open(path, "wb") as f:
+        for arr in (ds.x_victim, ds.x_adv, ds.x_test):
+            f.write((arr * 255.0 + 0.5).astype(np.uint8).tobytes())
+        for y in (ds.y_victim, ds.y_adv, ds.y_test):
+            f.write(y.astype(np.uint8).tobytes())
+    return dict(
+        file="dataset.bin",
+        hw=HW,
+        channels=C,
+        n_classes=N_CLASSES,
+        n_victim=N_VICTIM,
+        n_adv=N_ADV,
+        n_test=N_TEST,
+    )

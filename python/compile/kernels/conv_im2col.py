@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: tiled im2col matmul — the CONV hot-spot of SEAL's workloads.
+
+The paper's evaluation runs cuDNN GEMM-style convolutions on a Fermi GPU
+(threadblock tiling into shared memory, FMA on CUDA cores). The TPU
+re-think (DESIGN.md §6): tiles are shaped for the 128x128 MXU systolic
+array, staged HBM->VMEM by `BlockSpec`, accumulated in f32 in a VMEM
+scratch accumulator across the K grid dimension (the analogue of the
+K-loop over shared-memory tiles on the GPU).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (a while loop over
+the grid) for both pytest and the AOT artifacts. Real-TPU efficiency is
+*estimated* structurally (VMEM footprint / MXU occupancy) in
+EXPERIMENTS.md §Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default block shapes. 128x128 matches the MXU tile; bk=128 keeps the
+# per-step VMEM working set at 3 * 128*128*4 B = 192 KiB (x-tile, w-tile,
+# acc), leaving room for double buffering well under the ~16 MiB VMEM.
+BM = 128
+BN = 128
+BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, l) grid step: acc[i,j] += x[i,l] @ y[l,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Tiled Pallas matmul `x @ y` with f32 accumulation.
+
+    Operands are zero-padded up to block multiples; the result is sliced
+    back, so any (m, k) x (k, n) is accepted.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shapes {x.shape} x {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    # Shrink blocks for small operands so the grid is never empty and we
+    # do not pad tiny test problems up to full MXU tiles.
+    bm = min(bm, max(8, 1 << (m - 1).bit_length())) if m else bm
+    bn = min(bn, max(8, 1 << (n - 1).bit_length())) if n else bn
+    bk = min(bk, max(8, 1 << (k - 1).bit_length())) if k else bk
+    xp = _pad_to(x, (bm, bk))
+    yp = _pad_to(y, (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """SAME-padded patch extraction.
+
+    x: [B, H, W, C] -> [B, Ho, Wo, kh*kw*C] with patch element order
+    (dh, dw, c), matching a [kh, kw, cin, cout] weight raveled to
+    [kh*kw*cin, cout].
+    """
+    b, h, w, c = x.shape
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    ph = max((ho - 1) * stride + kh - h, 0)
+    pw = max((wo - 1) * stride + kw - w, 0)
+    xpad = jnp.pad(
+        x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0))
+    )
+    cols = []
+    for dh in range(kh):
+        for dw in range(kw):
+            cols.append(
+                xpad[:, dh : dh + ho * stride : stride, dw : dw + wo * stride : stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, use_pallas: bool = True
+) -> jax.Array:
+    """SAME conv via im2col + (Pallas) matmul.
+
+    x: [B, H, W, Cin], w: [kh, kw, Cin, Cout] -> [B, Ho, Wo, Cout].
+    With use_pallas=False the GEMM runs through jnp.dot, which is the
+    oracle path (ref.py) — both share the identical im2col so the test
+    isolates the kernel.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = im2col(x, kh, kw, stride)
+    b, ho, wo, kdim = patches.shape
+    a = patches.reshape(b * ho * wo, kdim)
+    wmat = w.reshape(kh * kw * cin, cout)
+    if use_pallas:
+        y = matmul(a, wmat)
+    else:
+        y = jnp.dot(a, wmat, preferred_element_type=jnp.float32)
+    return y.reshape(b, ho, wo, cout)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: targeted I-FGSM update step (paper §3.4.3, [37]).
+
+x' = clip01( clip_{x0 +- eps}( x - alpha * sign(g) ) )
+
+Targeted attack: g is the gradient of the loss towards the *assigned*
+target label, so we descend. Elementwise VPU work tiled over the
+flattened batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fgsm_kernel(x_ref, g_ref, x0_ref, o_ref, *, alpha: float, eps: float):
+    x = x_ref[...]
+    step = x - alpha * jnp.sign(g_ref[...])
+    lo = jnp.maximum(x0_ref[...] - eps, 0.0)
+    hi = jnp.minimum(x0_ref[...] + eps, 1.0)
+    o_ref[...] = jnp.clip(step, lo, hi)
+
+
+def ifgsm_step(
+    x: jax.Array,
+    g: jax.Array,
+    x0: jax.Array,
+    *,
+    alpha: float,
+    eps: float,
+    bs: int = 4096,
+) -> jax.Array:
+    """One I-FGSM iteration; x, g, x0 share an arbitrary shape."""
+    shape = x.shape
+    n = x.size
+    bs = min(bs, n)
+    npad = -(-n // bs) * bs
+    flat = lambda a: jnp.pad(a.reshape(-1), (0, npad - n)).reshape(npad // bs, bs)
+    out = pl.pallas_call(
+        functools.partial(_fgsm_kernel, alpha=alpha, eps=eps),
+        grid=(npad // bs,),
+        in_specs=[pl.BlockSpec((1, bs), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad // bs, bs), jnp.float32),
+        interpret=True,
+    )(flat(x), flat(g), flat(x0))
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: kernel-row l1-norm importance (SEAL SE scheme, §3.1.2).
+
+The SE scheme ranks the kernel rows of a CONV layer (one row per input
+channel: w[:, :, i, :]) by the sum of absolute weights. This kernel
+computes those row sums for a row-major [R, S] view of the layer
+(R = cin kernel rows, S = kh*kw*cout elements each) as a VPU reduction
+tiled over rows.
+
+The same measurement is re-implemented in Rust (`model::importance`) for
+the request path; this kernel is the build-time/TPU version, verified
+against ref.py by pytest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rowsum_kernel(w_ref, o_ref):
+    o_ref[...] = jnp.sum(jnp.abs(w_ref[...]), axis=1)
+
+
+def row_l1(wmat: jax.Array, *, br: int = 8) -> jax.Array:
+    """Per-row l1 norms of a [R, S] matrix -> [R] f32."""
+    if wmat.ndim != 2:
+        raise ValueError(f"row_l1 expects 2-D, got {wmat.shape}")
+    r, s = wmat.shape
+    br = min(br, r)
+    rp = -(-r // br) * br
+    wp = jnp.pad(wmat, ((0, rp - r), (0, 0)))
+    out = pl.pallas_call(
+        _rowsum_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
+        interpret=True,
+    )(wp)
+    return out[:r]
+
+
+def conv_row_l1(w: jax.Array) -> jax.Array:
+    """Row importance for a [kh, kw, cin, cout] conv weight -> [cin]."""
+    kh, kw, cin, cout = w.shape
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin, kh * kw * cout)
+    return row_l1(wmat)

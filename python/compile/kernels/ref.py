@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """SAME conv, NHWC x HWIO -> NHWC, via XLA's native convolution."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def row_l1_ref(wmat: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.abs(wmat), axis=1)
+
+
+def conv_row_l1_ref(w: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.abs(w), axis=(0, 1, 3))
+
+
+def ifgsm_step_ref(x, g, x0, *, alpha: float, eps: float):
+    step = x - alpha * jnp.sign(g)
+    return jnp.clip(step, jnp.maximum(x0 - eps, 0.0), jnp.minimum(x0 + eps, 1.0))

@@ -1,0 +1,85 @@
+"""L2 facade: the exported jax functions that aot.py lowers to HLO.
+
+Every function here crosses the PJRT boundary with *fixed* shapes
+(jax.export requires static shapes); batch sizes are the contract with
+the Rust runtime and are recorded in the manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import models
+from .kernels import conv_im2col, fgsm, importance
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+GRAD_BATCH = 64
+PALLAS_BATCH = 8
+
+IFGSM_ALPHA = 0.01
+IFGSM_EPS = 0.06
+
+
+def exports_for(model_name: str) -> dict[str, tuple]:
+    """(fn, example_args) per exported function for one model."""
+    m = models.build(model_name)
+    hw, c = m.input_hw, m.cin
+    f32 = jnp.float32
+    th = jax.ShapeDtypeStruct((m.theta_len,), f32)
+    xe = jax.ShapeDtypeStruct((EVAL_BATCH, hw, hw, c), f32)
+    xt = jax.ShapeDtypeStruct((TRAIN_BATCH, hw, hw, c), f32)
+    xg = jax.ShapeDtypeStruct((GRAD_BATCH, hw, hw, c), f32)
+    yt = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    yg = jax.ShapeDtypeStruct((GRAD_BATCH,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((1,), f32)
+
+    out = {
+        f"predict_{model_name}": (lambda t, x: (m.apply(t, x),), (th, xe)),
+        f"train_step_{model_name}": (m.train_step, (th, xt, yt, th, lr)),
+        f"input_grad_{model_name}": (lambda t, x, y: (m.input_grad(t, x, y),), (th, xg, yg)),
+    }
+    return out
+
+
+def common_exports() -> dict[str, tuple]:
+    """Model-independent artifacts: the Pallas kernels themselves."""
+    f32 = jnp.float32
+    hw, c = models.INPUT_HW, models.INPUT_C
+    xs = jax.ShapeDtypeStruct((GRAD_BATCH, hw, hw, c), f32)
+
+    def fgsm_fn(x, g, x0):
+        return (fgsm.ifgsm_step(x, g, x0, alpha=IFGSM_ALPHA, eps=IFGSM_EPS),)
+
+    def matmul_fn(a, b):
+        return (conv_im2col.matmul(a, b),)
+
+    def importance_fn(w):
+        return (importance.conv_row_l1(w),)
+
+    mm = jax.ShapeDtypeStruct((256, 256), f32)
+    wdemo = jax.ShapeDtypeStruct((3, 3, 64, 64), f32)
+    return {
+        "fgsm_step": (fgsm_fn, (xs, xs, xs)),
+        "matmul_demo": (matmul_fn, (mm, mm)),
+        "importance_demo": (importance_fn, (wdemo,)),
+    }
+
+
+def pallas_predict_export() -> dict[str, tuple]:
+    """vgg16m inference with the Pallas conv kernel on the hot path.
+
+    This is the artifact the quickstart example serves: proof that the
+    L1 kernel lowers into the same HLO module and runs under the Rust
+    PJRT client.
+    """
+    m = models.build("vgg16m")
+    th = jax.ShapeDtypeStruct((m.theta_len,), jnp.float32)
+    xp = jax.ShapeDtypeStruct((PALLAS_BATCH, m.input_hw, m.input_hw, m.cin), jnp.float32)
+    return {
+        "predict_pallas_vgg16m": (
+            lambda t, x: (m.apply(t, x, use_pallas=True),),
+            (th, xp),
+        )
+    }

@@ -1,0 +1,58 @@
+"""Model zoo (L2): channel-scaled VGG-16 / ResNet-18 / ResNet-34.
+
+Same layer structure as the paper's three CNNs (13 / 17 / 33 conv
+layers), channels scaled /8 so they train on CPU XLA in seconds at
+32x32x3 input (DESIGN.md §1 substitution table). The full-size layer
+tables used for the *performance* figures live on the Rust side
+(`model::zoo`); these minis are the trainable models for the *security*
+figures (Fig 8 / Fig 9).
+"""
+
+from __future__ import annotations
+
+from . import nn
+
+INPUT_HW = 32
+INPUT_C = 3
+N_CLASSES = 10
+
+# Channel scale: VGG-16's (64,128,256,512) -> (8,16,32,64).
+
+
+def vgg16m() -> nn.FlatModel:
+    ops = []
+    for cout, n in ((8, 2), (16, 2), (32, 3), (64, 3), (64, 3)):
+        ops += [nn.conv_op(cout) for _ in range(n)]
+        ops.append(nn.pool_op())
+    ops += [nn.fc_op(64), nn.fc_op(64), nn.fc_op(N_CLASSES, relu=False)]
+    return nn.FlatModel("vgg16m", ops, INPUT_HW, INPUT_C)
+
+
+def _resnet(name: str, blocks: tuple[int, ...]) -> nn.FlatModel:
+    ops = [nn.conv_op(8)]
+    channels = (8, 16, 32, 64)
+    for stage, (c, n) in enumerate(zip(channels, blocks)):
+        for b in range(n):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            ops.append(nn.block_op(c, stride))
+    ops += [nn.gap_op(), nn.fc_op(N_CLASSES, relu=False)]
+    return nn.FlatModel(name, ops, INPUT_HW, INPUT_C)
+
+
+def resnet18m() -> nn.FlatModel:
+    return _resnet("resnet18m", (2, 2, 2, 2))
+
+
+def resnet34m() -> nn.FlatModel:
+    return _resnet("resnet34m", (3, 4, 6, 3))
+
+
+MODELS = {
+    "vgg16m": vgg16m,
+    "resnet18m": resnet18m,
+    "resnet34m": resnet34m,
+}
+
+
+def build(name: str) -> nn.FlatModel:
+    return MODELS[name]()

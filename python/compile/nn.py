@@ -1,0 +1,245 @@
+"""L2 building blocks: flat-theta neural nets.
+
+All model parameters live in ONE f32 vector ("theta"). This is the
+contract with the Rust coordinator: parameters cross the PJRT boundary
+as a single Literal, SE masks are per-element f32 vectors over the same
+layout, and the manifest (aot.py) describes every tensor's (offset,
+shape, row-axis) so Rust can compute l1 kernel-row importance and build
+freeze masks without Python.
+
+Tensor order inside theta is the walk order of `param_specs`, each
+tensor raveled C-order (numpy default) — the same convention the Rust
+`model::layout` module decodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_im2col
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One tensor inside theta."""
+
+    name: str
+    shape: tuple[int, ...]
+    offset: int
+    # Axis whose slices are the SE "kernel rows" (cin for conv HWIO,
+    # the input axis for FC); None for biases.
+    row_axis: int | None
+    layer_id: int
+    kind: str  # conv | fc | bias
+    se_eligible: bool  # SE partial encryption applies (paper §3.4.1)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Layer graph. A model is a list of ops; 'block' is a ResNet basic block.
+# ---------------------------------------------------------------------------
+
+
+def conv_op(cout: int, k: int = 3, stride: int = 1, relu: bool = True) -> dict:
+    return dict(kind="conv", cout=cout, k=k, stride=stride, relu=relu)
+
+
+def pool_op() -> dict:
+    return dict(kind="pool")
+
+
+def gap_op() -> dict:
+    return dict(kind="gap")
+
+
+def fc_op(dout: int, relu: bool = True) -> dict:
+    return dict(kind="fc", dout=dout, relu=relu)
+
+
+def block_op(cout: int, stride: int = 1) -> dict:
+    """ResNet basic block: conv-relu-conv (+1x1 projection if needed) + relu."""
+    return dict(kind="block", cout=cout, stride=stride)
+
+
+def _he_std(fan_in: int) -> float:
+    return math.sqrt(2.0 / fan_in)
+
+
+class FlatModel:
+    """A model graph bound to an input shape, with its theta layout."""
+
+    def __init__(self, name: str, ops: list[dict], input_hw: int, cin: int):
+        self.name = name
+        self.ops = ops
+        self.input_hw = input_hw
+        self.cin = cin
+        self.params: list[ParamSpec] = []
+        self._build_layout()
+
+    # -- layout ------------------------------------------------------------
+
+    def _add(self, name, shape, row_axis, layer_id, kind, se_eligible):
+        off = self.params[-1].offset + self.params[-1].size if self.params else 0
+        self.params.append(
+            ParamSpec(name, tuple(shape), off, row_axis, layer_id, kind, se_eligible)
+        )
+
+    def _build_layout(self):
+        """Walk the graph once to enumerate tensors (mirrors `_apply`)."""
+        c = self.cin
+        hw = self.input_hw
+        lid = 0
+        conv_ids = []
+
+        def add_conv(name, cin, cout, k, se):
+            nonlocal lid
+            self._add(f"{name}.w", (k, k, cin, cout), 2, lid, "conv", se)
+            self._add(f"{name}.b", (cout,), None, lid, "bias", False)
+            conv_ids.append(lid)
+            lid += 1
+
+        for i, op in enumerate(self.ops):
+            if op["kind"] == "conv":
+                add_conv(f"conv{i}", c, op["cout"], op["k"], True)
+                c = op["cout"]
+                hw //= op["stride"]
+            elif op["kind"] == "block":
+                cout, stride = op["cout"], op["stride"]
+                add_conv(f"block{i}.c1", c, cout, 3, True)
+                add_conv(f"block{i}.c2", cout, cout, 3, True)
+                if stride != 1 or c != cout:
+                    add_conv(f"block{i}.proj", c, cout, 1, True)
+                c = cout
+                hw //= stride
+            elif op["kind"] == "pool":
+                hw //= 2
+            elif op["kind"] == "gap":
+                hw = 1
+            elif op["kind"] == "fc":
+                din = c * hw * hw
+                self._add(f"fc{i}.w", (din, op["dout"]), 0, lid, "fc", True)
+                self._add(f"fc{i}.b", (op["dout"],), None, lid, "bias", False)
+                lid += 1
+                c, hw = op["dout"], 1
+            else:
+                raise ValueError(op)
+
+        # Paper §3.4.1 SE policy: fully encrypt (never reveal) the first
+        # two conv layers, the last conv layer, and the final FC layer;
+        # SE applies to the rest.
+        conv_first = set(conv_ids[:2])
+        conv_last = {conv_ids[-1]} if conv_ids else set()
+        fc_last = {max(p.layer_id for p in self.params)}
+        protected = conv_first | conv_last | fc_last
+        self.params = [
+            dataclasses.replace(
+                p, se_eligible=p.se_eligible and p.layer_id not in protected
+            )
+            for p in self.params
+        ]
+
+    @property
+    def theta_len(self) -> int:
+        last = self.params[-1]
+        return last.offset + last.size
+
+    # -- init / pack -------------------------------------------------------
+
+    def init_theta(self, key: jax.Array) -> jax.Array:
+        chunks = []
+        for p in self.params:
+            key, sub = jax.random.split(key)
+            if p.kind == "bias":
+                chunks.append(jnp.zeros(p.size, jnp.float32))
+            else:
+                fan_in = (
+                    math.prod(p.shape[:-1]) if p.kind == "conv" else p.shape[0]
+                )
+                chunks.append(
+                    jax.random.normal(sub, (p.size,), jnp.float32) * _he_std(fan_in)
+                )
+        return jnp.concatenate(chunks)
+
+    def unpack(self, theta: jax.Array) -> dict[str, jax.Array]:
+        return {
+            p.name: theta[p.offset : p.offset + p.size].reshape(p.shape)
+            for p in self.params
+        }
+
+    # -- forward -----------------------------------------------------------
+
+    def apply(self, theta: jax.Array, x: jax.Array, *, use_pallas: bool = False):
+        """Logits for x: [B, H, W, Cin] -> [B, n_classes]."""
+        t = self.unpack(theta)
+
+        def norm(x):
+            # Parameter-free per-sample normalization (LayerNorm without
+            # affine): keeps activations conditioned without BN running
+            # stats, so theta stays a pure weight vector (the SE scheme's
+            # object of study).
+            mu = jnp.mean(x, axis=(1, 2, 3), keepdims=True)
+            var = jnp.var(x, axis=(1, 2, 3), keepdims=True)
+            return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+        conv = lambda x, w, b, s: (
+            conv_im2col.conv2d(x, w, stride=s, use_pallas=use_pallas)
+            + b[None, None, None, :]
+        )
+        for i, op in enumerate(self.ops):
+            if op["kind"] == "conv":
+                x = norm(conv(x, t[f"conv{i}.w"], t[f"conv{i}.b"], op["stride"]))
+                if op["relu"]:
+                    x = jax.nn.relu(x)
+            elif op["kind"] == "block":
+                stride = op["stride"]
+                h = jax.nn.relu(norm(conv(x, t[f"block{i}.c1.w"], t[f"block{i}.c1.b"], stride)))
+                h = norm(conv(h, t[f"block{i}.c2.w"], t[f"block{i}.c2.b"], 1))
+                if f"block{i}.proj.w" in t:
+                    x = conv(x, t[f"block{i}.proj.w"], t[f"block{i}.proj.b"], stride)
+                x = jax.nn.relu(x + h)
+            elif op["kind"] == "pool":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+            elif op["kind"] == "gap":
+                x = jnp.mean(x, axis=(1, 2), keepdims=True)
+            elif op["kind"] == "fc":
+                b, = x.shape[:1]
+                x = x.reshape(b, -1) @ t[f"fc{i}.w"] + t[f"fc{i}.b"]
+                if op["relu"]:
+                    x = jax.nn.relu(x)
+        return x
+
+    # -- training ----------------------------------------------------------
+
+    def loss(self, theta, x, y):
+        logits = self.apply(theta, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    def train_step(self, theta, x, y, mask, lr):
+        """SGD step with a per-element freeze mask (SE fine-tuning, §3.4.1).
+
+        mask[i] = 1 -> parameter i is trainable (unknown to the
+        adversary); mask[i] = 0 -> frozen (known plaintext weight).
+
+        Global-norm gradient clipping keeps plain (stateless) SGD stable
+        across the 13–33-conv models without optimizer state — the flat
+        theta is the only training state crossing the PJRT boundary.
+        """
+        loss, g = jax.value_and_grad(self.loss)(theta, x, y)
+        gnorm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+        g = g * jnp.minimum(1.0, 1.0 / gnorm)
+        return theta - lr[0] * mask * g, jnp.reshape(loss, (1,))
+
+    def input_grad(self, theta, x, y):
+        """dLoss/dx — Jacobian augmentation + I-FGSM driver (§3.4)."""
+        return jax.grad(lambda xx: self.loss(theta, xx, y))(x)

@@ -1,0 +1,71 @@
+"""Dataset generator + AOT lowering smoke tests."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, data, model, models
+
+
+def test_dataset_deterministic_and_bounded():
+    a = data.generate(123)
+    b = data.generate(123)
+    np.testing.assert_array_equal(a.x_victim, b.x_victim)
+    np.testing.assert_array_equal(a.y_test, b.y_test)
+    assert a.x_victim.min() >= 0.0 and a.x_victim.max() <= 1.0
+    assert a.x_victim.shape == (data.N_VICTIM, data.HW, data.HW, data.C)
+    # All classes present in every split.
+    for y in (a.y_victim, a.y_adv, a.y_test):
+        assert len(np.unique(y)) == data.N_CLASSES
+
+
+def test_dataset_task_is_learnable_but_noisy():
+    # Nearest-prototype accuracy should be far above chance but below
+    # perfect — the gap structure Fig 8 needs.
+    ds = data.generate(7)
+    protos = np.stack(
+        [ds.x_victim[ds.y_victim == c].mean(axis=0) for c in range(data.N_CLASSES)]
+    )
+    d = ((ds.x_test[:, None] - protos[None]) ** 2).sum(axis=(2, 3, 4))
+    acc = (d.argmin(axis=1) == ds.y_test).mean()
+    # Class means are a weak classifier on the multimodal task (a CNN
+    # does far better) but must clear chance by a wide margin.
+    assert 0.3 < acc < 0.995
+
+
+def test_write_bin_roundtrip(tmp_path):
+    ds = data.generate(5)
+    stanza = data.write_bin(ds, str(tmp_path / "d.bin"))
+    raw = np.fromfile(tmp_path / "d.bin", dtype=np.uint8)
+    n_img = data.N_VICTIM + data.N_ADV + data.N_TEST
+    assert raw.size == n_img * data.HW * data.HW * data.C + n_img
+    imgs = raw[: data.N_VICTIM * data.HW * data.HW * data.C].reshape(
+        data.N_VICTIM, data.HW, data.HW, data.C
+    )
+    np.testing.assert_allclose(
+        imgs.astype(np.float32) / 255.0, ds.x_victim, atol=1 / 255.0 + 1e-6
+    )
+    labels = raw[n_img * data.HW * data.HW * data.C :]
+    np.testing.assert_array_equal(labels[: data.N_VICTIM], ds.y_victim)
+    assert stanza["n_victim"] == data.N_VICTIM
+
+
+def test_hlo_text_lowering_smoke():
+    # Lower the cheapest export and sanity-check the HLO text format the
+    # rust loader consumes (ENTRY + tuple root).
+    fn, ex = model.common_exports()["importance_demo"]
+    lowered = jax.jit(fn).lower(*ex)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[64]" in text
+
+
+def test_manifest_stanza_shapes():
+    m = models.build("resnet18m")
+    stanza = aot.model_manifest(m)
+    assert stanza["theta_len"] == m.theta_len
+    assert len(stanza["params"]) == len(m.params)
+    total = sum(p["size"] for p in stanza["params"])
+    assert total == m.theta_len

@@ -1,0 +1,116 @@
+"""L1 kernel vs ref.py oracle — the core correctness signal.
+
+hypothesis sweeps shapes (and the matmul dtype) so block-edge padding,
+non-multiple dims, and degenerate sizes are all exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_im2col, fgsm, importance, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rnd(rng, m, k), rnd(rng, k, n)
+    got = conv_im2col.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    hw=st.integers(4, 17),
+    cin=st.integers(1, 9),
+    cout=st.integers(1, 9),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_pallas_matches_lax(hw, cin, cout, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, 2, hw, hw, cin)
+    w = rnd(rng, k, k, cin, cout)
+    got = conv_im2col.conv2d(x, w, stride=stride, use_pallas=True)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_jnp_path_matches_lax():
+    rng = np.random.default_rng(0)
+    x = rnd(rng, 2, 8, 8, 4)
+    w = rnd(rng, 3, 3, 4, 6)
+    got = conv_im2col.conv2d(x, w, use_pallas=False)
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    rng = np.random.default_rng(1)
+    x = rnd(rng, 33, 65).astype(jnp.bfloat16)
+    y = rnd(rng, 65, 17).astype(jnp.bfloat16)
+    got = conv_im2col.matmul(x, y)
+    assert got.dtype == jnp.float32
+    want = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 65), s=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+def test_row_l1_matches_ref(r, s, seed):
+    rng = np.random.default_rng(seed)
+    w = rnd(rng, r, s)
+    np.testing.assert_allclose(
+        importance.row_l1(w), ref.row_l1_ref(w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_conv_row_l1_matches_ref():
+    rng = np.random.default_rng(7)
+    w = rnd(rng, 3, 3, 13, 9)
+    np.testing.assert_allclose(
+        importance.conv_row_l1(w), ref.conv_row_l1_ref(w), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    alpha=st.floats(1e-3, 0.1),
+    eps=st.floats(0.01, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ifgsm_step_matches_ref(n, alpha, eps, seed):
+    rng = np.random.default_rng(seed)
+    x0 = rng.uniform(0, 1, n).astype(np.float32)
+    x = np.clip(x0 + rng.normal(scale=0.02, size=n), 0, 1).astype(np.float32)
+    g = rnd(rng, n)
+    got = fgsm.ifgsm_step(x, g, x0, alpha=alpha, eps=eps)
+    want = ref.ifgsm_step_ref(x, g, x0, alpha=alpha, eps=eps)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_ifgsm_stays_in_ball():
+    rng = np.random.default_rng(3)
+    x0 = rng.uniform(0, 1, (4, 8, 8, 3)).astype(np.float32)
+    x = x0.copy()
+    g = rnd(rng, 4, 8, 8, 3)
+    for _ in range(20):
+        x = np.asarray(fgsm.ifgsm_step(x, g, x0, alpha=0.05, eps=0.1))
+    assert np.all(np.abs(x - x0) <= 0.1 + 1e-6)
+    assert x.min() >= 0.0 and x.max() <= 1.0

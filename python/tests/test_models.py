@@ -1,0 +1,109 @@
+"""L2 model tests: layouts, shapes, training dynamics, mask semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, nn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=list(models.MODELS))
+def m(request):
+    return models.build(request.param)
+
+
+def test_layout_is_contiguous(m):
+    off = 0
+    for p in m.params:
+        assert p.offset == off
+        off += p.size
+    assert m.theta_len == off
+
+
+def test_conv_counts_match_paper_structure():
+    # Paper: 13/16 conv layers for VGG-16, ResNet-18 has 2+2+2+2 blocks,
+    # ResNet-34 has 3+4+6+3 blocks.
+    counts = {}
+    for name in models.MODELS:
+        mm = models.build(name)
+        counts[name] = sum(1 for p in mm.params if p.kind == "conv")
+    assert counts["vgg16m"] == 13
+    # stem + 2 convs/block + 3 projection convs (stage entries)
+    assert counts["resnet18m"] == 1 + 2 * 8 + 3
+    assert counts["resnet34m"] == 1 + 2 * 16 + 3
+
+
+def test_se_policy_protects_boundary_layers(m):
+    convs = [p for p in m.params if p.kind == "conv"]
+    assert not convs[0].se_eligible
+    assert not convs[1].se_eligible
+    assert not convs[-1].se_eligible
+    fc = [p for p in m.params if p.kind == "fc"]
+    assert not fc[-1].se_eligible
+    # But the interior is SE-eligible.
+    assert any(p.se_eligible for p in convs)
+
+
+def test_forward_shape(m):
+    theta = m.init_theta(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, m.input_hw, m.input_hw, m.cin))
+    logits = m.apply(theta, x)
+    assert logits.shape == (2, models.N_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_step_reduces_loss():
+    m = models.build("vgg16m")
+    key = jax.random.PRNGKey(1)
+    theta = m.init_theta(key)
+    x = jax.random.uniform(key, (32, m.input_hw, m.input_hw, m.cin))
+    y = jax.random.randint(key, (32,), 0, models.N_CLASSES)
+    mask = jnp.ones_like(theta)
+    lr = jnp.array([0.1], jnp.float32)
+    step = jax.jit(m.train_step)
+    _, loss0 = step(theta, x, y, mask, lr)
+    for _ in range(20):
+        theta, loss = step(theta, x, y, mask, lr)
+    assert float(loss[0]) < float(loss0[0])
+
+
+def test_mask_freezes_parameters():
+    m = models.build("vgg16m")
+    key = jax.random.PRNGKey(2)
+    theta0 = m.init_theta(key)
+    x = jax.random.uniform(key, (8, m.input_hw, m.input_hw, m.cin))
+    y = jax.random.randint(key, (8,), 0, models.N_CLASSES)
+    mask = np.ones(m.theta_len, np.float32)
+    frozen = slice(100, 5000)
+    mask[frozen] = 0.0
+    theta1, _ = jax.jit(m.train_step)(theta0, x, y, jnp.asarray(mask), jnp.array([0.5]))
+    t0, t1 = np.asarray(theta0), np.asarray(theta1)
+    np.testing.assert_array_equal(t0[frozen], t1[frozen])
+    assert np.any(t0[: frozen.start] != t1[: frozen.start]) or np.any(
+        t0[frozen.stop :] != t1[frozen.stop :]
+    )
+
+
+def test_input_grad_shape_and_signal():
+    m = models.build("resnet18m")
+    key = jax.random.PRNGKey(3)
+    theta = m.init_theta(key)
+    x = jax.random.uniform(key, (4, m.input_hw, m.input_hw, m.cin))
+    y = jnp.zeros((4,), jnp.int32)
+    g = m.input_grad(theta, x, y)
+    assert g.shape == x.shape
+    assert float(jnp.abs(g).max()) > 0.0
+
+
+def test_row_axis_geometry(m):
+    # Every conv's row_axis=2 slice length equals cin; FC rows = inputs.
+    for p in m.params:
+        if p.kind == "conv":
+            assert p.row_axis == 2
+        elif p.kind == "fc":
+            assert p.row_axis == 0
+        else:
+            assert p.row_axis is None

@@ -1,0 +1,33 @@
+//! Edge-serving coordinator: the L3 request path.
+//!
+//! A worker thread owns the PJRT runtime and the *encrypted* model
+//! store; requests flow through a bounded queue into a dynamic batcher;
+//! per-request latency combines the real PJRT execution time with the
+//! secure-memory slowdown the cycle simulator measured for the chosen
+//! scheme (the accelerator this binary "is" would spend that extra time
+//! on its GDDR bus — DESIGN.md §2).
+
+pub mod secure_store;
+pub mod server;
+
+pub use secure_store::SecureModelStore;
+pub use server::{ServeCfg, ServeReport};
+
+use crate::util::cli::Args;
+
+pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let cfg = ServeCfg {
+        model: args.get_or("model", "vgg16m"),
+        artifacts: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
+        n_requests: args.get_u64("requests", 64) as usize,
+        batch_max: args.get_u64("batch", 8) as usize,
+        scheme: crate::sim::Scheme::parse(&args.get_or("scheme", "seal"))
+            .ok_or_else(|| anyhow::anyhow!("bad scheme"))?,
+        se_ratio: args.get_f64("ratio", 0.5),
+        arrival_per_ms: args.get_f64("rate", 2.0),
+        use_pallas: !args.has("no-pallas"),
+    };
+    let report = server::serve(cfg)?;
+    report.print();
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Functional secure weight store: the model's theta *as it would sit
+//! in accelerator DRAM* under SEAL — SE-selected lines really encrypted
+//! with the from-scratch AES (ColoE counter-mode OTP), plaintext lines
+//! untouched.
+//!
+//! This is the coordinator-side mirror of the paper's Figure 7: the
+//! flat theta is split into 128B lines; the SE mask (l1 row selection)
+//! marks encrypted lines; each encrypted line carries its colocated
+//! 8B counter. `decrypt()` is what the on-chip boundary does on a fill.
+
+use crate::crypto::{CounterModeCipher, LINE_BYTES};
+use crate::model::importance::{build_mask, se_row_selection};
+use crate::model::manifest::ModelInfo;
+
+pub struct SecureModelStore {
+    /// Ciphertext/plaintext lines as they would sit in DRAM.
+    lines: Vec<[u8; LINE_BYTES]>,
+    /// Colocated counters (one per line; ColoE's extra-chip 8B).
+    counters: Vec<u64>,
+    /// Which lines are encrypted (SE address-map flag bit).
+    encrypted: Vec<bool>,
+    cipher: CounterModeCipher,
+    /// Base "device address" of the theta region.
+    pub base_addr: u64,
+    theta_len: usize,
+}
+
+impl SecureModelStore {
+    /// Seal a model: SE selection at `ratio` over the real weights,
+    /// then encrypt the selected lines.
+    pub fn seal(info: &ModelInfo, theta: &[f32], ratio: f64, key: &[u8; 16]) -> SecureModelStore {
+        assert_eq!(theta.len(), info.theta_len);
+        let sel = se_row_selection(info, theta, ratio);
+        let mask = build_mask(info, &sel);
+        // Line policy: a line is encrypted if any element in it is
+        // (conservative, like padding a region up to line granularity).
+        let bytes: Vec<u8> = theta.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let n_lines = bytes.len().div_ceil(LINE_BYTES);
+        let cipher = CounterModeCipher::new(key);
+        let base_addr = 0x1000_0000u64;
+        let mut lines = Vec::with_capacity(n_lines);
+        let mut encrypted = Vec::with_capacity(n_lines);
+        let mut counters = Vec::with_capacity(n_lines);
+        for l in 0..n_lines {
+            let mut line = [0u8; LINE_BYTES];
+            let start = l * LINE_BYTES;
+            let end = (start + LINE_BYTES).min(bytes.len());
+            line[..end - start].copy_from_slice(&bytes[start..end]);
+            let elems = (start / 4)..(end / 4);
+            let enc = mask[elems].iter().any(|&m| m == 1.0);
+            let ctr = 1u64; // bumped on every write-back
+            let stored = if enc {
+                cipher.apply(base_addr + start as u64, ctr, &line)
+            } else {
+                line
+            };
+            lines.push(stored);
+            counters.push(ctr);
+            encrypted.push(enc);
+        }
+        SecureModelStore { lines, counters, encrypted, cipher, base_addr, theta_len: theta.len() }
+    }
+
+    pub fn n_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn encrypted_lines(&self) -> usize {
+        self.encrypted.iter().filter(|&&e| e).count()
+    }
+
+    /// What a bus snooper sees for line `l` (the DRAM-resident bytes).
+    pub fn snooped(&self, l: usize) -> &[u8; LINE_BYTES] {
+        &self.lines[l]
+    }
+
+    pub fn is_encrypted(&self, l: usize) -> bool {
+        self.encrypted[l]
+    }
+
+    /// The on-chip boundary: decrypt every line back into a flat theta.
+    pub fn decrypt(&self) -> Vec<f32> {
+        let mut bytes = Vec::with_capacity(self.lines.len() * LINE_BYTES);
+        for (l, line) in self.lines.iter().enumerate() {
+            let plain = if self.encrypted[l] {
+                self.cipher.apply(
+                    self.base_addr + (l * LINE_BYTES) as u64,
+                    self.counters[l],
+                    line,
+                )
+            } else {
+                *line
+            };
+            bytes.extend_from_slice(&plain);
+        }
+        bytes
+            .chunks_exact(4)
+            .take(self.theta_len)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Write-back path: re-encrypt a line with a bumped counter
+    /// (counter-mode freshness; same plaintext ⇒ new ciphertext).
+    pub fn rewrite_line(&mut self, l: usize, plaintext: &[u8; LINE_BYTES]) {
+        self.counters[l] += 1;
+        self.lines[l] = if self.encrypted[l] {
+            self.cipher
+                .apply(self.base_addr + (l * LINE_BYTES) as u64, self.counters[l], plaintext)
+        } else {
+            *plaintext
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ParamInfo;
+    use crate::util::rng::Rng;
+
+    fn info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            input_hw: 8,
+            input_channels: 8,
+            n_classes: 10,
+            theta_len: 8 * 36,
+            params: vec![ParamInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 8, 4],
+                offset: 0,
+                size: 288,
+                row_axis: Some(2),
+                layer_id: 0,
+                kind: "conv".into(),
+                se_eligible: true,
+            }],
+        }
+    }
+
+    fn theta() -> Vec<f32> {
+        let mut rng = Rng::seeded(3);
+        (0..288).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let t = theta();
+        let store = SecureModelStore::seal(&info(), &t, 0.5, &[9u8; 16]);
+        assert_eq!(store.decrypt(), t);
+    }
+
+    #[test]
+    fn snooper_sees_ciphertext_on_encrypted_lines() {
+        let t = theta();
+        let store = SecureModelStore::seal(&info(), &t, 1.0, &[9u8; 16]);
+        assert_eq!(store.encrypted_lines(), store.n_lines());
+        let plain_bytes: Vec<u8> = t.iter().flat_map(|f| f.to_le_bytes()).collect();
+        for l in 0..store.n_lines() {
+            let snoop = store.snooped(l);
+            let start = l * LINE_BYTES;
+            let end = (start + LINE_BYTES).min(plain_bytes.len());
+            assert_ne!(&snoop[..end - start], &plain_bytes[start..end], "line {l}");
+        }
+    }
+
+    #[test]
+    fn ratio_zero_leaves_plaintext() {
+        let t = theta();
+        let store = SecureModelStore::seal(&info(), &t, 0.0, &[9u8; 16]);
+        assert_eq!(store.encrypted_lines(), 0);
+        assert_eq!(store.decrypt(), t);
+    }
+
+    #[test]
+    fn rewrite_changes_ciphertext_not_plaintext() {
+        let t = theta();
+        let mut store = SecureModelStore::seal(&info(), &t, 1.0, &[9u8; 16]);
+        let before = *store.snooped(0);
+        // Re-encrypt the same plaintext: counter bump ⇒ fresh ciphertext
+        // (the dictionary/retry defence direct encryption lacks).
+        let plain = {
+            let dec = store.decrypt();
+            let mut line = [0u8; LINE_BYTES];
+            let bytes: Vec<u8> = dec.iter().flat_map(|f| f.to_le_bytes()).collect();
+            line.copy_from_slice(&bytes[..LINE_BYTES]);
+            line
+        };
+        store.rewrite_line(0, &plain);
+        assert_ne!(*store.snooped(0), before);
+        assert_eq!(store.decrypt(), t);
+    }
+}

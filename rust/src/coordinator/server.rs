@@ -1,0 +1,200 @@
+//! The serving loop: request generator → bounded queue → dynamic
+//! batcher → PJRT worker (which owns the decrypted, on-chip view of the
+//! sealed model).
+//!
+//! Reported per-request latency = queueing + real PJRT execution,
+//! multiplied by the *memory-scheme slowdown factor* the cycle
+//! simulator measured for this model class (the extra time the edge
+//! accelerator would spend behind its AES engines). The simulator runs
+//! once at startup on a representative conv layer to obtain the factor.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::model::manifest::{Dataset, Manifest};
+use crate::model::zoo;
+use crate::runtime::{argmax_rows, lit_f32, Runtime};
+use crate::sim::{GpuConfig, Scheme};
+use crate::stats::Histogram;
+use crate::traffic::{self, layers};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub model: String,
+    pub artifacts: std::path::PathBuf,
+    pub n_requests: usize,
+    pub batch_max: usize,
+    pub scheme: Scheme,
+    pub se_ratio: f64,
+    /// Mean request arrivals per millisecond (Poisson).
+    pub arrival_per_ms: f64,
+    /// Serve through the Pallas-kernel predict artifact when available.
+    pub use_pallas: bool,
+}
+
+#[derive(Debug)]
+pub struct ServeReport {
+    pub scheme: &'static str,
+    pub n_requests: usize,
+    pub n_batches: usize,
+    pub latency_us: Histogram,
+    pub throughput_rps: f64,
+    pub slowdown: f64,
+    pub sample_accuracy: f64,
+    pub encrypted_lines: usize,
+    pub total_lines: usize,
+}
+
+impl ServeReport {
+    pub fn print(&self) {
+        println!("serve report ({})", self.scheme);
+        println!("  requests        : {}", self.n_requests);
+        println!("  batches         : {}", self.n_batches);
+        println!("  mean latency    : {:.1} us", self.latency_us.mean());
+        println!("  p50/p99 latency : {} / {} us", self.latency_us.quantile(0.5), self.latency_us.quantile(0.99));
+        println!("  throughput      : {:.1} req/s", self.throughput_rps);
+        println!("  memory slowdown : {:.3}x (cycle-sim, scheme vs baseline)", self.slowdown);
+        println!("  sample accuracy : {:.4}", self.sample_accuracy);
+        println!("  sealed lines    : {}/{} encrypted", self.encrypted_lines, self.total_lines);
+    }
+}
+
+struct Request {
+    id: usize,
+    image: Vec<f32>,
+    label: i32,
+    arrived: Instant,
+}
+
+/// Memory-scheme slowdown factor from the cycle simulator: cycles of a
+/// representative conv layer under `scheme` over baseline cycles.
+pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
+    if scheme == Scheme::BASELINE {
+        return 1.0;
+    }
+    let cfg = GpuConfig::default();
+    let layer = zoo::fig10_conv_layers()[1];
+    let ratio = if scheme.smart { se_ratio } else { 1.0 };
+    let w = layers::conv_workload(&layer, ratio, &cfg, 360, 7);
+    let enc = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
+    let wb = layers::conv_workload(&layer, 1.0, &cfg, 360, 7);
+    let base = traffic::simulate(&wb, cfg.with_scheme(Scheme::BASELINE));
+    enc.cycles as f64 / base.cycles.max(1) as f64
+}
+
+pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
+    let man = Manifest::load(&cfg.artifacts)?;
+    let data = Dataset::load(&man)?;
+    let info = man.model(&cfg.model)?.clone();
+    let slowdown = scheme_slowdown(cfg.scheme, cfg.se_ratio);
+
+    // Request generator (Poisson arrivals over the test split).
+    let (tx, rx) = mpsc::channel::<Request>();
+    let img = data.image_len();
+    let n_req = cfg.n_requests;
+    let arrival = cfg.arrival_per_ms.max(1e-3);
+    let gen_images: Vec<(Vec<f32>, i32)> = {
+        let mut rng = Rng::seeded(man.seed ^ 0x5e7e);
+        (0..n_req)
+            .map(|_| {
+                let i = rng.below(data.y_test.len() as u64) as usize;
+                (data.x_test[i * img..(i + 1) * img].to_vec(), data.y_test[i])
+            })
+            .collect()
+    };
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::seeded(7);
+        for (id, (image, label)) in gen_images.into_iter().enumerate() {
+            // Exponential inter-arrival, mean 1/arrival ms.
+            let gap_ms = -(1.0 - rng.f64()).ln() / arrival;
+            std::thread::sleep(Duration::from_secs_f64(gap_ms / 1e3));
+            if tx.send(Request { id, image, label, arrived: Instant::now() }).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Worker: owns the runtime + the sealed model.
+    let theta = man
+        .load_f32(&format!("victim_{}.bin", cfg.model))
+        .or_else(|_| man.theta_init(&cfg.model))?;
+    let store =
+        super::secure_store::SecureModelStore::seal(&info, &theta, cfg.se_ratio, &[42u8; 16]);
+    let onchip_theta = store.decrypt();
+    debug_assert_eq!(onchip_theta.len(), theta.len());
+
+    let mut rt = Runtime::cpu()?;
+    // The quickstart Pallas artifact exists for vgg16m only.
+    let pallas_name = format!("predict_pallas_{}.hlo.txt", cfg.model);
+    let (exe, batch_cap) = if cfg.use_pallas && man.hlo_path(&pallas_name).exists() {
+        (rt.load(&man.hlo_path(&pallas_name))?, man.batch_pallas)
+    } else {
+        (rt.load_model_fn(&man, &cfg.model, "predict")?, man.batch_eval)
+    };
+    let batch_max = cfg.batch_max.min(batch_cap).max(1);
+    let theta_lit = lit_f32(&onchip_theta, &[onchip_theta.len() as i64])?;
+    let dims = [batch_cap as i64, data.hw as i64, data.hw as i64, data.channels as i64];
+
+    let mut latency = Histogram::default();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    let mut correct = 0usize;
+    let t_start = Instant::now();
+    let batch_timeout = Duration::from_millis(2);
+    let mut pending: Vec<Request> = Vec::new();
+    while served < n_req {
+        // Dynamic batching: take what is queued, wait briefly to fill.
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => pending.push(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) if pending.is_empty() => break,
+            Err(_) => {}
+        }
+        let deadline = Instant::now() + batch_timeout;
+        while pending.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        let take = pending.len().min(batch_max);
+        let batch: Vec<Request> = pending.drain(..take).collect();
+        let mut x = vec![0.0f32; batch_cap * img];
+        for (j, r) in batch.iter().enumerate() {
+            x[j * img..(j + 1) * img].copy_from_slice(&r.image);
+        }
+        let res = exe.run(&[theta_lit.reshape(&[onchip_theta.len() as i64])?, lit_f32(&x, &dims)?])?;
+        let preds = argmax_rows(&res[0], data.n_classes)?;
+        let done = Instant::now();
+        for (j, r) in batch.iter().enumerate() {
+            let raw = done.duration_since(r.arrived).as_secs_f64();
+            latency.record((raw * slowdown * 1e6) as u64);
+            if preds[j] == r.label as usize {
+                correct += 1;
+            }
+        }
+        served += batch.len();
+        batches += 1;
+    }
+    let _ = producer.join();
+    let elapsed = t_start.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        scheme: cfg.scheme.name(),
+        n_requests: served,
+        n_batches: batches,
+        latency_us: latency,
+        throughput_rps: served as f64 / elapsed.max(1e-9),
+        slowdown,
+        sample_accuracy: correct as f64 / served.max(1) as f64,
+        encrypted_lines: store.encrypted_lines(),
+        total_lines: store.n_lines(),
+    })
+}

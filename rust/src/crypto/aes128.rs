@@ -1,0 +1,252 @@
+//! AES-128 block cipher, implemented from scratch (FIPS-197).
+//!
+//! This is the functional model of the memory-controller encryption
+//! engine (paper Table 2). It is a straightforward table-free
+//! implementation — clarity over speed; the *hot* path in this repo is
+//! the cycle simulator, not byte encryption, and the serving path
+//! encrypts model bytes once at load. Verified against the RustCrypto
+//! `aes` crate (`tests/crypto_vs_rustcrypto.rs` + unit tests here).
+
+/// AES-128: 10 rounds, 16-byte blocks, 16-byte key.
+#[derive(Clone)]
+pub struct Aes128 {
+    round_keys: [[u8; 16]; 11],
+}
+
+const SBOX: [u8; 256] = build_sbox();
+const INV_SBOX: [u8; 256] = build_inv_sbox();
+
+/// Multiply in GF(2^8) with the AES polynomial x^8+x^4+x^3+x+1.
+const fn gmul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    let mut i = 0;
+    while i < 8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1b;
+        }
+        b >>= 1;
+        i += 1;
+    }
+    p
+}
+
+/// Build the S-box from the multiplicative inverse + affine transform
+/// (computed, not pasted, so the table is self-evidently correct).
+const fn build_sbox() -> [u8; 256] {
+    // Inverses via brute force (const eval).
+    let mut inv = [0u8; 256];
+    let mut a = 1usize;
+    while a < 256 {
+        let mut b = 1usize;
+        while b < 256 {
+            if gmul(a as u8, b as u8) == 1 {
+                inv[a] = b as u8;
+                break;
+            }
+            b += 1;
+        }
+        a += 1;
+    }
+    let mut sbox = [0u8; 256];
+    let mut i = 0;
+    while i < 256 {
+        let x = inv[i];
+        sbox[i] = x
+            ^ x.rotate_left(1)
+            ^ x.rotate_left(2)
+            ^ x.rotate_left(3)
+            ^ x.rotate_left(4)
+            ^ 0x63;
+        i += 1;
+    }
+    sbox
+}
+
+const fn build_inv_sbox() -> [u8; 256] {
+    let sbox = build_sbox();
+    let mut inv = [0u8; 256];
+    let mut i = 0;
+    while i < 256 {
+        inv[sbox[i] as usize] = i as u8;
+        i += 1;
+    }
+    inv
+}
+
+impl Aes128 {
+    pub fn new(key: &[u8; 16]) -> Aes128 {
+        let mut rk = [[0u8; 16]; 11];
+        rk[0] = *key;
+        let mut rcon: u8 = 1;
+        for r in 1..11 {
+            let prev = rk[r - 1];
+            // Rotate+sub the last word, xor rcon.
+            let mut t = [prev[13], prev[14], prev[15], prev[12]];
+            for b in &mut t {
+                *b = SBOX[*b as usize];
+            }
+            t[0] ^= rcon;
+            rcon = gmul(rcon, 2);
+            for i in 0..4 {
+                rk[r][i] = prev[i] ^ t[i];
+            }
+            for w in 1..4 {
+                for i in 0..4 {
+                    rk[r][4 * w + i] = prev[4 * w + i] ^ rk[r][4 * w + i - 4];
+                }
+            }
+        }
+        Aes128 { round_keys: rk }
+    }
+
+    pub fn encrypt_block(&self, block: &[u8; 16]) -> [u8; 16] {
+        let mut s = *block;
+        add_round_key(&mut s, &self.round_keys[0]);
+        for r in 1..10 {
+            sub_bytes(&mut s);
+            shift_rows(&mut s);
+            mix_columns(&mut s);
+            add_round_key(&mut s, &self.round_keys[r]);
+        }
+        sub_bytes(&mut s);
+        shift_rows(&mut s);
+        add_round_key(&mut s, &self.round_keys[10]);
+        s
+    }
+
+    pub fn decrypt_block(&self, block: &[u8; 16]) -> [u8; 16] {
+        let mut s = *block;
+        add_round_key(&mut s, &self.round_keys[10]);
+        inv_shift_rows(&mut s);
+        inv_sub_bytes(&mut s);
+        for r in (1..10).rev() {
+            add_round_key(&mut s, &self.round_keys[r]);
+            inv_mix_columns(&mut s);
+            inv_shift_rows(&mut s);
+            inv_sub_bytes(&mut s);
+        }
+        add_round_key(&mut s, &self.round_keys[0]);
+        s
+    }
+}
+
+// State is column-major as in FIPS-197: s[row + 4*col] = byte 4*col+row.
+
+fn add_round_key(s: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        s[i] ^= rk[i];
+    }
+}
+
+fn sub_bytes(s: &mut [u8; 16]) {
+    for b in s.iter_mut() {
+        *b = SBOX[*b as usize];
+    }
+}
+
+fn inv_sub_bytes(s: &mut [u8; 16]) {
+    for b in s.iter_mut() {
+        *b = INV_SBOX[*b as usize];
+    }
+}
+
+/// Row r of the state is bytes {r, r+4, r+8, r+12}; rotate row r left by r.
+fn shift_rows(s: &mut [u8; 16]) {
+    for r in 1..4 {
+        let row = [s[r], s[r + 4], s[r + 8], s[r + 12]];
+        for c in 0..4 {
+            s[r + 4 * c] = row[(c + r) % 4];
+        }
+    }
+}
+
+fn inv_shift_rows(s: &mut [u8; 16]) {
+    for r in 1..4 {
+        let row = [s[r], s[r + 4], s[r + 8], s[r + 12]];
+        for c in 0..4 {
+            s[r + 4 * c] = row[(c + 4 - r) % 4];
+        }
+    }
+}
+
+fn mix_columns(s: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [s[4 * c], s[4 * c + 1], s[4 * c + 2], s[4 * c + 3]];
+        s[4 * c] = gmul(col[0], 2) ^ gmul(col[1], 3) ^ col[2] ^ col[3];
+        s[4 * c + 1] = col[0] ^ gmul(col[1], 2) ^ gmul(col[2], 3) ^ col[3];
+        s[4 * c + 2] = col[0] ^ col[1] ^ gmul(col[2], 2) ^ gmul(col[3], 3);
+        s[4 * c + 3] = gmul(col[0], 3) ^ col[1] ^ col[2] ^ gmul(col[3], 2);
+    }
+}
+
+fn inv_mix_columns(s: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [s[4 * c], s[4 * c + 1], s[4 * c + 2], s[4 * c + 3]];
+        s[4 * c] = gmul(col[0], 14) ^ gmul(col[1], 11) ^ gmul(col[2], 13) ^ gmul(col[3], 9);
+        s[4 * c + 1] = gmul(col[0], 9) ^ gmul(col[1], 14) ^ gmul(col[2], 11) ^ gmul(col[3], 13);
+        s[4 * c + 2] = gmul(col[0], 13) ^ gmul(col[1], 9) ^ gmul(col[2], 14) ^ gmul(col[3], 11);
+        s[4 * c + 3] = gmul(col[0], 11) ^ gmul(col[1], 13) ^ gmul(col[2], 9) ^ gmul(col[3], 14);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use aes::cipher::{BlockDecrypt, BlockEncrypt, KeyInit};
+
+    /// FIPS-197 Appendix C.1 known-answer test.
+    #[test]
+    fn fips197_vector() {
+        let key: [u8; 16] = (0..16).collect::<Vec<u8>>().try_into().unwrap();
+        let pt: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
+            0xee, 0xff,
+        ];
+        let want: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        let aes = Aes128::new(&key);
+        assert_eq!(aes.encrypt_block(&pt), want);
+        assert_eq!(aes.decrypt_block(&want), pt);
+    }
+
+    /// Randomized cross-check against the RustCrypto implementation.
+    #[test]
+    fn matches_rustcrypto() {
+        let mut rng = crate::util::rng::Rng::seeded(0xae5);
+        for _ in 0..200 {
+            let mut key = [0u8; 16];
+            let mut pt = [0u8; 16];
+            for b in key.iter_mut().chain(pt.iter_mut()) {
+                *b = rng.below(256) as u8;
+            }
+            let ours = Aes128::new(&key);
+            let theirs = aes::Aes128::new(&key.into());
+            let mut block = aes::Block::from(pt);
+            theirs.encrypt_block(&mut block);
+            assert_eq!(ours.encrypt_block(&pt), <[u8; 16]>::from(block));
+            theirs.decrypt_block(&mut block);
+            assert_eq!(<[u8; 16]>::from(block), pt);
+            assert_eq!(ours.decrypt_block(&ours.encrypt_block(&pt)), pt);
+        }
+    }
+
+    #[test]
+    fn sbox_is_a_permutation() {
+        let mut seen = [false; 256];
+        for &v in SBOX.iter() {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+        // Spot values from FIPS-197.
+        assert_eq!(SBOX[0x00], 0x63);
+        assert_eq!(SBOX[0x53], 0xed);
+        assert_eq!(INV_SBOX[0x63], 0x00);
+    }
+}

@@ -1,0 +1,17 @@
+//! Functional encryption path (paper §2.3, §3.2).
+//!
+//! The simulator models AES *timing*; this module makes the schemes
+//! *functional*: the coordinator really encrypts model bytes before
+//! they leave the trusted chip boundary (the process) and decrypts on
+//! the way back, so the serving examples demonstrate true
+//! confidentiality, not just timing.
+//!
+//! [`aes128`] is a from-scratch AES-128 (verified bit-exactly against
+//! the RustCrypto `aes` crate in tests); [`ctr`] builds the paper's
+//! three line-cipher modes on top of it.
+
+pub mod aes128;
+pub mod ctr;
+
+pub use aes128::Aes128;
+pub use ctr::{CounterModeCipher, DirectCipher, LINE_BYTES};

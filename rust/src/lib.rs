@@ -1,0 +1,27 @@
+//! SEAL: SEALing Neural Network Models in Secure Deep Learning Accelerators.
+//!
+//! Full-system reproduction of Zuo et al. (2020). Three layers:
+//! - **L1/L2 (build time)**: JAX + Pallas under `python/`, AOT-lowered to
+//!   HLO text artifacts (`make artifacts`).
+//! - **L3 (this crate)**: the paper's system — a cycle-level secure-GPU
+//!   memory simulator ([`sim`]), the SE/ColoE encryption schemes
+//!   ([`sim::encryption`], [`model`]), a functional AES-128 path
+//!   ([`crypto`]), a PJRT runtime that executes the AOT artifacts
+//!   ([`runtime`]), an edge-serving coordinator ([`coordinator`]), and
+//!   the model-extraction security evaluation ([`security`]).
+//!
+//! See `DESIGN.md` for the experiment index (every paper table/figure →
+//! bench target) and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod crypto;
+pub mod model;
+pub mod runtime;
+pub mod security;
+pub mod sim;
+pub mod stats;
+pub mod traffic;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,160 @@
+//! `seal` — CLI for the SEAL secure-DL-accelerator reproduction.
+//!
+//! Subcommands:
+//!   simulate   one workload (matmul/conv/pool/fc) under one scheme
+//!   network    whole-network inference under all six schemes
+//!   security   victim training / substitute extraction / attacks
+//!   serve      encrypted-model serving demo (PJRT runtime)
+//!   info       print config + artifact inventory
+
+use std::path::Path;
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme};
+use seal::stats::Table;
+use seal::traffic::{self, gemm, layers};
+use seal::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("simulate") => simulate(&args),
+        Some("network") => network(&args),
+        Some("security") => seal::security::cli(&args),
+        Some("serve") => seal::coordinator::cli(&args),
+        Some("info") => info(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "seal — SEALing NN Models in Secure DL Accelerators (reproduction)
+
+USAGE: seal <subcommand> [flags]
+
+  simulate  --workload matmul|conv|pool|fc --scheme <s> [--ratio r]
+            [--size n] [--sample t]
+  network   --model vgg16|resnet18|resnet34 [--ratio r] [--sample t]
+  security  train-victim|extract|attack --model <m> [--ratio r] ...
+  serve     --model <m> [--requests n] [--batch b] [--scheme s]
+  info
+
+Schemes: baseline direct counter direct+se counter+se seal (coloe+se)"
+    );
+}
+
+fn parse_scheme(args: &Args) -> Scheme {
+    let s = args.get_or("scheme", "seal");
+    Scheme::parse(&s).unwrap_or_else(|| panic!("unknown scheme {s:?}"))
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = GpuConfig::default();
+    let scheme = parse_scheme(args);
+    let ratio = args.get_f64("ratio", 0.5);
+    let sample = args.get_u64("sample", layers::DEFAULT_SAMPLE_TILES as u64) as usize;
+    let workload = match args.get_or("workload", "matmul").as_str() {
+        "matmul" => {
+            let n = args.get_u64("size", 1024) as usize;
+            gemm::matmul_workload(n, n, n, &cfg, sample)
+        }
+        "conv" => {
+            let idx = args.get_u64("layer", 0) as usize;
+            let layer = zoo::fig10_conv_layers()[idx.min(3)];
+            layers::conv_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample, 1)
+        }
+        "pool" => {
+            let idx = args.get_u64("layer", 0) as usize;
+            let layer = zoo::fig11_pool_layers()[idx.min(4)];
+            layers::pool_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample * 64, 1)
+        }
+        "fc" => {
+            let layer = zoo::Layer::Fc { din: 4096, dout: 4096 };
+            layers::fc_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample * 16, 1)
+        }
+        w => anyhow::bail!("unknown workload {w:?}"),
+    };
+    let t0 = std::time::Instant::now();
+    let stats = traffic::simulate(&workload, cfg.with_scheme(scheme));
+    let dt = t0.elapsed();
+    println!("workload       : {}", workload.name);
+    println!("scheme         : {}", scheme.name());
+    println!("sampled        : {:.4}", workload.sampled_fraction);
+    println!("cycles         : {}", stats.cycles);
+    println!("instrs         : {}", stats.instrs);
+    println!("IPC            : {:.3}", stats.ipc());
+    println!(
+        "L1 hit rate    : {:.3}",
+        stats.l1_hits as f64 / (stats.l1_hits + stats.l1_misses).max(1) as f64
+    );
+    println!(
+        "L2 hit rate    : {:.3}",
+        stats.l2_hits as f64 / (stats.l2_hits + stats.l2_misses).max(1) as f64
+    );
+    println!("ctr cache hit  : {:.3}", stats.ctr_hit_rate());
+    println!("mem accesses   : {:?}", stats.mc);
+    println!("aes lines      : {}", stats.aes_lines);
+    println!(
+        "sim wall time  : {:.2?} ({:.2} Mcycles/s)",
+        dt,
+        stats.cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn network(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("model", "vgg16");
+    let net = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+    let ratio = args.get_f64("ratio", 0.5);
+    let sample = args.get_u64("sample", 720) as usize;
+    let cfg = GpuConfig::default();
+    let rows = traffic::network::run_all_schemes(&net, ratio, &cfg, sample);
+    let base_ipc = rows[0].1.ipc.max(1e-12);
+    let base_lat = rows[0].1.latency_cycles.max(1e-12);
+    let mut t = Table::new(
+        &format!("{name}: normalized IPC / latency (SE ratio {ratio})"),
+        &["IPC", "norm IPC", "norm latency", "enc accesses", "ctr accesses"],
+    );
+    for (scheme, run) in &rows {
+        t.row(
+            scheme,
+            vec![
+                run.ipc,
+                run.ipc / base_ipc,
+                run.latency_cycles / base_lat,
+                run.enc_accesses,
+                run.ctr_accesses,
+            ],
+        );
+    }
+    t.emit(&format!("network_{name}.csv"));
+    Ok(())
+}
+
+fn info(_args: &Args) -> anyhow::Result<()> {
+    println!("GpuConfig (paper Table 3): {:#?}", GpuConfig::default());
+    let dir = Path::new("artifacts");
+    match seal::model::Manifest::load(dir) {
+        Ok(man) => {
+            println!(
+                "artifacts: {} models, dataset {}x{}x{}",
+                man.models.len(),
+                man.dataset.hw,
+                man.dataset.hw,
+                man.dataset.channels
+            );
+            for m in &man.models {
+                println!("  {} theta_len={} params={}", m.name, m.theta_len, m.params.len());
+            }
+        }
+        Err(e) => println!("artifacts not built: {e:#}"),
+    }
+    Ok(())
+}

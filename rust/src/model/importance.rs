@@ -1,0 +1,190 @@
+//! The SE scheme's measurement + selection step (paper §3.1.2).
+//!
+//! For every SE-eligible layer, rank kernel rows by l1-norm; the top
+//! `ratio` fraction (largest sums — the *important* rows) is encrypted,
+//! the rest is left plaintext. Non-eligible tensors (first two convs,
+//! last conv, final FC, biases) are always encrypted (paper §3.4.1).
+//!
+//! This mirrors the L1 Pallas `importance` kernel; pytest checks the
+//! kernel against ref.py, and `tests/manifest_roundtrip.rs` checks this
+//! Rust implementation against theta sidecars.
+
+use super::manifest::{ModelInfo, ParamInfo};
+
+/// Per-tensor SE decision.
+#[derive(Debug, Clone)]
+pub struct RowSelection {
+    pub param: ParamInfo,
+    /// encrypted[r] = true → kernel row r is encrypted. Empty for
+    /// tensors that are encrypted wholesale.
+    pub encrypted_rows: Vec<bool>,
+    /// Whole-tensor encryption (non-SE-eligible tensors).
+    pub whole: bool,
+}
+
+impl RowSelection {
+    pub fn n_encrypted_rows(&self) -> usize {
+        self.encrypted_rows.iter().filter(|&&e| e).count()
+    }
+}
+
+/// l1-norm of each kernel row of `p` within `theta`.
+pub fn row_l1(theta: &[f32], p: &ParamInfo) -> Vec<f64> {
+    (0..p.n_rows())
+        .map(|r| {
+            p.row_indices(r)
+                .iter()
+                .map(|&i| theta[p.offset + i].abs() as f64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Run the SE selection over a whole model at `ratio` (fraction of rows
+/// encrypted per layer, choosing the largest-l1 rows).
+pub fn se_row_selection(model: &ModelInfo, theta: &[f32], ratio: f64) -> Vec<RowSelection> {
+    assert!((0.0..=1.0).contains(&ratio), "ratio {ratio}");
+    assert_eq!(theta.len(), model.theta_len);
+    model
+        .params
+        .iter()
+        .map(|p| {
+            if !p.se_eligible || p.row_axis.is_none() {
+                return RowSelection { param: p.clone(), encrypted_rows: Vec::new(), whole: true };
+            }
+            let sums = row_l1(theta, p);
+            let n = sums.len();
+            let n_enc = (n as f64 * ratio).round() as usize;
+            // Sort row ids by descending l1; ties broken by index for
+            // determinism.
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| sums[b].partial_cmp(&sums[a]).unwrap().then(a.cmp(&b)));
+            let mut enc = vec![false; n];
+            for &r in order.iter().take(n_enc) {
+                enc[r] = true;
+            }
+            RowSelection { param: p.clone(), encrypted_rows: enc, whole: false }
+        })
+        .collect()
+}
+
+/// Build the fine-tuning freeze mask for the SE substitute attack
+/// (paper §3.4.1): mask = 1 for *encrypted* (unknown → trainable)
+/// elements, 0 for plaintext (known → frozen) elements.
+pub fn build_mask(model: &ModelInfo, selection: &[RowSelection]) -> Vec<f32> {
+    let mut mask = vec![0.0f32; model.theta_len];
+    for sel in selection {
+        let p = &sel.param;
+        if sel.whole {
+            mask[p.offset..p.offset + p.size].fill(1.0);
+            continue;
+        }
+        for (r, &enc) in sel.encrypted_rows.iter().enumerate() {
+            if enc {
+                for i in p.row_indices(r) {
+                    mask[p.offset + i] = 1.0;
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Fraction of theta elements that are encrypted under `selection`.
+pub fn encrypted_fraction(model: &ModelInfo, selection: &[RowSelection]) -> f64 {
+    let mask = build_mask(model, selection);
+    mask.iter().map(|&m| m as f64).sum::<f64>() / model.theta_len as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ParamInfo;
+    use crate::util::rng::Rng;
+
+    fn model_with_one_conv() -> ModelInfo {
+        let p = ParamInfo {
+            name: "conv0.w".into(),
+            shape: vec![3, 3, 8, 4],
+            offset: 0,
+            size: 288,
+            row_axis: Some(2),
+            layer_id: 0,
+            kind: "conv".into(),
+            se_eligible: true,
+        };
+        ModelInfo {
+            name: "m".into(),
+            input_hw: 8,
+            input_channels: 8,
+            n_classes: 10,
+            theta_len: 288,
+            params: vec![p],
+        }
+    }
+
+    #[test]
+    fn selection_picks_largest_rows() {
+        let m = model_with_one_conv();
+        let mut theta = vec![0.01f32; 288];
+        // Make rows 2 and 5 heavy.
+        for r in [2usize, 5] {
+            for i in m.params[0].row_indices(r) {
+                theta[i] = 1.0;
+            }
+        }
+        let sel = se_row_selection(&m, &theta, 0.25); // 2 of 8 rows
+        assert_eq!(sel[0].n_encrypted_rows(), 2);
+        assert!(sel[0].encrypted_rows[2] && sel[0].encrypted_rows[5]);
+    }
+
+    #[test]
+    fn ratio_extremes() {
+        let m = model_with_one_conv();
+        let theta: Vec<f32> = (0..288).map(|i| i as f32).collect();
+        let sel0 = se_row_selection(&m, &theta, 0.0);
+        assert_eq!(sel0[0].n_encrypted_rows(), 0);
+        let sel1 = se_row_selection(&m, &theta, 1.0);
+        assert_eq!(sel1[0].n_encrypted_rows(), 8);
+    }
+
+    #[test]
+    fn mask_matches_selection() {
+        let m = model_with_one_conv();
+        let mut rng = Rng::seeded(5);
+        let theta: Vec<f32> = (0..288).map(|_| rng.normal() as f32).collect();
+        let sel = se_row_selection(&m, &theta, 0.5);
+        let mask = build_mask(&m, &sel);
+        let enc_elems: usize = mask.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(enc_elems, 4 * 36); // 4 rows x 36 elements
+        // Encrypted fraction consistent.
+        let f = encrypted_fraction(&m, &sel);
+        assert!((f - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_eligible_tensors_fully_encrypted() {
+        let mut m = model_with_one_conv();
+        m.params[0].se_eligible = false;
+        let theta = vec![1.0f32; 288];
+        let sel = se_row_selection(&m, &theta, 0.1);
+        assert!(sel[0].whole);
+        let mask = build_mask(&m, &sel);
+        assert!(mask.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn monotone_in_ratio() {
+        // Property: rows encrypted at ratio r stay encrypted at r' > r.
+        let m = model_with_one_conv();
+        let mut rng = Rng::seeded(8);
+        let theta: Vec<f32> = (0..288).map(|_| rng.normal() as f32).collect();
+        let lo = se_row_selection(&m, &theta, 0.25);
+        let hi = se_row_selection(&m, &theta, 0.75);
+        for r in 0..8 {
+            if lo[0].encrypted_rows[r] {
+                assert!(hi[0].encrypted_rows[r]);
+            }
+        }
+    }
+}

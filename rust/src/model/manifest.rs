@@ -1,0 +1,284 @@
+//! `artifacts/manifest.json` decoding: the contract between the Python
+//! AOT path and the Rust runtime (flat-theta parameter layouts, batch
+//! sizes, dataset geometry).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// One tensor inside the flat theta vector (mirrors python `ParamSpec`).
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// Axis whose slices are SE kernel rows (2 for conv HWIO, 0 for FC);
+    /// None for biases.
+    pub row_axis: Option<usize>,
+    pub layer_id: usize,
+    pub kind: String,
+    pub se_eligible: bool,
+}
+
+impl ParamInfo {
+    /// Number of SE kernel rows and the flat-index stride pattern of one
+    /// row: element (r, j) of the row lives at
+    /// `offset + row_elem_index(r, j)`.
+    pub fn n_rows(&self) -> usize {
+        self.row_axis.map(|a| self.shape[a]).unwrap_or(0)
+    }
+
+    /// Iterate the flat (theta-relative) indices of row `r`.
+    pub fn row_indices(&self, r: usize) -> Vec<usize> {
+        let Some(axis) = self.row_axis else { return Vec::new() };
+        // C-order flat index = (outer_idx * shape[axis] + r) * inner + j.
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut idx = Vec::with_capacity(outer * inner);
+        for o in 0..outer {
+            let base = (o * self.shape[axis] + r) * inner;
+            idx.extend(base..base + inner);
+        }
+        idx
+    }
+}
+
+/// One model's layout + artifact names.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    pub n_classes: usize,
+    pub theta_len: usize,
+    pub params: Vec<ParamInfo>,
+}
+
+impl ModelInfo {
+    pub fn artifact(&self, kind: &str) -> String {
+        format!("{kind}_{}.hlo.txt", self.name)
+    }
+}
+
+/// Dataset geometry (see python `compile/data.py`).
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub file: String,
+    pub hw: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub n_victim: usize,
+    pub n_adv: usize,
+    pub n_test: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelInfo>,
+    pub dataset: DatasetInfo,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_grad: usize,
+    pub batch_pallas: usize,
+    pub ifgsm_alpha: f64,
+    pub ifgsm_eps: f64,
+    pub seed: u64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let batches = j.req("batches");
+        let ds = j.req("dataset");
+        let mut models = Vec::new();
+        for m in j.req("models").as_arr().context("models")? {
+            models.push(parse_model(m)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            dataset: DatasetInfo {
+                file: ds.req("file").as_str().unwrap().to_string(),
+                hw: ds.req("hw").as_usize().unwrap(),
+                channels: ds.req("channels").as_usize().unwrap(),
+                n_classes: ds.req("n_classes").as_usize().unwrap(),
+                n_victim: ds.req("n_victim").as_usize().unwrap(),
+                n_adv: ds.req("n_adv").as_usize().unwrap(),
+                n_test: ds.req("n_test").as_usize().unwrap(),
+            },
+            batch_train: batches.req("train").as_usize().unwrap(),
+            batch_eval: batches.req("eval").as_usize().unwrap(),
+            batch_grad: batches.req("grad").as_usize().unwrap(),
+            batch_pallas: batches.req("pallas").as_usize().unwrap(),
+            ifgsm_alpha: j.req("ifgsm").req("alpha").as_f64().unwrap(),
+            ifgsm_eps: j.req("ifgsm").req("eps").as_f64().unwrap(),
+            seed: j.req("seed").as_u64().unwrap(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelInfo> {
+        match self.models.iter().find(|m| m.name == name) {
+            Some(m) => Ok(m),
+            None => bail!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.iter().map(|m| &m.name).collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    /// Load a little-endian f32 sidecar (theta files).
+    pub fn load_f32(&self, file: &str) -> crate::Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn theta_init(&self, model: &str) -> crate::Result<Vec<f32>> {
+        self.load_f32(&format!("theta_init_{model}.bin"))
+    }
+
+    pub fn hlo_path(&self, artifact: &str) -> PathBuf {
+        self.dir.join(artifact)
+    }
+}
+
+fn parse_model(m: &Json) -> crate::Result<ModelInfo> {
+    let mut params = Vec::new();
+    for p in m.req("params").as_arr().context("params")? {
+        params.push(ParamInfo {
+            name: p.req("name").as_str().unwrap().to_string(),
+            shape: p
+                .req("shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect(),
+            offset: p.req("offset").as_usize().unwrap(),
+            size: p.req("size").as_usize().unwrap(),
+            row_axis: p.req("row_axis").as_usize(),
+            layer_id: p.req("layer_id").as_usize().unwrap(),
+            kind: p.req("kind").as_str().unwrap().to_string(),
+            se_eligible: p.req("se_eligible").as_bool().unwrap(),
+        });
+    }
+    Ok(ModelInfo {
+        name: m.req("name").as_str().unwrap().to_string(),
+        input_hw: m.req("input_hw").as_usize().unwrap(),
+        input_channels: m.req("input_channels").as_usize().unwrap(),
+        n_classes: m.req("n_classes").as_usize().unwrap(),
+        theta_len: m.req("theta_len").as_usize().unwrap(),
+        params,
+    })
+}
+
+/// The dataset blob decoded to f32 images + labels.
+pub struct Dataset {
+    pub hw: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub x_victim: Vec<f32>,
+    pub y_victim: Vec<i32>,
+    pub x_adv: Vec<f32>,
+    pub y_adv: Vec<i32>,
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn load(man: &Manifest) -> crate::Result<Dataset> {
+        let d = &man.dataset;
+        let path = man.dir.join(&d.file);
+        let raw = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let img = d.hw * d.hw * d.channels;
+        let n = d.n_victim + d.n_adv + d.n_test;
+        if raw.len() != n * img + n {
+            bail!("dataset.bin: expected {} bytes, got {}", n * img + n, raw.len());
+        }
+        let to_f32 = |s: &[u8]| -> Vec<f32> { s.iter().map(|&b| b as f32 / 255.0).collect() };
+        let to_i32 = |s: &[u8]| -> Vec<i32> { s.iter().map(|&b| b as i32).collect() };
+        let (imgs, labels) = raw.split_at(n * img);
+        let (xv, rest) = imgs.split_at(d.n_victim * img);
+        let (xa, xt) = rest.split_at(d.n_adv * img);
+        let (yv, rest) = labels.split_at(d.n_victim);
+        let (ya, yt) = rest.split_at(d.n_adv);
+        Ok(Dataset {
+            hw: d.hw,
+            channels: d.channels,
+            n_classes: d.n_classes,
+            x_victim: to_f32(xv),
+            y_victim: to_i32(yv),
+            x_adv: to_f32(xa),
+            y_adv: to_i32(ya),
+            x_test: to_f32(xt),
+            y_test: to_i32(yt),
+        })
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_param() -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: vec![3, 3, 4, 8],
+            offset: 100,
+            size: 3 * 3 * 4 * 8,
+            row_axis: Some(2),
+            layer_id: 0,
+            kind: "conv".into(),
+            se_eligible: true,
+        }
+    }
+
+    #[test]
+    fn row_indices_cover_row_exactly() {
+        let p = demo_param();
+        let idx = p.row_indices(1);
+        // Row = w[:, :, 1, :]: 3*3*8 = 72 elements.
+        assert_eq!(idx.len(), 72);
+        // For C-order [3,3,4,8]: index = ((h*3+w)*4+c)*8+o.
+        for &i in &idx {
+            let c = (i / 8) % 4;
+            assert_eq!(c, 1, "flat {i}");
+        }
+        // All rows partition the tensor.
+        let mut all: Vec<usize> = (0..4).flat_map(|r| p.row_indices(r)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..p.size).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fc_row_indices_are_contiguous() {
+        let p = ParamInfo {
+            name: "fc".into(),
+            shape: vec![16, 10],
+            offset: 0,
+            size: 160,
+            row_axis: Some(0),
+            layer_id: 1,
+            kind: "fc".into(),
+            se_eligible: true,
+        };
+        assert_eq!(p.row_indices(3), (30..40).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,13 @@
+//! NN-model substrate: manifests, parameter layouts, the SE scheme's
+//! importance measurement/row selection, full-size layer tables for the
+//! performance figures, and the emalloc()/malloc() address-space map.
+
+pub mod address_map;
+pub mod importance;
+pub mod manifest;
+pub mod zoo;
+
+pub use address_map::{AddressMap, Allocator, Region};
+pub use importance::{build_mask, se_row_selection, RowSelection};
+pub use manifest::{Manifest, ModelInfo, ParamInfo};
+pub use zoo::{Layer, Network};

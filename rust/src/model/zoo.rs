@@ -1,0 +1,205 @@
+//! Full-size layer tables for the *performance* figures: VGG-16,
+//! ResNet-18, ResNet-34 at 224×224×3 (paper §4.1 benchmarks).
+//!
+//! These drive `traffic::` trace generation. The *security* figures use
+//! the channel-scaled trainable minis exported from Python (see
+//! DESIGN.md §1); the memory-system behaviour is dictated by these
+//! full-size shapes.
+
+/// One inference layer, with its input spatial geometry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Layer {
+    Conv { cin: usize, cout: usize, k: usize, stride: usize, h: usize, w: usize },
+    Pool { c: usize, k: usize, stride: usize, h: usize, w: usize },
+    Fc { din: usize, dout: usize },
+}
+
+impl Layer {
+    pub fn out_hw(&self) -> (usize, usize) {
+        match *self {
+            Layer::Conv { h, w, stride, .. } => (h.div_ceil(stride), w.div_ceil(stride)),
+            Layer::Pool { h, w, stride, .. } => (h / stride, w / stride),
+            Layer::Fc { .. } => (1, 1),
+        }
+    }
+
+    /// Multiply-accumulate count (per image).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Layer::Conv { cin, cout, k, .. } => {
+                let (ho, wo) = self.out_hw();
+                (ho * wo * cout * cin * k * k) as u64
+            }
+            Layer::Pool { c, k, .. } => {
+                let (ho, wo) = self.out_hw();
+                (ho * wo * c * k * k) as u64
+            }
+            Layer::Fc { din, dout } => (din * dout) as u64,
+        }
+    }
+
+    /// Bytes of input FM + weights + output FM (f32).
+    pub fn footprint_bytes(&self) -> (u64, u64, u64) {
+        match *self {
+            Layer::Conv { cin, cout, k, h, w, .. } => {
+                let (ho, wo) = self.out_hw();
+                (
+                    (h * w * cin * 4) as u64,
+                    (k * k * cin * cout * 4) as u64,
+                    (ho * wo * cout * 4) as u64,
+                )
+            }
+            Layer::Pool { c, h, w, .. } => {
+                let (ho, wo) = self.out_hw();
+                ((h * w * c * 4) as u64, 0, (ho * wo * c * 4) as u64)
+            }
+            Layer::Fc { din, dout } => ((din * 4) as u64, (din * dout * 4) as u64, (dout * 4) as u64),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Layer::Conv { cin, cout, k, h, .. } => format!("conv{k}x{k}_{cin}-{cout}@{h}"),
+            Layer::Pool { c, h, .. } => format!("pool_{c}@{h}"),
+            Layer::Fc { din, dout } => format!("fc_{din}-{dout}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// VGG-16 @224 (13 convs + 5 pools + 3 FCs — paper Fig 4).
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let mut h = 224;
+    let mut c = 3;
+    for (cout, n) in [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)] {
+        for _ in 0..n {
+            layers.push(Layer::Conv { cin: c, cout, k: 3, stride: 1, h, w: h });
+            c = cout;
+        }
+        layers.push(Layer::Pool { c, k: 2, stride: 2, h, w: h });
+        h /= 2;
+    }
+    layers.push(Layer::Fc { din: c * h * h, dout: 4096 });
+    layers.push(Layer::Fc { din: 4096, dout: 4096 });
+    layers.push(Layer::Fc { din: 4096, dout: 1000 });
+    Network { name: "vgg16".into(), layers }
+}
+
+fn resnet(name: &str, blocks: [usize; 4]) -> Network {
+    let mut layers = vec![
+        Layer::Conv { cin: 3, cout: 64, k: 7, stride: 2, h: 224, w: 224 },
+        Layer::Pool { c: 64, k: 3, stride: 2, h: 112, w: 112 },
+    ];
+    let mut h = 56;
+    let mut c = 64;
+    for (stage, &n) in blocks.iter().enumerate() {
+        let cout = 64 << stage;
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            layers.push(Layer::Conv { cin: c, cout, k: 3, stride, h, w: h });
+            let h2 = h / stride;
+            layers.push(Layer::Conv { cin: cout, cout, k: 3, stride: 1, h: h2, w: h2 });
+            if stride != 1 || c != cout {
+                layers.push(Layer::Conv { cin: c, cout, k: 1, stride, h, w: h });
+            }
+            c = cout;
+            h = h2;
+        }
+    }
+    layers.push(Layer::Pool { c, k: h, stride: h, h, w: h }); // global avg pool
+    layers.push(Layer::Fc { din: c, dout: 1000 });
+    Network { name: name.into(), layers }
+}
+
+pub fn resnet18() -> Network {
+    resnet("resnet18", [2, 2, 2, 2])
+}
+
+pub fn resnet34() -> Network {
+    resnet("resnet34", [3, 4, 6, 3])
+}
+
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "vgg16" => Some(vgg16()),
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        _ => None,
+    }
+}
+
+/// The four representative VGG CONV layers of Fig 10 (64/128/256/512
+/// channels) and the five POOL layers of Fig 11.
+pub fn fig10_conv_layers() -> Vec<Layer> {
+    vec![
+        Layer::Conv { cin: 64, cout: 64, k: 3, stride: 1, h: 224, w: 224 },
+        Layer::Conv { cin: 128, cout: 128, k: 3, stride: 1, h: 112, w: 112 },
+        Layer::Conv { cin: 256, cout: 256, k: 3, stride: 1, h: 56, w: 56 },
+        Layer::Conv { cin: 512, cout: 512, k: 3, stride: 1, h: 28, w: 28 },
+    ]
+}
+
+pub fn fig11_pool_layers() -> Vec<Layer> {
+    vec![
+        Layer::Pool { c: 64, k: 2, stride: 2, h: 224, w: 224 },
+        Layer::Pool { c: 128, k: 2, stride: 2, h: 112, w: 112 },
+        Layer::Pool { c: 256, k: 2, stride: 2, h: 56, w: 56 },
+        Layer::Pool { c: 512, k: 2, stride: 2, h: 28, w: 28 },
+        Layer::Pool { c: 512, k: 2, stride: 2, h: 14, w: 14 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_structure() {
+        let net = vgg16();
+        let convs = net.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        let pools = net.layers.iter().filter(|l| matches!(l, Layer::Pool { .. })).count();
+        let fcs = net.layers.iter().filter(|l| matches!(l, Layer::Fc { .. })).count();
+        assert_eq!((convs, pools, fcs), (13, 5, 3));
+        // Total MACs ~ 15.5 GMACs for VGG-16 @224.
+        let gmacs = net.layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        assert!((15.0..16.1).contains(&gmacs), "gmacs {gmacs}");
+    }
+
+    #[test]
+    fn resnet_conv_counts() {
+        // 17 weight-conv layers in ResNet-18 (16 + stem) + 3 projections.
+        let r18 = resnet18();
+        let convs = r18.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        assert_eq!(convs, 1 + 16 + 3);
+        let r34 = resnet34();
+        let convs34 = r34.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        assert_eq!(convs34, 1 + 32 + 3);
+        // ResNet-18 ~1.8 GMACs.
+        let gmacs = r18.layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        assert!((1.6..2.1).contains(&gmacs), "gmacs {gmacs}");
+    }
+
+    #[test]
+    fn fig4_feature_map_sizes() {
+        // Paper Fig 4: first VGG conv output is 224x224x64 = 11x input.
+        let l = &vgg16().layers[0];
+        let (a, _, c) = l.footprint_bytes();
+        assert_eq!(a, 224 * 224 * 3 * 4);
+        assert_eq!(c, 224 * 224 * 64 * 4);
+        assert!((c as f64 / a as f64 - 64.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_hw_strides() {
+        let l = Layer::Conv { cin: 64, cout: 128, k: 3, stride: 2, h: 56, w: 56 };
+        assert_eq!(l.out_hw(), (28, 28));
+        let p = Layer::Pool { c: 64, k: 2, stride: 2, h: 224, w: 224 };
+        assert_eq!(p.out_hw(), (112, 112));
+    }
+}

@@ -1,0 +1,142 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the
+//! CPU PJRT client — Python is never on this path (DESIGN.md §2).
+//!
+//! Interchange is HLO *text* because xla_extension 0.5.1 (bound by the
+//! `xla` 0.1.6 crate) rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids); the text parser reassigns ids. See
+//! /opt/xla-example/README.md and python/compile/aot.py.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::model::Manifest;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with return_tuple=True, so the root is a tuple).
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple().with_context(|| format!("untupling {}", self.name))?)
+    }
+}
+
+/// The runtime: one PJRT CPU client + an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> crate::Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, path: &Path) -> crate::Result<std::sync::Arc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| key.clone());
+        let arc = std::sync::Arc::new(Executable { exe, name });
+        self.cache.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Load a model artifact by kind ("predict", "train_step",
+    /// "input_grad") from the manifest directory.
+    pub fn load_model_fn(
+        &mut self,
+        man: &Manifest,
+        model: &str,
+        kind: &str,
+    ) -> crate::Result<std::sync::Arc<Executable>> {
+        self.load(&man.hlo_path(&format!("{kind}_{model}.hlo.txt")))
+    }
+}
+
+// -- Literal helpers ---------------------------------------------------------
+
+/// f32 slice -> Literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_f32: {} vs {:?}", data.len(), dims);
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 slice -> Literal of the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_i32: {} vs {:?}", data.len(), dims);
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Literal -> Vec<f32>.
+pub fn to_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Row-wise argmax of a [b, n] logits literal.
+pub fn argmax_rows(lit: &xla::Literal, n_classes: usize) -> crate::Result<Vec<usize>> {
+    let v = to_f32(lit)?;
+    anyhow::ensure!(v.len() % n_classes == 0, "argmax: {} % {n_classes}", v.len());
+    Ok(v.chunks_exact(n_classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basics() {
+        let lit = xla::Literal::vec1(&[0.1f32, 0.9, 0.5, 2.0, -1.0, 0.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        assert_eq!(argmax_rows(&lit, 3).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let lit = lit_f32(&data, &[2, 2]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        assert!(lit_f32(&data, &[3, 2]).is_err());
+    }
+}

@@ -1,0 +1,423 @@
+//! The training/extraction/attack machinery behind `security::cli` and
+//! the Fig 8 / Fig 9 benches.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::model::importance::{build_mask, se_row_selection};
+use crate::model::manifest::{Dataset, Manifest};
+use crate::runtime::{argmax_rows, lit_f32, lit_i32, to_f32, Runtime};
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters (kept deliberately simple: plain SGD, the
+/// L2 `train_step` artifact owns the loss).
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub victim_steps: usize,
+    pub substitute_steps: usize,
+    pub lr: f32,
+    /// Jacobian-augmentation doubling rounds for the adversary set.
+    pub aug_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { victim_steps: 800, substitute_steps: 400, lr: 0.0, aug_rounds: 2, seed: 2020 }
+    }
+}
+
+impl TrainCfg {
+    /// Learning rate: explicit (`--lr`) or the per-model default found
+    /// by the calibration sweep (VGG's plain-SGD stability limit is
+    /// lower than the ResNets').
+    pub fn lr_for(&self, model: &str) -> f32 {
+        if self.lr > 0.0 {
+            self.lr
+        } else if model.starts_with("vgg") {
+            0.1
+        } else {
+            0.3
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum SubstituteKind {
+    /// No memory encryption: the adversary snoops the whole model.
+    WhiteBox,
+    /// Full encryption: architecture known, no weights.
+    BlackBox,
+    /// SE at `ratio`: the plaintext (small-l1) rows are known.
+    Se { ratio: f64 },
+}
+
+pub struct SecurityCtx {
+    pub rt: Runtime,
+    pub man: Manifest,
+    pub data: Dataset,
+    rng: Rng,
+}
+
+impl SecurityCtx {
+    pub fn new(artifacts: &Path) -> crate::Result<SecurityCtx> {
+        let man = Manifest::load(artifacts)?;
+        let data = Dataset::load(&man)?;
+        Ok(SecurityCtx { rt: Runtime::cpu()?, man, data, rng: Rng::seeded(2020) })
+    }
+
+    fn img_dims(&self, b: usize) -> [i64; 4] {
+        [b as i64, self.data.hw as i64, self.data.hw as i64, self.data.channels as i64]
+    }
+
+    /// He-initialize a fresh theta in Rust (the adversary's blank model).
+    pub fn he_init(&mut self, model: &str, seed: u64) -> crate::Result<Vec<f32>> {
+        let info = self.man.model(model)?.clone();
+        let mut rng = Rng::seeded(seed);
+        let mut theta = vec![0.0f32; info.theta_len];
+        for p in &info.params {
+            if p.kind == "bias" {
+                continue;
+            }
+            let fan_in: usize = if p.kind == "conv" {
+                p.shape[..p.shape.len() - 1].iter().product()
+            } else {
+                p.shape[0]
+            };
+            let std = (2.0 / fan_in as f64).sqrt();
+            for i in 0..p.size {
+                theta[p.offset + i] = (rng.normal() * std) as f32;
+            }
+        }
+        Ok(theta)
+    }
+
+    /// SGD over (xs, ys) with a freeze mask; returns final theta + loss.
+    pub fn train(
+        &mut self,
+        model: &str,
+        mut theta: Vec<f32>,
+        mask: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        steps: usize,
+        lr: f32,
+    ) -> crate::Result<(Vec<f32>, f32)> {
+        let b = self.man.batch_train;
+        let img = self.data.image_len();
+        let n = ys.len();
+        anyhow::ensure!(xs.len() == n * img, "train: {} vs {}", xs.len(), n * img);
+        anyhow::ensure!(n >= b, "train: need at least one batch ({n} < {b})");
+        let exe = self.rt.load_model_fn(&self.man, model, "train_step")?;
+        let mask_lit = lit_f32(mask, &[mask.len() as i64])?;
+        let lr_lit = lit_f32(&[lr], &[1])?;
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut loss = f32::NAN;
+        let mut cursor = n; // force initial shuffle
+        let mut bx = vec![0.0f32; b * img];
+        let mut by = vec![0i32; b];
+        for _ in 0..steps {
+            if cursor + b > n {
+                self.rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            for (j, &s) in order[cursor..cursor + b].iter().enumerate() {
+                bx[j * img..(j + 1) * img].copy_from_slice(&xs[s * img..(s + 1) * img]);
+                by[j] = ys[s];
+            }
+            cursor += b;
+            let theta_lit = lit_f32(&theta, &[theta.len() as i64])?;
+            let x_lit = lit_f32(&bx, &self.img_dims(b))?;
+            let y_lit = lit_i32(&by, &[b as i64])?;
+            let out = exe.run(&[theta_lit, x_lit, y_lit, mask_lit.reshape(&[mask.len() as i64])?, lr_lit.reshape(&[1])?])?;
+            theta = to_f32(&out[0])?;
+            loss = to_f32(&out[1])?[0];
+        }
+        Ok((theta, loss))
+    }
+
+    /// Predict labels for xs (padding the last batch).
+    pub fn predict(&mut self, model: &str, theta: &[f32], xs: &[f32]) -> crate::Result<Vec<usize>> {
+        let b = self.man.batch_eval;
+        let img = self.data.image_len();
+        let n = xs.len() / img;
+        let exe = self.rt.load_model_fn(&self.man, model, "predict")?;
+        let theta_lit = lit_f32(theta, &[theta.len() as i64])?;
+        let mut out = Vec::with_capacity(n);
+        let mut batch = vec![0.0f32; b * img];
+        let mut i = 0;
+        while i < n {
+            let take = b.min(n - i);
+            batch[..take * img].copy_from_slice(&xs[i * img..(i + take) * img]);
+            batch[take * img..].fill(0.0);
+            let x_lit = lit_f32(&batch, &self.img_dims(b))?;
+            let res = exe.run(&[theta_lit.reshape(&[theta.len() as i64])?, x_lit])?;
+            let labels = argmax_rows(&res[0], self.data.n_classes)?;
+            out.extend_from_slice(&labels[..take]);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    pub fn accuracy(&mut self, model: &str, theta: &[f32], xs: &[f32], ys: &[i32]) -> crate::Result<f64> {
+        let pred = self.predict(model, theta, xs)?;
+        let hits = pred.iter().zip(ys).filter(|(p, y)| **p == **y as usize).count();
+        Ok(hits as f64 / ys.len() as f64)
+    }
+
+    pub fn test_accuracy(&mut self, model: &str, theta: &[f32]) -> crate::Result<f64> {
+        let xs = self.data.x_test.clone();
+        let ys = self.data.y_test.clone();
+        self.accuracy(model, theta, &xs, &ys)
+    }
+
+    /// Train (or load the cached) victim model.
+    pub fn train_victim(&mut self, model: &str, cfg: &TrainCfg) -> crate::Result<Vec<f32>> {
+        let path = self.man.dir.join(format!("victim_{model}.bin"));
+        let info = self.man.model(model)?;
+        if let Ok(theta) = self.man.load_f32(&format!("victim_{model}.bin")) {
+            if theta.len() == info.theta_len {
+                return Ok(theta);
+            }
+        }
+        let theta0 = self.man.theta_init(model)?;
+        let mask = vec![1.0f32; theta0.len()];
+        let xs = self.data.x_victim.clone();
+        let ys = self.data.y_victim.clone();
+        let (theta, loss) = self.train(model, theta0, &mask, &xs, &ys, cfg.victim_steps, cfg.lr_for(model))?;
+        eprintln!("[security] victim {model} trained ({} steps, loss {loss:.4})", cfg.victim_steps);
+        let bytes: Vec<u8> = theta.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).with_context(|| format!("writing {path:?}"))?;
+        Ok(theta)
+    }
+
+    /// The adversary's training set: its own split labeled by querying
+    /// the victim, grown by `aug_rounds` Jacobian-augmentation rounds
+    /// using the *substitute*'s input gradients (Papernot et al.).
+    pub fn adversary_set(
+        &mut self,
+        model: &str,
+        victim: &[f32],
+        substitute: &[f32],
+        cfg: &TrainCfg,
+    ) -> crate::Result<(Vec<f32>, Vec<i32>)> {
+        let img = self.data.image_len();
+        let mut xs = self.data.x_adv.clone();
+        let mut ys: Vec<i32> = self
+            .predict(model, victim, &xs)?
+            .into_iter()
+            .map(|p| p as i32)
+            .collect();
+        let lambda = 0.1f32;
+        for _ in 0..cfg.aug_rounds {
+            // x' = clip(x + lambda * sign(dL/dx)) on the substitute.
+            let g = self.input_grad(model, substitute, &xs, &ys)?;
+            let mut new_xs = Vec::with_capacity(xs.len());
+            for (x, gi) in xs.iter().zip(&g) {
+                new_xs.push((x + lambda * gi.signum()).clamp(0.0, 1.0));
+            }
+            let new_ys: Vec<i32> = self
+                .predict(model, victim, &new_xs)?
+                .into_iter()
+                .map(|p| p as i32)
+                .collect();
+            xs.extend_from_slice(&new_xs);
+            ys.extend_from_slice(&new_ys);
+            debug_assert_eq!(xs.len() / img, ys.len());
+        }
+        Ok((xs, ys))
+    }
+
+    /// dLoss/dx over a full set (batched through `input_grad_<m>`).
+    pub fn input_grad(
+        &mut self,
+        model: &str,
+        theta: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+    ) -> crate::Result<Vec<f32>> {
+        let b = self.man.batch_grad;
+        let img = self.data.image_len();
+        let n = ys.len();
+        let exe = self.rt.load_model_fn(&self.man, model, "input_grad")?;
+        let theta_lit = lit_f32(theta, &[theta.len() as i64])?;
+        let mut out = Vec::with_capacity(xs.len());
+        let mut bx = vec![0.0f32; b * img];
+        let mut by = vec![0i32; b];
+        let mut i = 0;
+        while i < n {
+            let take = b.min(n - i);
+            bx[..take * img].copy_from_slice(&xs[i * img..(i + take) * img]);
+            bx[take * img..].fill(0.0);
+            by[..take].copy_from_slice(&ys[i..i + take]);
+            by[take..].fill(0);
+            let res = exe.run(&[
+                theta_lit.reshape(&[theta.len() as i64])?,
+                lit_f32(&bx, &self.img_dims(b))?,
+                lit_i32(&by, &[b as i64])?,
+            ])?;
+            let g = to_f32(&res[0])?;
+            out.extend_from_slice(&g[..take * img]);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Build + fine-tune a substitute of the given kind (paper §3.4.1).
+    pub fn extract_substitute(
+        &mut self,
+        model: &str,
+        victim: &[f32],
+        kind: SubstituteKind,
+        cfg: &TrainCfg,
+    ) -> crate::Result<Vec<f32>> {
+        let info = self.man.model(model)?.clone();
+        match kind {
+            SubstituteKind::WhiteBox => Ok(victim.to_vec()),
+            SubstituteKind::BlackBox => {
+                let theta0 = self.he_init(model, cfg.seed ^ 0xb1ac)?;
+                let mask = vec![1.0f32; info.theta_len];
+                let (xs, ys) = self.adversary_set(model, victim, &theta0, cfg)?;
+                let (theta, _) =
+                    self.train(model, theta0, &mask, &xs, &ys, cfg.substitute_steps, cfg.lr_for(model))?;
+                Ok(theta)
+            }
+            SubstituteKind::Se { ratio } => {
+                // Selection runs on the *victim's* weights — exactly what
+                // the SE hardware encrypts (largest-l1 rows).
+                let sel = se_row_selection(&info, victim, ratio);
+                let mask = build_mask(&info, &sel); // 1 = encrypted/unknown
+                let fresh = self.he_init(model, cfg.seed ^ 0x5e)?;
+                // Known (plaintext) weights copied from the victim;
+                // unknown ones re-initialized (paper: standard normal
+                // fill + fine-tune with known weights frozen).
+                let theta0: Vec<f32> = victim
+                    .iter()
+                    .zip(&fresh)
+                    .zip(&mask)
+                    .map(|((v, f), m)| if *m == 1.0 { *f } else { *v })
+                    .collect();
+                let (xs, ys) = self.adversary_set(model, victim, &theta0, cfg)?;
+                let (theta, _) =
+                    self.train(model, theta0, &mask, &xs, &ys, cfg.substitute_steps, cfg.lr_for(model))?;
+                Ok(theta)
+            }
+        }
+    }
+
+    /// Targeted I-FGSM transferability (Fig 9): generate adversarial
+    /// examples on the substitute until they fool it, then measure how
+    /// many also move the *victim* to the target label.
+    pub fn transferability(
+        &mut self,
+        model: &str,
+        substitute: &[f32],
+        victim: &[f32],
+        n_examples: usize,
+    ) -> crate::Result<f64> {
+        let img = self.data.image_len();
+        let n_classes = self.data.n_classes;
+        // Seed pool: test images the substitute classifies correctly.
+        let preds = {
+            let xs = self.data.x_test.clone();
+            self.predict(model, substitute, &xs)?
+        };
+        let mut seeds = Vec::new();
+        for (i, p) in preds.iter().enumerate() {
+            if *p == self.data.y_test[i] as usize {
+                seeds.push(i);
+            }
+            if seeds.len() >= n_examples {
+                break;
+            }
+        }
+        anyhow::ensure!(!seeds.is_empty(), "substitute classifies nothing correctly");
+
+        let fgsm = self.rt.load(&self.man.hlo_path("fgsm_step.hlo.txt"))?;
+        let b = self.man.batch_grad;
+        let hw = self.data.hw;
+        let dims = [b as i64, hw as i64, hw as i64, self.data.channels as i64];
+        let max_iters = 15;
+
+        let mut fooled_sub = 0usize;
+        let mut fooled_victim = 0usize;
+        let mut i = 0;
+        while i < seeds.len() {
+            let take = b.min(seeds.len() - i);
+            let batch: Vec<usize> = seeds[i..i + take].to_vec();
+            let mut x0 = vec![0.0f32; b * img];
+            let mut y_tgt = vec![0i32; b];
+            for (j, &s) in batch.iter().enumerate() {
+                x0[j * img..(j + 1) * img]
+                    .copy_from_slice(&self.data.x_test[s * img..(s + 1) * img]);
+                // Pre-assigned incorrect target label (§3.4.3).
+                y_tgt[j] = (self.data.y_test[s] + 1) % n_classes as i32;
+            }
+            let mut x = x0.clone();
+            for _ in 0..max_iters {
+                let g = self.input_grad_batch(model, substitute, &x, &y_tgt, b)?;
+                let out = fgsm.run(&[
+                    lit_f32(&x, &dims)?,
+                    lit_f32(&g, &dims)?,
+                    lit_f32(&x0, &dims)?,
+                ])?;
+                x = to_f32(&out[0])?;
+            }
+            // Which examples fool the substitute / transfer to the victim?
+            let sub_pred = self.predict_batch(model, substitute, &x, b)?;
+            let vic_pred = self.predict_batch(model, victim, &x, b)?;
+            for j in 0..take {
+                if sub_pred[j] == y_tgt[j] as usize {
+                    fooled_sub += 1;
+                    if vic_pred[j] == y_tgt[j] as usize {
+                        fooled_victim += 1;
+                    }
+                }
+            }
+            i += take;
+        }
+        // Paper: examples are generated until they fool the substitute;
+        // transferability is over the fooling set.
+        Ok(if fooled_sub == 0 { 0.0 } else { fooled_victim as f64 / fooled_sub as f64 })
+    }
+
+    fn input_grad_batch(
+        &mut self,
+        model: &str,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+        b: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let exe = self.rt.load_model_fn(&self.man, model, "input_grad")?;
+        let res = exe.run(&[
+            lit_f32(theta, &[theta.len() as i64])?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b as i64])?,
+        ])?;
+        to_f32(&res[0])
+    }
+
+    fn predict_batch(
+        &mut self,
+        model: &str,
+        theta: &[f32],
+        x: &[f32],
+        b: usize,
+    ) -> crate::Result<Vec<usize>> {
+        // predict_<m> is compiled for batch_eval; pad up.
+        let img = self.data.image_len();
+        let be = self.man.batch_eval;
+        let mut xb = vec![0.0f32; be * img];
+        xb[..b * img].copy_from_slice(&x[..b * img]);
+        let exe = self.rt.load_model_fn(&self.man, model, "predict")?;
+        let res = exe.run(&[
+            lit_f32(theta, &[theta.len() as i64])?,
+            lit_f32(&xb, &self.img_dims(be))?,
+        ])?;
+        let mut p = argmax_rows(&res[0], self.data.n_classes)?;
+        p.truncate(b);
+        Ok(p)
+    }
+}

@@ -1,0 +1,72 @@
+//! Security evaluation (paper §3.4): substitute-model generation, IP
+//! stealing (Fig 8), and adversarial-example transferability (Fig 9).
+//!
+//! Everything runs in Rust over the AOT artifacts:
+//! `train_step_<m>.hlo` (SGD with a freeze mask), `predict_<m>.hlo`,
+//! `input_grad_<m>.hlo` and `fgsm_step.hlo`. Python only produced the
+//! HLO at build time.
+//!
+//! Pipeline (per paper §3.4.1):
+//! 1. Train the *victim* on its private split.
+//! 2. The adversary owns the small `adv` split; labels come from
+//!    querying the victim; Jacobian-based augmentation grows the set.
+//! 3. Substitutes: white-box (= victim), black-box (retrain from
+//!    scratch), SE(r) (plaintext rows copied from the victim + frozen,
+//!    encrypted rows re-initialized + fine-tuned).
+//! 4. Fig 8 metric: substitute test accuracy. Fig 9 metric: targeted
+//!    I-FGSM transferability to the victim.
+
+pub mod harness;
+
+pub use harness::{SecurityCtx, SubstituteKind, TrainCfg};
+
+use crate::util::cli::Args;
+
+pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "vgg16m");
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut ctx = SecurityCtx::new(&dir)?;
+    let cfg = TrainCfg {
+        victim_steps: args.get_u64("victim-steps", 800) as usize,
+        substitute_steps: args.get_u64("substitute-steps", 400) as usize,
+        lr: args.get_f64("lr", 0.0) as f32,
+        aug_rounds: args.get_u64("aug-rounds", 2) as usize,
+        ..TrainCfg::default()
+    };
+    match args.positional.first().map(|s| s.as_str()).or(args.get("op")) {
+        Some("train-victim") => {
+            let theta = ctx.train_victim(&model, &cfg)?;
+            let acc = ctx.test_accuracy(&model, &theta)?;
+            println!("victim {model}: test accuracy {acc:.4}");
+        }
+        Some("extract") => {
+            let ratio = args.get_f64("ratio", 0.5);
+            let victim = ctx.train_victim(&model, &cfg)?;
+            let kind = match args.get_or("kind", "se").as_str() {
+                "white" => SubstituteKind::WhiteBox,
+                "black" => SubstituteKind::BlackBox,
+                _ => SubstituteKind::Se { ratio },
+            };
+            let sub = ctx.extract_substitute(&model, &victim, kind, &cfg)?;
+            let acc = ctx.test_accuracy(&model, &sub)?;
+            println!("substitute {kind:?} on {model}: test accuracy {acc:.4}");
+        }
+        Some("attack") => {
+            let ratio = args.get_f64("ratio", 0.5);
+            let victim = ctx.train_victim(&model, &cfg)?;
+            let kind = match args.get_or("kind", "se").as_str() {
+                "white" => SubstituteKind::WhiteBox,
+                "black" => SubstituteKind::BlackBox,
+                _ => SubstituteKind::Se { ratio },
+            };
+            let sub = ctx.extract_substitute(&model, &victim, kind, &cfg)?;
+            let n = args.get_u64("examples", 128) as usize;
+            let t = ctx.transferability(&model, &sub, &victim, n)?;
+            println!("transferability {kind:?} on {model}: {t:.4}");
+        }
+        other => anyhow::bail!(
+            "security: unknown op {other:?} (use train-victim | extract | attack)"
+        ),
+    }
+    Ok(())
+}

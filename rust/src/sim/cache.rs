@@ -1,0 +1,216 @@
+//! Set-associative write-back cache with true-LRU replacement.
+//!
+//! Used for the per-SM L1 (configured write-through/no-allocate by the
+//! caller), the shared L2 slices, and the counter cache.
+
+use super::config::{CacheCfg, LINE};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Access {
+    Hit,
+    /// Miss; if a dirty victim was evicted its line address is returned
+    /// so the caller can generate the write-back.
+    Miss { dirty_victim: Option<u64> },
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    lru: u64,
+}
+
+/// The cache indexes by line address (byte address / LINE).
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: Vec<Vec<Way>>,
+    n_sets: u64,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheCfg) -> Cache {
+        let n_lines = (cfg.size_bytes / LINE).max(1);
+        let ways = cfg.ways.min(n_lines as usize).max(1);
+        let n_sets = (n_lines / ways as u64).max(1);
+        Cache {
+            sets: vec![vec![Way::default(); ways]; n_sets as usize],
+            n_sets,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn index(&self, line_addr: u64) -> (usize, u64) {
+        let line = line_addr / LINE;
+        ((line % self.n_sets) as usize, line / self.n_sets)
+    }
+
+    /// Probe without modifying state.
+    pub fn probe(&self, line_addr: u64) -> bool {
+        let (set, tag) = self.index(line_addr);
+        self.sets[set].iter().any(|w| w.valid && w.tag == tag)
+    }
+
+    /// Access a line. On a miss the line is installed (allocate); the
+    /// evicted dirty victim's address (if any) is reported.
+    pub fn access(&mut self, line_addr: u64, write: bool) -> Access {
+        self.tick += 1;
+        let (set, tag) = self.index(line_addr);
+        let n_sets = self.n_sets;
+        let set_ways = &mut self.sets[set];
+        if let Some(w) = set_ways.iter_mut().find(|w| w.valid && w.tag == tag) {
+            w.lru = self.tick;
+            w.dirty |= write;
+            self.hits += 1;
+            return Access::Hit;
+        }
+        self.misses += 1;
+        // Choose victim: invalid first, else least-recently used.
+        let victim = set_ways
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| if w.valid { w.lru + 1 } else { 0 })
+            .map(|(i, _)| i)
+            .unwrap();
+        let old = set_ways[victim];
+        let dirty_victim = if old.valid && old.dirty {
+            Some((old.tag * n_sets + set as u64) * LINE)
+        } else {
+            None
+        };
+        set_ways[victim] = Way { tag, valid: true, dirty: write, lru: self.tick };
+        Access::Miss { dirty_victim }
+    }
+
+    /// Update a line only if present (write-through no-allocate stores).
+    pub fn write_no_allocate(&mut self, line_addr: u64) -> bool {
+        self.tick += 1;
+        let (set, tag) = self.index(line_addr);
+        if let Some(w) = self.sets[set].iter_mut().find(|w| w.valid && w.tag == tag) {
+            w.lru = self.tick;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain every dirty line (end-of-run flush), returning addresses.
+    pub fn flush_dirty(&mut self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (set_idx, set) in self.sets.iter_mut().enumerate() {
+            for w in set.iter_mut() {
+                if w.valid && w.dirty {
+                    out.push((w.tag * self.n_sets + set_idx as u64) * LINE);
+                    w.dirty = false;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::CacheCfg;
+    use crate::util::rng::Rng;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways of 128B lines = 1 KB.
+        Cache::new(CacheCfg { size_bytes: 1024, ways: 2, latency: 1 })
+    }
+
+    #[test]
+    fn hit_after_install() {
+        let mut c = small();
+        assert!(matches!(c.access(0, false), Access::Miss { .. }));
+        assert_eq!(c.access(0, false), Access::Hit);
+        assert_eq!(c.access(64, false), Access::Hit); // same line
+        assert!(matches!(c.access(128, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = small();
+        // Set 0 holds lines 0, 4, 8... (4 sets): addresses 0, 512, 1024.
+        c.access(0, false);
+        c.access(512, false);
+        c.access(0, false); // touch 0 so 512 is LRU
+        c.access(1024, false); // evicts 512
+        assert_eq!(c.access(0, false), Access::Hit);
+        assert!(matches!(c.access(512, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn dirty_victim_reported_with_correct_address() {
+        let mut c = small();
+        c.access(512, true);
+        c.access(0, false);
+        match c.access(1024, false) {
+            Access::Miss { dirty_victim: Some(addr) } => assert_eq!(addr, 512),
+            other => panic!("expected dirty victim, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flush_returns_all_dirty() {
+        let mut c = small();
+        c.access(0, true);
+        c.access(128, true);
+        c.access(256, false);
+        let mut dirty = c.flush_dirty();
+        dirty.sort_unstable();
+        assert_eq!(dirty, vec![0, 128]);
+        assert!(c.flush_dirty().is_empty());
+    }
+
+    #[test]
+    fn write_no_allocate_semantics() {
+        let mut c = small();
+        assert!(!c.write_no_allocate(0));
+        c.access(0, false);
+        assert!(c.write_no_allocate(0));
+    }
+
+    /// Property: hit/miss accounting matches a model with the same
+    /// geometry simulated naively.
+    #[test]
+    fn randomized_against_naive_model() {
+        use std::collections::VecDeque;
+        let mut c = small();
+        // Naive per-set LRU lists of line numbers.
+        let mut model: Vec<VecDeque<u64>> = vec![VecDeque::new(); 4];
+        let mut rng = Rng::seeded(99);
+        for _ in 0..20_000 {
+            let line = rng.below(64); // 64 distinct lines
+            let addr = line * LINE;
+            let set = (line % 4) as usize;
+            let model_hit = model[set].contains(&line);
+            if model_hit {
+                model[set].retain(|&l| l != line);
+            } else if model[set].len() == 2 {
+                model[set].pop_back();
+            }
+            model[set].push_front(line);
+            match c.access(addr, false) {
+                Access::Hit => assert!(model_hit, "line {line}"),
+                Access::Miss { .. } => assert!(!model_hit, "line {line}"),
+            }
+        }
+        assert!(c.hits > 0 && c.misses > 0);
+    }
+}

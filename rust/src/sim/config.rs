@@ -1,0 +1,209 @@
+//! Simulator configuration (paper §4.1 Table 3 defaults).
+
+/// Memory line size in bytes (L1/L2/DRAM).
+pub const LINE: u64 = 128;
+
+/// Which line cipher runs at the memory controllers (paper §2.3/§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncEngine {
+    /// No encryption at all (insecure baseline GPU).
+    None,
+    /// Direct (ECB-with-global-key) encryption: decrypt serialized
+    /// after every encrypted read, encrypt before every write.
+    Direct,
+    /// Traditional counter mode: per-line counters in DRAM + an on-chip
+    /// counter cache; OTP overlaps the data read on a counter hit.
+    Counter,
+    /// SEAL's colocation mode: the 8B counter lives in the same 136B
+    /// line (ECC-chip style), so no counter traffic and no counter
+    /// cache; OTP starts when the line (with its counter) arrives.
+    ColoE,
+}
+
+/// A full scheme = engine + whether the SE partial-encryption address
+/// map is active (paper's six compared configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scheme {
+    pub engine: EncEngine,
+    pub smart: bool,
+}
+
+impl Scheme {
+    pub const BASELINE: Scheme = Scheme { engine: EncEngine::None, smart: false };
+    pub const DIRECT: Scheme = Scheme { engine: EncEngine::Direct, smart: false };
+    pub const COUNTER: Scheme = Scheme { engine: EncEngine::Counter, smart: false };
+    pub const DIRECT_SE: Scheme = Scheme { engine: EncEngine::Direct, smart: true };
+    pub const COUNTER_SE: Scheme = Scheme { engine: EncEngine::Counter, smart: true };
+    /// SEAL = SE + ColoE.
+    pub const SEAL: Scheme = Scheme { engine: EncEngine::ColoE, smart: true };
+
+    pub const ALL_SIX: [(&'static str, Scheme); 6] = [
+        ("Baseline", Scheme::BASELINE),
+        ("Direct", Scheme::DIRECT),
+        ("Counter", Scheme::COUNTER),
+        ("Direct+SE", Scheme::DIRECT_SE),
+        ("Counter+SE", Scheme::COUNTER_SE),
+        ("SEAL", Scheme::SEAL),
+    ];
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "baseline" => Scheme::BASELINE,
+            "direct" => Scheme::DIRECT,
+            "counter" => Scheme::COUNTER,
+            "direct+se" | "direct_se" => Scheme::DIRECT_SE,
+            "counter+se" | "counter_se" => Scheme::COUNTER_SE,
+            "seal" | "coloe+se" => Scheme::SEAL,
+            "coloe" => Scheme { engine: EncEngine::ColoE, smart: false },
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.engine, self.smart) {
+            (EncEngine::None, _) => "Baseline",
+            (EncEngine::Direct, false) => "Direct",
+            (EncEngine::Counter, false) => "Counter",
+            (EncEngine::Direct, true) => "Direct+SE",
+            (EncEngine::Counter, true) => "Counter+SE",
+            (EncEngine::ColoE, true) => "SEAL",
+            (EncEngine::ColoE, false) => "ColoE",
+        }
+    }
+}
+
+/// Cache geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheCfg {
+    pub size_bytes: u64,
+    pub ways: usize,
+    pub latency: u64,
+}
+
+/// GDDR5 timing in *core* cycles (Table 3 gives ns at a 700 MHz core:
+/// cycles = ns * 0.7, rounded).
+#[derive(Debug, Clone, Copy)]
+pub struct DramCfg {
+    pub n_banks: usize,
+    pub row_bytes: u64,
+    pub t_cl: u64,
+    pub t_rp: u64,
+    pub t_rcd: u64,
+    pub t_rc: u64,
+    /// Data-bus occupancy per 128B line: 64-bit channel @ 3696 MT/s →
+    /// 16 beats = 4.33 ns ≈ 3 core cycles.
+    pub line_bus_cycles: u64,
+}
+
+impl Default for DramCfg {
+    fn default() -> Self {
+        DramCfg {
+            n_banks: 16,
+            row_bytes: 2048,
+            t_cl: 9,   // 12 ns
+            t_rp: 9,   // 12 ns
+            t_rcd: 9,  // 12 ns
+            t_rc: 28,  // 40 ns
+            line_bus_cycles: 3,
+        }
+    }
+}
+
+/// AES engine model (paper Table 2 / §4.1: 20-cycle latency, 8 GB/s).
+#[derive(Debug, Clone, Copy)]
+pub struct AesCfg {
+    pub latency: u64,
+    /// Throughput as deci-cycles of pipeline occupancy per 128B line:
+    /// 8 GB/s at 700 MHz core = 11.43 B/cycle → 128 B = 11.2 cycles.
+    pub line_occupancy_deci: u64,
+}
+
+impl Default for AesCfg {
+    fn default() -> Self {
+        AesCfg { latency: 20, line_occupancy_deci: 112 }
+    }
+}
+
+/// Whole-GPU configuration (defaults = paper Table 3).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    pub n_sms: usize,
+    pub warps_per_sm: usize,
+    /// Max in-flight loads per warp before it blocks.
+    pub warp_max_outstanding: usize,
+    pub l1: CacheCfg,
+    /// Per-MC L2 slice (768 KB total / 6 channels).
+    pub l2_slice: CacheCfg,
+    pub n_channels: usize,
+    pub dram: DramCfg,
+    pub aes: AesCfg,
+    pub scheme: Scheme,
+    /// Total on-chip counter-cache capacity (split across MCs).
+    /// Paper default: L2/16 = 48 KB.
+    pub counter_cache_bytes: u64,
+    /// One-way interconnect latency SM↔L2.
+    pub icnt_latency: u64,
+    /// Requests accepted per L2 slice per cycle.
+    pub l2_ports: usize,
+    /// FR-FCFS reorder window (requests examined per pick).
+    pub frfcfs_window: usize,
+    /// Stop after this many cycles even if work remains (sampling).
+    pub max_cycles: u64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            n_sms: 15,
+            warps_per_sm: 48,
+            warp_max_outstanding: 2,
+            l1: CacheCfg { size_bytes: 16 * 1024, ways: 4, latency: 1 },
+            l2_slice: CacheCfg { size_bytes: 768 * 1024 / 6, ways: 8, latency: 10 },
+            n_channels: 6,
+            dram: DramCfg::default(),
+            aes: AesCfg::default(),
+            scheme: Scheme::BASELINE,
+            counter_cache_bytes: 48 * 1024,
+            icnt_latency: 8,
+            l2_ports: 1,
+            frfcfs_window: 16,
+            max_cycles: 20_000_000,
+        }
+    }
+}
+
+impl GpuConfig {
+    pub fn with_scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Which channel/MC owns a line (line-interleaved).
+    pub fn channel_of(&self, line_addr: u64) -> usize {
+        ((line_addr / LINE) % self.n_channels as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for (name, s) in Scheme::ALL_SIX {
+            assert_eq!(Scheme::parse(name).unwrap(), s);
+            assert_eq!(s.name(), name);
+        }
+        assert!(Scheme::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn channel_interleave_covers_all() {
+        let cfg = GpuConfig::default();
+        let mut seen = [false; 6];
+        for i in 0..12u64 {
+            seen[cfg.channel_of(i * LINE)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,322 @@
+//! SM (streaming multiprocessor) issue model.
+//!
+//! Each SM holds `warps_per_sm` warps executing an [`AccessStream`] —
+//! the per-warp instruction trace a `traffic::` generator produces
+//! (runs of compute instructions interleaved with per-line loads and
+//! stores). One instruction issues per SM per cycle from a round-robin
+//! ready queue; warps block when they exceed their outstanding-load
+//! budget (scoreboard) and are woken by fills.
+
+use std::collections::HashMap;
+
+use super::cache::{Access, Cache};
+use super::config::{GpuConfig, LINE};
+
+/// One trace element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// `n` back-to-back compute instructions.
+    Compute(u32),
+    /// A 128B-line load (address in bytes).
+    Load(u64),
+    /// A 128B-line store.
+    Store(u64),
+}
+
+/// A per-warp instruction stream (implemented by `traffic::`).
+pub trait AccessStream: Send {
+    fn next_slot(&mut self) -> Option<Slot>;
+}
+
+impl AccessStream for std::vec::IntoIter<Slot> {
+    fn next_slot(&mut self) -> Option<Slot> {
+        self.next()
+    }
+}
+
+/// A memory request leaving the SM toward L2.
+#[derive(Debug, Clone, Copy)]
+pub struct SmMemReq {
+    pub line: u64,
+    pub write: bool,
+    pub sm: usize,
+}
+
+struct Warp {
+    stream: Box<dyn AccessStream>,
+    cur: Option<Slot>,
+    outstanding: usize,
+    blocked: bool,
+    done: bool,
+}
+
+pub struct Sm {
+    id: usize,
+    warps: Vec<Warp>,
+    ready: std::collections::VecDeque<usize>,
+    l1: Cache,
+    /// L1 MSHRs: line -> warps waiting on the fill.
+    mshr: HashMap<u64, Vec<usize>>,
+    max_outstanding: usize,
+    pub instrs: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub stall_cycles: u64,
+    live_warps: usize,
+}
+
+impl Sm {
+    pub fn new(id: usize, cfg: &GpuConfig, streams: Vec<Box<dyn AccessStream>>) -> Sm {
+        let warps: Vec<Warp> = streams
+            .into_iter()
+            .map(|stream| Warp { stream, cur: None, outstanding: 0, blocked: false, done: false })
+            .collect();
+        let n = warps.len();
+        Sm {
+            id,
+            warps,
+            ready: (0..n).collect(),
+            l1: Cache::new(cfg.l1),
+            mshr: HashMap::new(),
+            max_outstanding: cfg.warp_max_outstanding,
+            instrs: 0,
+            l1_hits: 0,
+            l1_misses: 0,
+            stall_cycles: 0,
+            live_warps: n,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.live_warps == 0
+    }
+
+    pub fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    /// A fill for `line` arrived from L2: install in L1 and wake waiters.
+    pub fn fill(&mut self, line: u64) {
+        self.l1.access(line, false);
+        if let Some(waiters) = self.mshr.remove(&line) {
+            for w in waiters {
+                let warp = &mut self.warps[w];
+                warp.outstanding -= 1;
+                if warp.blocked {
+                    warp.blocked = false;
+                    self.ready.push_back(w);
+                }
+            }
+        }
+    }
+
+    /// Issue at most one instruction. `send` pushes a request toward L2
+    /// and returns false when the interconnect is full (stall).
+    pub fn issue(&mut self, send: &mut dyn FnMut(SmMemReq) -> bool) {
+        // Scan at most the whole ready queue for an issuable warp; the
+        // common case issues the front warp immediately.
+        for _ in 0..self.ready.len() {
+            let Some(w) = self.ready.pop_front() else { break };
+            match self.try_issue(w, send) {
+                IssueResult::Issued { requeue } => {
+                    if requeue {
+                        self.ready.push_back(w);
+                    }
+                    return;
+                }
+                IssueResult::Stalled => {
+                    // Put it back at the *front*: order-preserving retry.
+                    self.ready.push_front(w);
+                    self.stall_cycles += 1;
+                    return;
+                }
+                IssueResult::Finished => {
+                    self.live_warps -= 1;
+                    // Try the next warp this same cycle.
+                }
+            }
+        }
+    }
+
+    fn try_issue(&mut self, w: usize, send: &mut dyn FnMut(SmMemReq) -> bool) -> IssueResult {
+        let warp = &mut self.warps[w];
+        if warp.cur.is_none() {
+            warp.cur = warp.stream.next_slot();
+        }
+        let Some(slot) = warp.cur else {
+            warp.done = true;
+            // A finished stream may still have loads in flight; that is
+            // fine — nothing waits on the warp itself.
+            return IssueResult::Finished;
+        };
+        match slot {
+            Slot::Compute(n) => {
+                self.instrs += 1;
+                warp.cur = if n > 1 { Some(Slot::Compute(n - 1)) } else { None };
+                IssueResult::Issued { requeue: true }
+            }
+            Slot::Store(addr) => {
+                let line = addr & !(LINE - 1);
+                if !send(SmMemReq { line, write: true, sm: self.id }) {
+                    return IssueResult::Stalled;
+                }
+                // Write-through no-allocate L1 (Fermi-style).
+                self.l1.write_no_allocate(line);
+                self.instrs += 1;
+                warp.cur = None;
+                IssueResult::Issued { requeue: true }
+            }
+            Slot::Load(addr) => {
+                let line = addr & !(LINE - 1);
+                if self.l1.probe(line) {
+                    self.l1.access(line, false);
+                    self.l1_hits += 1;
+                    self.instrs += 1;
+                    warp.cur = None;
+                    return IssueResult::Issued { requeue: true };
+                }
+                // Miss: join an existing MSHR or send a new request.
+                if let Some(waiters) = self.mshr.get_mut(&line) {
+                    waiters.push(w);
+                } else {
+                    if !send(SmMemReq { line, write: false, sm: self.id }) {
+                        return IssueResult::Stalled;
+                    }
+                    self.mshr.insert(line, vec![w]);
+                }
+                self.l1_misses += 1;
+                self.instrs += 1;
+                warp.cur = None;
+                warp.outstanding += 1;
+                if warp.outstanding >= self.max_outstanding {
+                    warp.blocked = true;
+                    IssueResult::Issued { requeue: false }
+                } else {
+                    IssueResult::Issued { requeue: true }
+                }
+            }
+        }
+    }
+}
+
+enum IssueResult {
+    Issued { requeue: bool },
+    Stalled,
+    Finished,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::default()
+    }
+
+    fn sm_with(slots: Vec<Vec<Slot>>) -> Sm {
+        let streams: Vec<Box<dyn AccessStream>> =
+            slots.into_iter().map(|v| Box::new(v.into_iter()) as Box<dyn AccessStream>).collect();
+        Sm::new(0, &cfg(), streams)
+    }
+
+    #[test]
+    fn compute_only_warp_issues_every_cycle() {
+        let mut sm = sm_with(vec![vec![Slot::Compute(10)]]);
+        let mut send = |_r: SmMemReq| true;
+        for _ in 0..10 {
+            sm.issue(&mut send);
+        }
+        assert_eq!(sm.instrs, 10);
+        sm.issue(&mut send);
+        assert!(sm.done());
+    }
+
+    #[test]
+    fn load_miss_blocks_then_fill_wakes() {
+        let mut sm = sm_with(vec![vec![
+            Slot::Load(0),
+            Slot::Load(LINE),
+            Slot::Load(2 * LINE),
+            Slot::Compute(1),
+        ]]);
+        let sent = std::cell::RefCell::new(Vec::new());
+        let mut send = |r: SmMemReq| {
+            sent.borrow_mut().push(r.line);
+            true
+        };
+        // Default budget = 2 outstanding: two loads issue, then blocked.
+        for _ in 0..5 {
+            sm.issue(&mut send);
+        }
+        assert_eq!(*sent.borrow(), vec![0, LINE]);
+        assert_eq!(sm.instrs, 2);
+        sm.fill(0);
+        for _ in 0..3 {
+            sm.issue(&mut send);
+        }
+        assert_eq!(*sent.borrow(), vec![0, LINE, 2 * LINE]);
+        sm.fill(LINE);
+        sm.fill(2 * LINE);
+        sm.issue(&mut send); // the Compute(1)
+        assert_eq!(sm.instrs, 4);
+    }
+
+    #[test]
+    fn l1_hit_does_not_send() {
+        let mut sm = sm_with(vec![vec![Slot::Load(0), Slot::Load(64)]]);
+        let mut count = 0;
+        let mut send = |_r: SmMemReq| {
+            count += 1;
+            true
+        };
+        sm.issue(&mut send);
+        sm.fill(0);
+        sm.issue(&mut send); // second load: same line, L1 hit
+        assert_eq!(count, 1);
+        assert_eq!(sm.l1_hits, 1);
+        assert_eq!(sm.l1_misses, 1);
+    }
+
+    #[test]
+    fn mshr_merges_same_line_from_two_warps() {
+        let mut sm = sm_with(vec![vec![Slot::Load(0)], vec![Slot::Load(64)]]);
+        let count = std::cell::Cell::new(0);
+        let mut send = |_r: SmMemReq| {
+            count.set(count.get() + 1);
+            true
+        };
+        sm.issue(&mut send);
+        sm.issue(&mut send);
+        assert_eq!(count.get(), 1, "second warp joins the MSHR");
+        sm.fill(0);
+        // Both warps finish after the single fill.
+        sm.issue(&mut send);
+        sm.issue(&mut send);
+        assert!(sm.done());
+    }
+
+    #[test]
+    fn stall_preserves_program_order() {
+        let mut sm = sm_with(vec![vec![Slot::Store(0), Slot::Store(LINE)]]);
+        let mut accept = false;
+        let mut sent = Vec::new();
+        {
+            let mut send = |r: SmMemReq| {
+                if accept {
+                    sent.push(r.line);
+                }
+                accept
+            };
+            sm.issue(&mut send); // stalled
+        }
+        assert_eq!(sm.instrs, 0);
+        accept = true;
+        let mut send = |r: SmMemReq| {
+            sent.push(r.line);
+            true
+        };
+        sm.issue(&mut send);
+        sm.issue(&mut send);
+        assert_eq!(sent, vec![0, LINE]);
+    }
+}

@@ -1,0 +1,443 @@
+//! Top-level simulator: SMs ↔ crossbar ↔ L2 slices ↔ memory
+//! controllers, advanced cycle by cycle (with event fast-forward when
+//! every warp is blocked on memory).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::cache::{self, Cache};
+use cache::Access;
+use super::config::{GpuConfig, LINE};
+use super::core::{AccessStream, Sm, SmMemReq};
+use super::encryption::EncMap;
+use super::mc::{McStats, MemReq, MemoryController};
+
+/// End-of-run measurements (the raw material for every figure).
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub instrs: u64,
+    pub mc: McStats,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub ctr_cache_hits: u64,
+    pub ctr_cache_misses: u64,
+    pub aes_lines: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub dram_bus_busy: u64,
+    pub sm_stall_cycles: u64,
+    pub hit_max_cycles: bool,
+}
+
+impl SimStats {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instrs as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn ctr_hit_rate(&self) -> f64 {
+        let t = self.ctr_cache_hits + self.ctr_cache_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.ctr_cache_hits as f64 / t as f64
+        }
+    }
+
+    /// Total DRAM data traffic in bytes (all classes).
+    pub fn dram_bytes(&self) -> u64 {
+        self.mc.total() * LINE
+    }
+}
+
+struct L2Slice {
+    cache: Cache,
+    /// line -> SMs waiting on the fill.
+    mshr: HashMap<u64, Vec<usize>>,
+}
+
+pub struct Gpu {
+    cfg: GpuConfig,
+    sms: Vec<Sm>,
+    slices: Vec<L2Slice>,
+    mcs: Vec<MemoryController>,
+    /// SM -> slice request queues: (ready_cycle, req).
+    req_q: Vec<VecDeque<(u64, SmMemReq)>>,
+    /// slice -> SM response queues: (ready_cycle, line).
+    resp_q: Vec<VecDeque<(u64, u64)>>,
+    enc_map: Arc<dyn EncMap>,
+    now: u64,
+}
+
+const REQ_Q_CAP: usize = 32;
+
+impl Gpu {
+    /// Build a GPU with one stream per (sm, warp); `streams.len()` must
+    /// be `n_sms * warps_per_sm` (use `Slot::Compute(0)`-free empty
+    /// vecs for unused warps).
+    pub fn new(cfg: GpuConfig, enc_map: Arc<dyn EncMap>, mut streams: Vec<Box<dyn AccessStream>>) -> Gpu {
+        let want = cfg.n_sms * cfg.warps_per_sm;
+        assert_eq!(streams.len(), want, "need {want} warp streams");
+        let mut sms = Vec::with_capacity(cfg.n_sms);
+        for sm_id in 0..cfg.n_sms {
+            let rest = streams.split_off(cfg.warps_per_sm);
+            sms.push(Sm::new(sm_id, &cfg, streams));
+            streams = rest;
+        }
+        let slices = (0..cfg.n_channels)
+            .map(|_| L2Slice { cache: Cache::new(cfg.l2_slice), mshr: HashMap::new() })
+            .collect();
+        let mcs = (0..cfg.n_channels).map(|_| MemoryController::new(&cfg)).collect();
+        Gpu {
+            req_q: (0..cfg.n_channels).map(|_| VecDeque::new()).collect(),
+            resp_q: (0..cfg.n_sms).map(|_| VecDeque::new()).collect(),
+            sms,
+            slices,
+            mcs,
+            enc_map,
+            cfg,
+            now: 0,
+        }
+    }
+
+    pub fn run(&mut self) -> SimStats {
+        let mut hit_cap = false;
+        loop {
+            if self.now >= self.cfg.max_cycles {
+                hit_cap = true;
+                break;
+            }
+            self.step();
+            if self.all_done() {
+                break;
+            }
+            self.maybe_fast_forward();
+        }
+        self.flush_writebacks();
+        self.collect(hit_cap)
+    }
+
+    fn step(&mut self) {
+        let now = self.now;
+        // 1. MC completions -> L2 fill -> SM response queues.
+        for ch in 0..self.cfg.n_channels {
+            let completed = self.mcs[ch].completed(now);
+            for line in completed {
+                self.fill_slice(ch, line, now);
+            }
+        }
+        // 2. L2 slices consume the request crossbar.
+        for ch in 0..self.cfg.n_channels {
+            for _ in 0..self.cfg.l2_ports {
+                match self.req_q[ch].front() {
+                    Some(&(ready, _)) if ready <= now => {}
+                    _ => break,
+                }
+                let (_, req) = self.req_q[ch].pop_front().unwrap();
+                self.slice_access(ch, req, now);
+            }
+        }
+        // 3. MC scheduling.
+        for mc in &mut self.mcs {
+            mc.tick(now);
+        }
+        // 4. SM fills + issue.
+        for sm_id in 0..self.cfg.n_sms {
+            while let Some(&(ready, line)) = self.resp_q[sm_id].front() {
+                if ready > now {
+                    break;
+                }
+                self.resp_q[sm_id].pop_front();
+                self.sms[sm_id].fill(line);
+            }
+        }
+        let icnt_lat = self.cfg.icnt_latency;
+        let n_ch = self.cfg.n_channels as u64;
+        for sm in &mut self.sms {
+            let req_q = &mut self.req_q;
+            let mut send = |r: SmMemReq| {
+                let ch = ((r.line / LINE) % n_ch) as usize;
+                if req_q[ch].len() >= REQ_Q_CAP {
+                    return false;
+                }
+                req_q[ch].push_back((now + icnt_lat, r));
+                true
+            };
+            sm.issue(&mut send);
+        }
+        self.now += 1;
+    }
+
+    /// A read line arrived at slice `ch`: install, write back the dirty
+    /// victim, and forward to every waiting SM.
+    fn fill_slice(&mut self, ch: usize, line: u64, now: u64) {
+        if let Access::Miss { dirty_victim: Some(v) } = self.slices[ch].cache.access(line, false) {
+            self.writeback(ch, v, now);
+        }
+        if let Some(waiters) = self.slices[ch].mshr.remove(&line) {
+            let ready = now + self.cfg.icnt_latency;
+            for sm in waiters {
+                self.resp_q[sm].push_back((ready, line));
+            }
+        }
+    }
+
+    fn writeback(&mut self, ch: usize, victim_line: u64, now: u64) {
+        let encrypted = self.enc_map.encrypted(victim_line);
+        // Evictions may exceed the queue cap to avoid deadlock.
+        self.mcs[ch].enqueue(
+            MemReq { line: victim_line, write: true, encrypted, arrive: now },
+            true,
+        );
+    }
+
+    fn slice_access(&mut self, ch: usize, req: SmMemReq, now: u64) {
+        let line = req.line;
+        if req.write {
+            // Write-validate allocate: stores install without fetching.
+            if let Access::Miss { dirty_victim: Some(v) } =
+                self.slices[ch].cache.access(line, true)
+            {
+                self.writeback(ch, v, now);
+            }
+            return;
+        }
+        // Read. A line being filled is not yet in the cache: join MSHR.
+        if let Some(waiters) = self.slices[ch].mshr.get_mut(&line) {
+            if !waiters.contains(&req.sm) {
+                waiters.push(req.sm);
+            }
+            return;
+        }
+        if self.slices[ch].cache.probe(line) {
+            self.slices[ch].cache.access(line, false);
+            let ready = now + self.cfg.l2_slice.latency + self.cfg.icnt_latency;
+            self.resp_q[req.sm].push_back((ready, line));
+            return;
+        }
+        // Miss: to DRAM, if the MC can take it; otherwise retry.
+        if self.mcs[ch].can_accept() {
+            let encrypted = self.enc_map.encrypted(line);
+            self.mcs[ch].enqueue(MemReq { line, write: false, encrypted, arrive: now }, false);
+            self.slices[ch].mshr.insert(line, vec![req.sm]);
+        } else {
+            self.req_q[ch].push_front((now + 1, req));
+        }
+    }
+
+    fn all_done(&self) -> bool {
+        self.sms.iter().all(|s| s.done())
+            && self.req_q.iter().all(|q| q.is_empty())
+            && self.resp_q.iter().all(|q| q.is_empty())
+            && self.mcs.iter().all(|m| m.idle())
+            && self.slices.iter().all(|s| s.mshr.is_empty())
+    }
+
+    /// If no SM can issue this cycle and no queue is ready, jump to the
+    /// next interesting cycle instead of idling cycle by cycle.
+    fn maybe_fast_forward(&mut self) {
+        if self.sms.iter().any(|s| s.has_ready()) {
+            return;
+        }
+        let mut next = u64::MAX;
+        for q in &self.req_q {
+            if let Some(&(ready, _)) = q.front() {
+                next = next.min(ready);
+            }
+        }
+        for q in &self.resp_q {
+            if let Some(&(ready, _)) = q.front() {
+                next = next.min(ready);
+            }
+        }
+        for mc in &self.mcs {
+            if let Some(t) = mc.next_event() {
+                next = next.min(t);
+            }
+            if !mc.idle() {
+                // Pending work is scheduled by tick(): step normally.
+                return;
+            }
+        }
+        if next != u64::MAX && next > self.now {
+            self.now = next;
+        }
+    }
+
+    /// End-of-run: push every dirty L2 line (and dirty counter line)
+    /// through the write path so Fig 14's write traffic is complete.
+    fn flush_writebacks(&mut self) {
+        for ch in 0..self.cfg.n_channels {
+            let dirty = self.slices[ch].cache.flush_dirty();
+            for line in dirty {
+                self.writeback(ch, line, self.now);
+            }
+        }
+        // Drain the MCs.
+        let mut guard = 0u64;
+        while !self.mcs.iter().all(|m| m.idle()) && guard < 10_000_000 {
+            for mc in &mut self.mcs {
+                mc.tick(self.now);
+                mc.completed(self.now);
+            }
+            self.now += 1;
+            guard += 1;
+        }
+        for ch in 0..self.cfg.n_channels {
+            if let Some(cc) = self.mcs[ch].ctr_cache.as_mut() {
+                let dirty = cc.flush_dirty();
+                for line in dirty {
+                    self.mcs[ch].stats.ctr_writes += 1;
+                    self.mcs[ch].dram.access(line, true, self.now);
+                }
+            }
+        }
+    }
+
+    fn collect(&self, hit_cap: bool) -> SimStats {
+        let mut s = SimStats { cycles: self.now, hit_max_cycles: hit_cap, ..Default::default() };
+        for sm in &self.sms {
+            s.instrs += sm.instrs;
+            s.l1_hits += sm.l1_hits;
+            s.l1_misses += sm.l1_misses;
+            s.sm_stall_cycles += sm.stall_cycles;
+        }
+        for slice in &self.slices {
+            s.l2_hits += slice.cache.hits;
+            s.l2_misses += slice.cache.misses;
+        }
+        for mc in &self.mcs {
+            s.mc.add(&mc.stats);
+            s.aes_lines += mc.aes.lines;
+            s.dram_row_hits += mc.dram.row_hits;
+            s.dram_row_misses += mc.dram.row_misses;
+            s.dram_bus_busy += mc.dram.bus_busy_cycles;
+            if let Some(cc) = mc.ctr_cache.as_ref() {
+                s.ctr_cache_hits += cc.hits;
+                s.ctr_cache_misses += cc.misses;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::Scheme;
+    use crate::sim::core::Slot;
+    use crate::sim::encryption::AllEncrypted;
+
+    /// Build a GPU where the first `n_active` warps run `prog` and the
+    /// rest are empty.
+    fn gpu_with(cfg: GpuConfig, n_active: usize, prog: &dyn Fn(usize) -> Vec<Slot>) -> Gpu {
+        let total = cfg.n_sms * cfg.warps_per_sm;
+        let streams: Vec<Box<dyn AccessStream>> = (0..total)
+            .map(|i| {
+                let v = if i < n_active { prog(i) } else { Vec::new() };
+                Box::new(v.into_iter()) as Box<dyn AccessStream>
+            })
+            .collect();
+        Gpu::new(cfg, Arc::new(AllEncrypted), streams)
+    }
+
+    #[test]
+    fn compute_only_ipc_is_one_per_sm() {
+        // One busy warp per SM issuing pure compute -> IPC ~ n_sms.
+        let cfg = GpuConfig::default();
+        let n_sms = cfg.n_sms;
+        let wps = cfg.warps_per_sm;
+        let total = n_sms * wps;
+        let streams: Vec<Box<dyn AccessStream>> = (0..total)
+            .map(|i| {
+                let v = if i % wps == 0 { vec![Slot::Compute(1000)] } else { Vec::new() };
+                Box::new(v.into_iter()) as Box<dyn AccessStream>
+            })
+            .collect();
+        let mut gpu = Gpu::new(cfg, Arc::new(AllEncrypted), streams);
+        let s = gpu.run();
+        let ipc = s.ipc();
+        assert!(
+            (ipc - n_sms as f64).abs() / (n_sms as f64) < 0.05,
+            "ipc {ipc} vs {n_sms}"
+        );
+    }
+
+    #[test]
+    fn streaming_loads_complete_and_count() {
+        let cfg = GpuConfig::default();
+        let mut gpu = gpu_with(cfg, 64, &|i| {
+            (0..32u64).map(|j| Slot::Load(((i as u64 * 32 + j) * 4096) + j * LINE)).collect()
+        });
+        let s = gpu.run();
+        assert!(!s.hit_max_cycles);
+        assert_eq!(s.instrs, 64 * 32);
+        assert!(s.mc.total() > 0);
+    }
+
+    #[test]
+    fn encryption_slows_bandwidth_bound_workload() {
+        // Distinct-line streaming loads: baseline vs direct encryption.
+        let prog = |i: usize| -> Vec<Slot> {
+            (0..64u64).map(|j| Slot::Load((i as u64 * 64 + j) * LINE)).collect()
+        };
+        let mut base = gpu_with(GpuConfig::default().with_scheme(Scheme::BASELINE), 256, &prog);
+        let sb = base.run();
+        let mut dir = gpu_with(GpuConfig::default().with_scheme(Scheme::DIRECT), 256, &prog);
+        let sd = dir.run();
+        assert!(
+            sd.cycles as f64 > sb.cycles as f64 * 1.5,
+            "direct {} vs base {}",
+            sd.cycles,
+            sb.cycles
+        );
+        assert_eq!(sb.instrs, sd.instrs);
+    }
+
+    #[test]
+    fn counter_mode_generates_counter_traffic_and_seal_does_not() {
+        let prog = |i: usize| -> Vec<Slot> {
+            (0..64u64).map(|j| Slot::Load((i as u64 * 64 + j) * LINE)).collect()
+        };
+        let mut ctr = gpu_with(GpuConfig::default().with_scheme(Scheme::COUNTER), 128, &prog);
+        let sc = ctr.run();
+        assert!(sc.mc.ctr_reads > 0);
+        assert!(sc.ctr_cache_hits + sc.ctr_cache_misses > 0);
+        let mut seal = gpu_with(GpuConfig::default().with_scheme(Scheme::SEAL), 128, &prog);
+        let ss = seal.run();
+        assert_eq!(ss.mc.ctr_reads + ss.mc.ctr_writes, 0);
+        assert!(ss.cycles < sc.cycles, "seal {} ctr {}", ss.cycles, sc.cycles);
+    }
+
+    #[test]
+    fn stores_produce_writeback_traffic() {
+        let cfg = GpuConfig::default().with_scheme(Scheme::DIRECT);
+        // Enough distinct stores to overflow L2 and force writebacks,
+        // plus the final flush.
+        let mut gpu = gpu_with(cfg, 64, &|i| {
+            (0..128u64).map(|j| Slot::Store((i as u64 * 128 + j) * LINE)).collect()
+        });
+        let s = gpu.run();
+        assert!(s.mc.enc_writes > 0, "stats: {:?}", s.mc);
+        assert_eq!(s.mc.enc_writes + s.mc.plain_writes, 64 * 128);
+    }
+
+    #[test]
+    fn l1_absorbs_repeated_loads() {
+        let cfg = GpuConfig::default();
+        let mut gpu = gpu_with(cfg, 8, &|_i| {
+            (0..100).map(|_| Slot::Load(0)).collect()
+        });
+        let s = gpu.run();
+        // One line from DRAM; everything else hits on chip.
+        assert!(s.mc.total() <= 8);
+        assert!(s.l1_hits + s.l2_hits >= 700);
+    }
+}

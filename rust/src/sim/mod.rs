@@ -1,0 +1,22 @@
+//! Cycle-level secure-GPU memory-system simulator (the GPGPU-Sim
+//! substitute — DESIGN.md §1/§5).
+//!
+//! Models the paper's Table 3 GTX480-class accelerator: 15 SMs × 48
+//! warps issuing compute/memory instructions, per-SM L1, banked shared
+//! L2, a crossbar, six GDDR5 memory controllers with FR-FCFS scheduling
+//! and bank/row timing, and — the subject of the paper — a pipelined
+//! AES engine per controller plus the four encryption schemes
+//! (Direct, Counter-mode with a counter cache, ColoE, and the SE
+//! partial-encryption address map layered on any of them).
+
+pub mod aes_engine;
+pub mod cache;
+pub mod config;
+pub mod core;
+pub mod dram;
+pub mod encryption;
+pub mod gpu;
+pub mod mc;
+
+pub use config::{EncEngine, GpuConfig, Scheme, LINE};
+pub use gpu::{Gpu, SimStats};

@@ -1,0 +1,151 @@
+//! Measurement infrastructure: counters, histograms, and the table
+//! emitters that print paper-figure rows (markdown + CSV).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Latency/throughput histogram with power-of-two-ish buckets.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    counts: BTreeMap<u64, u64>,
+    pub n: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: u64) {
+        let bucket = if v == 0 { 0 } else { 1u64 << (63 - v.leading_zeros()) };
+        *self.counts.entry(bucket).or_insert(0) += 1;
+        self.n += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let target = (self.n as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (&bucket, &c) in &self.counts {
+            seen += c;
+            if seen >= target {
+                return bucket * 2;
+            }
+        }
+        self.max
+    }
+}
+
+/// A simple two-dimensional results table: rows × columns of f64,
+/// printed as markdown and CSV for EXPERIMENTS.md and results/.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub col_names: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, cols: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            col_names: cols.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.col_names.len(), "table {} row {name}", self.title);
+        self.rows.push((name.to_string(), values));
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| | {} |", self.col_names.join(" | "));
+        let _ = writeln!(s, "|---|{}|", "---|".repeat(self.col_names.len()));
+        for (name, vals) in &self.rows {
+            let cells: Vec<String> = vals.iter().map(|v| format_num(*v)).collect();
+            let _ = writeln!(s, "| {name} | {} |", cells.join(" | "));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "name,{}", self.col_names.join(","));
+        for (name, vals) in &self.rows {
+            let cells: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+            let _ = writeln!(s, "{name},{}", cells.join(","));
+        }
+        s
+    }
+
+    /// Write CSV under results/ (created if needed) and print markdown.
+    pub fn emit(&self, csv_name: &str) {
+        println!("{}", self.to_markdown());
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{csv_name}");
+        if let Err(e) = std::fs::write(&path, self.to_csv()) {
+            eprintln!("warn: could not write {path}: {e}");
+        } else {
+            println!("[csv] {path}");
+        }
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.fract() == 0.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_moments() {
+        let mut h = Histogram::default();
+        for v in [1u64, 2, 3, 4, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.n, 5);
+        assert_eq!(h.max, 100);
+        assert!((h.mean() - 22.0).abs() < 1e-9);
+        assert!(h.quantile(0.5) >= 2);
+        assert!(h.quantile(1.0) >= 100);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row("r1", vec![1.0, 0.5]);
+        let md = t.to_markdown();
+        assert!(md.contains("| r1 | 1 | 0.5000 |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,a,b\n"));
+        assert!(csv.contains("r1,1,0.5"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row("r1", vec![1.0]);
+    }
+}

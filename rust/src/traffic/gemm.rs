@@ -1,0 +1,219 @@
+//! Tiled-GEMM trace generator.
+//!
+//! Models a cuDNN-style GEMM kernel: the output is partitioned into
+//! `tm x tn` tiles; each tile walks the K dimension in `tk` chunks,
+//! loading an A sub-tile and a B sub-tile per chunk (the threadblock
+//! shared-memory staging on the paper's Fermi GPU), computing
+//! `tm*tn*tk` MACs, and storing the output tile at the end.
+//!
+//! Addressing is delegated to a trait so `layers.rs` can reuse the tile
+//! walk for conv-as-im2col (NCHW feature maps, cin-major weight rows)
+//! while Fig 3's raw matmul uses dense row-major arrays.
+
+use crate::model::{AddressMap, Allocator};
+use crate::sim::config::{GpuConfig, LINE};
+use crate::sim::core::Slot;
+use crate::util::ceil_div;
+
+use super::Workload;
+
+/// Tile geometry + instruction mix (calibration knobs, DESIGN.md §5).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmMix {
+    pub tm: usize,
+    pub tn: usize,
+    pub tk: usize,
+    /// Warp-level compute instructions per 32 MACs (1.0 = pure FMA).
+    pub compute_scale: f64,
+}
+
+impl GemmMix {
+    /// cuDNN-style conv GEMM: 32x32x32 tiles (high arithmetic
+    /// intensity — the CONV layers of Fig 10).
+    pub const CONV: GemmMix = GemmMix { tm: 32, tn: 32, tk: 32, compute_scale: 0.75 };
+    /// Fermi-era SGEMM: 16x16 threadblock tiles (the bandwidth-hungry
+    /// matmul of Fig 3). compute_scale 0.5 calibrates to measured Fermi
+    /// SGEMM efficiency (~50% of issue peak goes to FMA; the rest is
+    /// address arithmetic + synchronization that overlaps memory).
+    pub const SGEMM: GemmMix = GemmMix { tm: 16, tn: 16, tk: 16, compute_scale: 0.5 };
+}
+
+/// Per-k-chunk line addresses for the A/B operands and per-tile store
+/// addresses for C. Implementations receive the tile geometry.
+pub trait TileAddressing {
+    fn a_lines(&self, r0: usize, k0: usize, mix: GemmMix, out: &mut Vec<u64>);
+    fn b_lines(&self, k0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>);
+    fn c_lines(&self, r0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>);
+}
+
+/// The generic tile walk: build per-warp programs for a sampled subset
+/// of tiles.
+pub fn build_tiled(
+    name: &str,
+    m: usize,
+    n: usize,
+    k: usize,
+    addr: &dyn TileAddressing,
+    mix: GemmMix,
+    map: AddressMap,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+) -> Workload {
+    let mt = ceil_div(m as u64, mix.tm as u64) as usize;
+    let nt = ceil_div(n as u64, mix.tn as u64) as usize;
+    let nk = ceil_div(k as u64, mix.tk as u64) as usize;
+    let total_tiles = mt * nt;
+    let n_warps = cfg.n_sms * cfg.warps_per_sm;
+    let take = sample_tiles.min(total_tiles).max(1);
+    // Stride through the tile grid so samples cover the whole matrix
+    // (different rows AND columns — preserves B-tile reuse patterns).
+    let step = (total_tiles as f64 / take as f64).max(1.0);
+    let compute_per_chunk = ((mix.tm * mix.tn * mix.tk / 32) as f64 * mix.compute_scale)
+        .round()
+        .max(1.0) as u32;
+
+    let mut programs: Vec<Vec<Slot>> = vec![Vec::new(); n_warps];
+    let mut scratch = Vec::with_capacity(128);
+    for i in 0..take {
+        let tile = (i as f64 * step) as usize;
+        let (tr, tc) = (tile / nt, tile % nt);
+        let prog = &mut programs[super::warp_slot(i, cfg)];
+        for kc in 0..nk {
+            scratch.clear();
+            addr.a_lines(tr * mix.tm, kc * mix.tk, mix, &mut scratch);
+            addr.b_lines(kc * mix.tk, tc * mix.tn, mix, &mut scratch);
+            for &l in &scratch {
+                prog.push(Slot::Load(l));
+            }
+            prog.push(Slot::Compute(compute_per_chunk));
+        }
+        scratch.clear();
+        addr.c_lines(tr * mix.tm, tc * mix.tn, mix, &mut scratch);
+        for &l in &scratch {
+            prog.push(Slot::Store(l));
+        }
+    }
+    Workload {
+        programs,
+        map,
+        sampled_fraction: take as f64 / total_tiles as f64,
+        name: name.to_string(),
+    }
+}
+
+/// Dense row-major addressing (Fig 3 raw matmul; fully encrypted
+/// operands — no SE structure).
+struct DenseAddr {
+    a_base: u64,
+    b_base: u64,
+    c_base: u64,
+    k: usize,
+    n: usize,
+    m: usize,
+}
+
+impl TileAddressing for DenseAddr {
+    fn a_lines(&self, r0: usize, k0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        for r in r0..(r0 + mix.tm).min(self.m) {
+            let byte = (r * self.k + k0) * 4;
+            for l in 0..ceil_div((mix.tk * 4) as u64, LINE).max(1) {
+                out.push((self.a_base + byte as u64 + l * LINE) & !(LINE - 1));
+            }
+        }
+    }
+
+    fn b_lines(&self, k0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        for kk in k0..(k0 + mix.tk).min(self.k) {
+            let byte = (kk * self.n + c0) * 4;
+            for l in 0..ceil_div((mix.tn * 4) as u64, LINE).max(1) {
+                out.push((self.b_base + byte as u64 + l * LINE) & !(LINE - 1));
+            }
+        }
+    }
+
+    fn c_lines(&self, r0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        for r in r0..(r0 + mix.tm).min(self.m) {
+            let byte = (r * self.n + c0) * 4;
+            for l in 0..ceil_div((mix.tn * 4) as u64, LINE).max(1) {
+                out.push((self.c_base + byte as u64 + l * LINE) & !(LINE - 1));
+            }
+        }
+    }
+}
+
+/// Fig 3 workload: `m x k` times `k x n` matmul, everything encrypted
+/// (input matrices and the product are all model/intermediate data).
+pub fn matmul_workload(
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+) -> Workload {
+    let mut alloc = Allocator::new();
+    let a_base = alloc.emalloc("A", (m * k * 4) as u64);
+    let b_base = alloc.emalloc("B", (k * n * 4) as u64);
+    let c_base = alloc.emalloc("C", (m * n * 4) as u64);
+    let map = alloc.finish();
+    let addr = DenseAddr { a_base, b_base, c_base, k, n, m };
+    build_tiled(
+        &format!("matmul_{m}x{k}x{n}"),
+        m,
+        n,
+        k,
+        &addr,
+        GemmMix::SGEMM,
+        map,
+        cfg,
+        sample_tiles,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_walk_counts() {
+        let cfg = GpuConfig::default();
+        let w = matmul_workload(128, 128, 128, &cfg, usize::MAX);
+        // 8x8 tiles of 16x16, 8 k-chunks each (SGEMM mix).
+        assert!((w.sampled_fraction - 1.0).abs() < 1e-9);
+        let loads = w
+            .programs
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s, Slot::Load(_)))
+            .count();
+        // 64 tiles * 8 chunks * (16 A + 16 B) lines.
+        assert_eq!(loads, 64 * 8 * 32);
+        let stores = w
+            .programs
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s, Slot::Store(_)))
+            .count();
+        assert_eq!(stores, 64 * 16);
+    }
+
+    #[test]
+    fn sampling_reduces_work_proportionally() {
+        let cfg = GpuConfig::default();
+        let full = matmul_workload(512, 512, 512, &cfg, usize::MAX);
+        let half = matmul_workload(512, 512, 512, &cfg, 512);
+        assert!((half.sampled_fraction - 0.5).abs() < 0.01);
+        let ratio = half.total_slots() as f64 / full.total_slots() as f64;
+        assert!((ratio - 0.5).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn all_addresses_inside_regions() {
+        let cfg = GpuConfig::default();
+        let w = matmul_workload(256, 256, 256, &cfg, usize::MAX);
+        for slot in w.programs.iter().flatten() {
+            if let Slot::Load(a) | Slot::Store(a) = slot {
+                assert!(w.map.find(*a).is_some(), "addr {a} outside regions");
+            }
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! Layer-level traffic: CONV (im2col GEMM over NCHW feature maps and
+//! cin-major weight rows), POOL (streaming), FC (GEMV), and the SE
+//! address-map construction that marks encrypted channels/rows
+//! (paper §3.1.2 Figure 5).
+
+use crate::model::zoo::Layer;
+use crate::model::{AddressMap, Allocator};
+use crate::sim::config::{GpuConfig, LINE};
+use crate::sim::core::Slot;
+use crate::util::ceil_div;
+use crate::util::rng::Rng;
+
+use super::gemm::{build_tiled, GemmMix, TileAddressing};
+use super::Workload;
+
+/// Default tile sample budget per layer (≈4 tiles per warp).
+pub const DEFAULT_SAMPLE_TILES: usize = 2880;
+
+/// Instruction-mix calibration (DESIGN.md §5): pool kernels on GPUs are
+/// index-arithmetic heavy, conv GEMM is FMA-dense.
+pub const POOL_COMPUTE_PER_LINE: u32 = 24;
+pub const FC_COMPUTE_PER_LINE: u32 = 2;
+
+/// SE row selection for a synthetic (untrained) layer: a deterministic
+/// pseudo-random subset of `round(ratio*n)` rows. For trained models
+/// the real l1 ranking is used (`model::importance`); for the
+/// *performance* figures only the membership pattern matters.
+pub fn synthetic_row_mask(n: usize, ratio: f64, seed: u64) -> Vec<bool> {
+    let n_enc = (n as f64 * ratio).round() as usize;
+    let mut rng = Rng::seeded(seed ^ 0x5ea1);
+    let idx = rng.sample_indices(n, n_enc.min(n));
+    let mut mask = vec![false; n];
+    for i in idx {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Conv addressing: im2col GEMM with
+///   A = input FM, NCHW channel stripes (channel = K-index % cin),
+///   B = weights, cin-major kernel rows (row = K-index % cin),
+///   C = output FM, NCHW channel stripes (channel = N-index).
+struct ConvAddr {
+    in_base: u64,
+    w_base: u64,
+    out_base: u64,
+    in_stripe: u64,
+    w_stripe: u64,
+    out_stripe: u64,
+    cin: usize,
+    cout: usize,
+    m: usize,
+    k: usize,
+}
+
+impl TileAddressing for ConvAddr {
+    fn a_lines(&self, r0: usize, k0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        // Column k reads tm*4 bytes of channel k%cin, at a spatial
+        // offset shifted by the (dh,dw) tap k/cin.
+        let lines = crate::util::ceil_div((mix.tm * 4) as u64, LINE).max(1);
+        for kk in k0..(k0 + mix.tk).min(self.k) {
+            let c = kk % self.cin;
+            let shift = (kk / self.cin) as u64;
+            let off = ((r0 as u64 * 4) + shift * LINE) % self.in_stripe;
+            for l in 0..lines {
+                let a = (self.in_base + c as u64 * self.in_stripe
+                    + (off + l * LINE) % self.in_stripe)
+                    & !(LINE - 1);
+                out.push(a);
+            }
+        }
+    }
+
+    fn b_lines(&self, k0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        // Column block [c0, c0+tn) of kernel row k%cin, tap k/cin.
+        let lines = crate::util::ceil_div((mix.tn * 4) as u64, LINE).max(1);
+        for kk in k0..(k0 + mix.tk).min(self.k) {
+            let row = kk % self.cin;
+            let tap = (kk / self.cin) as u64;
+            let off = (tap * self.cout as u64 + c0 as u64) * 4 % self.w_stripe;
+            for l in 0..lines {
+                let a = (self.w_base + row as u64 * self.w_stripe
+                    + (off + l * LINE) % self.w_stripe)
+                    & !(LINE - 1);
+                out.push(a);
+            }
+        }
+    }
+
+    fn c_lines(&self, r0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>) {
+        // Output tile: tn channels, tm positions each.
+        let lines = crate::util::ceil_div((mix.tm * 4) as u64, LINE).max(1);
+        for co in c0..(c0 + mix.tn).min(self.cout) {
+            let off = (r0 as u64 * 4) % self.out_stripe;
+            for l in 0..lines {
+                let a = (self.out_base + co as u64 * self.out_stripe
+                    + (off + l * LINE) % self.out_stripe)
+                    & !(LINE - 1);
+                out.push(a);
+            }
+        }
+        let _ = self.m;
+    }
+}
+
+/// Build a CONV layer workload with SE masks at `ratio` (1.0 = fully
+/// encrypted, 0.0 = plaintext). `out_mask_ratio` marks output channels
+/// (the next layer's encrypted input channels).
+pub fn conv_workload(
+    layer: &Layer,
+    ratio: f64,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+    seed: u64,
+) -> Workload {
+    let Layer::Conv { cin, cout, k, h, w, .. } = *layer else {
+        panic!("conv_workload on {layer:?}")
+    };
+    let (ho, wo) = layer.out_hw();
+    let m = ho * wo;
+    let kdim = k * k * cin;
+
+    let in_stripe = crate::util::round_up((h * w * 4) as u64, LINE);
+    let w_stripe = crate::util::round_up((k * k * cout * 4) as u64, LINE);
+    let out_stripe = crate::util::round_up((ho * wo * 4) as u64, LINE);
+
+    // SE: encrypted kernel rows ↔ encrypted input channels (§3.1.2).
+    let row_mask = synthetic_row_mask(cin, ratio, seed);
+    let out_mask = synthetic_row_mask(cout, ratio, seed.wrapping_add(1));
+
+    let mut alloc = Allocator::new();
+    let in_base = alloc.alloc_striped("in_fm", in_stripe, row_mask.clone());
+    let w_base = alloc.alloc_striped("weights", w_stripe, row_mask);
+    let out_base = alloc.alloc_striped("out_fm", out_stripe, out_mask);
+    let map = alloc.finish();
+
+    let addr = ConvAddr {
+        in_base,
+        w_base,
+        out_base,
+        in_stripe,
+        w_stripe,
+        out_stripe,
+        cin,
+        cout,
+        m,
+        k: kdim,
+    };
+    build_tiled(
+        &layer.name(),
+        m,
+        cout,
+        kdim,
+        &addr,
+        GemmMix::CONV,
+        map,
+        cfg,
+        sample_tiles,
+    )
+}
+
+/// POOL layer: stream every input line (Load + index-arithmetic
+/// compute), write one output line per `k*k` input lines. The FMs carry
+/// the same SE channel masks as the adjacent convs.
+pub fn pool_workload(
+    layer: &Layer,
+    ratio: f64,
+    cfg: &GpuConfig,
+    sample_lines: usize,
+    seed: u64,
+) -> Workload {
+    let Layer::Pool { c, k, h, w, .. } = *layer else { panic!("pool_workload on {layer:?}") };
+    let (ho, wo) = layer.out_hw();
+    let in_stripe = crate::util::round_up((h * w * 4) as u64, LINE);
+    let out_stripe = crate::util::round_up((ho * wo * 4) as u64, LINE);
+    let mask = synthetic_row_mask(c, ratio, seed);
+
+    let mut alloc = Allocator::new();
+    let in_base = alloc.alloc_striped("in_fm", in_stripe, mask.clone());
+    let out_base = alloc.alloc_striped("out_fm", out_stripe, mask);
+    let map = alloc.finish();
+
+    let lines_per_chan = (in_stripe / LINE) as usize;
+    let total_lines = c * lines_per_chan;
+    let take = sample_lines.min(total_lines).max(1);
+    let step = (total_lines as f64 / take as f64).max(1.0);
+    let n_warps = cfg.n_sms * cfg.warps_per_sm;
+    let mut programs: Vec<Vec<Slot>> = vec![Vec::new(); n_warps];
+    let shrink = (k * k) as u64;
+    for i in 0..take {
+        let g = (i as f64 * step) as usize;
+        let (ch, l) = (g / lines_per_chan, g % lines_per_chan);
+        let prog = &mut programs[super::warp_slot(i, cfg)];
+        prog.push(Slot::Load(in_base + ch as u64 * in_stripe + l as u64 * LINE));
+        prog.push(Slot::Compute(POOL_COMPUTE_PER_LINE));
+        if l as u64 % shrink == 0 {
+            let off = (l as u64 / shrink) * LINE % out_stripe;
+            prog.push(Slot::Store(out_base + ch as u64 * out_stripe + off));
+        }
+    }
+    Workload {
+        programs,
+        map,
+        sampled_fraction: take as f64 / total_lines as f64,
+        name: layer.name(),
+    }
+}
+
+/// FC layer as GEMV: the weight matrix streams through once (no reuse),
+/// the activation vector is small. Final FCs are fully encrypted per
+/// the paper's SE policy; interior FCs use SE row masks.
+pub fn fc_workload(
+    layer: &Layer,
+    ratio: f64,
+    cfg: &GpuConfig,
+    sample_lines: usize,
+    seed: u64,
+) -> Workload {
+    let Layer::Fc { din, dout } = *layer else { panic!("fc_workload on {layer:?}") };
+    let row_stripe = crate::util::round_up((dout * 4) as u64, LINE);
+    let mask = synthetic_row_mask(din, ratio, seed);
+
+    let mut alloc = Allocator::new();
+    let x_base = alloc.alloc_striped("x", LINE, synthetic_row_mask(ceil_div((din * 4) as u64, LINE) as usize, ratio, seed ^ 7));
+    let w_base = alloc.alloc_striped("weights", row_stripe, mask);
+    let y_base = alloc.emalloc("y", (dout * 4) as u64);
+    let map = alloc.finish();
+
+    let lines_per_row = (row_stripe / LINE) as usize;
+    let total_lines = din * lines_per_row;
+    let take = sample_lines.min(total_lines).max(1);
+    let step = (total_lines as f64 / take as f64).max(1.0);
+    let n_warps = cfg.n_sms * cfg.warps_per_sm;
+    let mut programs: Vec<Vec<Slot>> = vec![Vec::new(); n_warps];
+    for i in 0..take {
+        let g = (i as f64 * step) as usize;
+        let (row, l) = (g / lines_per_row, g % lines_per_row);
+        let prog = &mut programs[super::warp_slot(i, cfg)];
+        if l == 0 {
+            // One activation line per 32 weight rows.
+            prog.push(Slot::Load(x_base + (row as u64 / 32) * LINE));
+        }
+        prog.push(Slot::Load(w_base + row as u64 * row_stripe + l as u64 * LINE));
+        prog.push(Slot::Compute(FC_COMPUTE_PER_LINE));
+        if i as u64 % 64 == 0 {
+            prog.push(Slot::Store(y_base + (i as u64 / 64) * LINE % ((dout as u64 * 4).max(LINE))));
+        }
+    }
+    Workload {
+        programs,
+        map,
+        sampled_fraction: take as f64 / total_lines as f64,
+        name: layer.name(),
+    }
+}
+
+/// Build a workload for any layer kind with the paper's SE policy
+/// applied network-wide: `layer_idx` decides whether SE may apply
+/// (first two convs, last conv, last FC stay fully encrypted).
+pub fn layer_workload(
+    layer: &Layer,
+    se_ratio: Option<f64>, // None = full encryption (no SE)
+    cfg: &GpuConfig,
+    sample: usize,
+    seed: u64,
+) -> Workload {
+    let ratio = se_ratio.unwrap_or(1.0);
+    match layer {
+        Layer::Conv { .. } => conv_workload(layer, ratio, cfg, sample, seed),
+        Layer::Pool { .. } => pool_workload(layer, ratio, cfg, sample * 64, seed),
+        Layer::Fc { .. } => fc_workload(layer, ratio, cfg, sample * 16, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn synthetic_mask_counts() {
+        for (n, r) in [(64usize, 0.5f64), (128, 0.25), (7, 0.5), (100, 0.0), (100, 1.0)] {
+            let mask = synthetic_row_mask(n, r, 42);
+            let got = mask.iter().filter(|&&m| m).count();
+            assert_eq!(got, (n as f64 * r).round() as usize);
+        }
+        // Deterministic.
+        assert_eq!(synthetic_row_mask(64, 0.5, 7), synthetic_row_mask(64, 0.5, 7));
+        assert_ne!(synthetic_row_mask(64, 0.5, 7), synthetic_row_mask(64, 0.5, 8));
+    }
+
+    #[test]
+    fn conv_workload_se_reduces_encrypted_fraction() {
+        let cfg = GpuConfig::default();
+        let layer = zoo::fig10_conv_layers()[0];
+        let full = conv_workload(&layer, 1.0, &cfg, 64, 1);
+        let half = conv_workload(&layer, 0.5, &cfg, 64, 1);
+        assert!(full.map.encrypted_fraction() > 0.99);
+        let f = half.map.encrypted_fraction();
+        assert!((0.4..0.6).contains(&f), "fraction {f}");
+    }
+
+    #[test]
+    fn conv_addresses_stay_in_regions() {
+        let cfg = GpuConfig::default();
+        let layer = Layer::Conv { cin: 16, cout: 32, k: 3, stride: 1, h: 16, w: 16 };
+        let w = conv_workload(&layer, 0.5, &cfg, usize::MAX, 3);
+        for slot in w.programs.iter().flatten() {
+            if let Slot::Load(a) | Slot::Store(a) = slot {
+                assert!(w.map.find(*a).is_some(), "addr {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_workload_is_memory_heavy() {
+        let cfg = GpuConfig::default();
+        let layer = zoo::fig11_pool_layers()[0];
+        let w = pool_workload(&layer, 0.5, &cfg, 4096, 2);
+        let (mut mem, mut comp) = (0u64, 0u64);
+        for s in w.programs.iter().flatten() {
+            match s {
+                Slot::Compute(n) => comp += *n as u64,
+                _ => mem += 1,
+            }
+        }
+        let per_line = comp as f64 / mem as f64;
+        assert!((16.0..32.0).contains(&per_line), "compute/line {per_line}");
+    }
+
+    #[test]
+    fn fc_workload_streams_weights() {
+        let cfg = GpuConfig::default();
+        let layer = Layer::Fc { din: 4096, dout: 4096 };
+        let w = fc_workload(&layer, 1.0, &cfg, 8192, 4);
+        let loads = w
+            .programs
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s, Slot::Load(_)))
+            .count();
+        assert!(loads >= 8192, "loads {loads}");
+    }
+}

@@ -1,0 +1,97 @@
+//! Workload trace generation: the memory-access streams of tiled
+//! CONV/POOL/FC kernels (the paper's PyTorch+cuDNN workloads, DESIGN.md
+//! §1) plus the raw GEMM microbenchmark of Fig 3.
+//!
+//! A workload compiles to one instruction stream per warp
+//! ([`crate::sim::core::Slot`] sequences) plus the SE address map the
+//! memory controllers consult. Large layers are *wave-sampled*: only
+//! `sample_tiles` tiles are traced (spread round-robin over all warps);
+//! per-layer cycles are scaled back by the sampled fraction when
+//! whole-network latency is reported (DESIGN.md §5).
+
+pub mod gemm;
+pub mod layers;
+pub mod network;
+
+use crate::model::AddressMap;
+use crate::sim::core::{AccessStream, Slot};
+
+/// A ready-to-run workload.
+pub struct Workload {
+    /// One program per warp (length = n_sms * warps_per_sm).
+    pub programs: Vec<Vec<Slot>>,
+    pub map: AddressMap,
+    /// Fraction of the layer's tiles that was traced (1.0 = exhaustive).
+    pub sampled_fraction: f64,
+    /// Human label for tables.
+    pub name: String,
+}
+
+impl Workload {
+    pub fn streams(&self) -> Vec<Box<dyn AccessStream>> {
+        self.programs
+            .iter()
+            .map(|p| Box::new(p.clone().into_iter()) as Box<dyn AccessStream>)
+            .collect()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.programs.iter().map(|p| p.len()).sum()
+    }
+
+    /// Total instructions the traced programs will issue.
+    pub fn total_instrs(&self) -> u64 {
+        self.programs
+            .iter()
+            .flatten()
+            .map(|s| match s {
+                Slot::Compute(n) => *n as u64,
+                _ => 1,
+            })
+            .sum()
+    }
+}
+
+/// Work-item -> warp assignment, interleaved across SMs first so a
+/// small sample still occupies every SM (then across warps within an
+/// SM).
+pub fn warp_slot(i: usize, cfg: &crate::sim::GpuConfig) -> usize {
+    let n_warps = cfg.n_sms * cfg.warps_per_sm;
+    let slot = i % n_warps;
+    let sm = slot % cfg.n_sms;
+    let w = slot / cfg.n_sms;
+    sm * cfg.warps_per_sm + w
+}
+
+/// Run one workload under a scheme and return the stats.
+pub fn simulate(
+    workload: &Workload,
+    cfg: crate::sim::GpuConfig,
+) -> crate::sim::SimStats {
+    let map = std::sync::Arc::new(workload.map.clone());
+    let mut gpu = crate::sim::Gpu::new(cfg, map, workload.streams());
+    gpu.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{GpuConfig, Scheme};
+
+    #[test]
+    fn fig3_gemm_smoke_ipc_ordering() {
+        // Small GEMM: Baseline must beat Direct, and SEAL must sit in
+        // between (all-encrypted map: SE off here).
+        let w = gemm::matmul_workload(1024, 512, 512, &GpuConfig::default(), 720);
+        let base = simulate(&w, GpuConfig::default().with_scheme(Scheme::BASELINE));
+        let dir = simulate(&w, GpuConfig::default().with_scheme(Scheme::DIRECT));
+        assert!(!base.hit_max_cycles && !dir.hit_max_cycles);
+        assert_eq!(base.instrs, dir.instrs);
+        assert!(
+            base.ipc() > dir.ipc() * 1.2,
+            "base {} direct {}",
+            base.ipc(),
+            dir.ipc()
+        );
+    }
+}

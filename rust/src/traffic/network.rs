@@ -1,0 +1,230 @@
+//! Whole-network simulation: run every layer of a `zoo::Network` under
+//! a scheme, combine per-layer cycles into inference latency and
+//! whole-run IPC (paper §4.3 methodology; wave sampling per DESIGN.md
+//! §5 — each layer's measured cycles are scaled back by its sampled
+//! fraction).
+
+use crate::model::zoo::{Layer, Network};
+use crate::sim::{GpuConfig, Scheme, SimStats};
+
+use super::layers::{layer_workload, DEFAULT_SAMPLE_TILES};
+
+/// Combined whole-network result.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkRun {
+    /// Estimated full-inference cycles (sampled cycles / fraction).
+    pub latency_cycles: f64,
+    /// Instruction-weighted IPC across layers.
+    pub ipc: f64,
+    /// Aggregated memory-access counts by class (scaled to full run).
+    pub plain_accesses: f64,
+    pub enc_accesses: f64,
+    pub ctr_accesses: f64,
+    pub per_layer: Vec<(String, SimStats, f64)>,
+}
+
+/// The paper's SE policy for a whole network (§3.4.1): the first two
+/// CONVs, the last CONV and the last FC are always fully encrypted; SE
+/// applies to interior layers. POOL layers between convs carry their
+/// producer's mask (interior => SE).
+pub fn layer_se_ratio(net: &Network, idx: usize, ratio: f64) -> Option<f64> {
+    let conv_ids: Vec<usize> = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l, Layer::Conv { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let fc_last = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l, Layer::Fc { .. }))
+        .map(|(i, _)| i)
+        .next_back();
+    let protected = |i: usize| -> bool {
+        conv_ids.first() == Some(&i)
+            || conv_ids.get(1) == Some(&i)
+            || conv_ids.last() == Some(&i)
+            || fc_last == Some(i)
+    };
+    if protected(idx) {
+        None
+    } else {
+        Some(ratio)
+    }
+}
+
+/// Simulate an entire network under `scheme`. `se_ratio` is the SE
+/// encryption ratio (used only when `scheme.smart`).
+pub fn run_network(
+    net: &Network,
+    scheme: Scheme,
+    se_ratio: f64,
+    cfg_base: &GpuConfig,
+    sample_tiles: usize,
+) -> NetworkRun {
+    let mut out = NetworkRun::default();
+    let mut total_instrs = 0.0;
+    for (idx, layer) in net.layers.iter().enumerate() {
+        let ratio = if scheme.smart {
+            layer_se_ratio(net, idx, se_ratio)
+        } else {
+            None // full encryption
+        };
+        let w = layer_workload(layer, ratio, cfg_base, sample_tiles, idx as u64 + 1);
+        let cfg = cfg_base.clone().with_scheme(scheme);
+        let stats = super::simulate(&w, cfg);
+        let scale = 1.0 / w.sampled_fraction.max(1e-12);
+        out.latency_cycles += stats.cycles as f64 * scale;
+        total_instrs += stats.instrs as f64 * scale;
+        out.plain_accesses += (stats.mc.plain_reads + stats.mc.plain_writes) as f64 * scale;
+        out.enc_accesses += (stats.mc.enc_reads + stats.mc.enc_writes) as f64 * scale;
+        out.ctr_accesses += (stats.mc.ctr_reads + stats.mc.ctr_writes) as f64 * scale;
+        out.per_layer.push((w.name.clone(), stats, scale));
+    }
+    // Time-weighted whole-run IPC (the paper's metric): total issued
+    // instructions over total cycles.
+    out.ipc = if out.latency_cycles > 0.0 { total_instrs / out.latency_cycles } else { 0.0 };
+    out
+}
+
+/// Run all six paper schemes over a network; returns (name, run) rows.
+pub fn run_all_schemes(
+    net: &Network,
+    se_ratio: f64,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+) -> Vec<(&'static str, NetworkRun)> {
+    Scheme::ALL_SIX
+        .iter()
+        .map(|(name, scheme)| (*name, run_network(net, *scheme, se_ratio, cfg, sample_tiles)))
+        .collect()
+}
+
+/// Summary row cached to results/ so Fig 13/14/15 benches don't re-run
+/// the same whole-network simulations.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub scheme: String,
+    pub ipc: f64,
+    pub latency: f64,
+    pub plain: f64,
+    pub enc: f64,
+    pub ctr: f64,
+}
+
+/// Run (or load cached) all-six-schemes summaries for a network.
+pub fn cached_all_schemes(
+    net_name: &str,
+    se_ratio: f64,
+    sample_tiles: usize,
+) -> Vec<RunSummary> {
+    use crate::util::json::Json;
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/netruns_{net_name}_{sample_tiles}_{:.0}.json", se_ratio * 100.0);
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(j) = Json::parse(&text) {
+            if let Some(arr) = j.as_arr() {
+                return arr
+                    .iter()
+                    .map(|r| RunSummary {
+                        scheme: r.req("scheme").as_str().unwrap().to_string(),
+                        ipc: r.req("ipc").as_f64().unwrap(),
+                        latency: r.req("latency").as_f64().unwrap(),
+                        plain: r.req("plain").as_f64().unwrap(),
+                        enc: r.req("enc").as_f64().unwrap(),
+                        ctr: r.req("ctr").as_f64().unwrap(),
+                    })
+                    .collect();
+            }
+        }
+    }
+    let net = crate::model::zoo::by_name(net_name).expect("network");
+    let cfg = crate::sim::GpuConfig::default();
+    let rows = run_all_schemes(&net, se_ratio, &cfg, sample_tiles);
+    let out: Vec<RunSummary> = rows
+        .iter()
+        .map(|(s, r)| RunSummary {
+            scheme: s.to_string(),
+            ipc: r.ipc,
+            latency: r.latency_cycles,
+            plain: r.plain_accesses,
+            enc: r.enc_accesses,
+            ctr: r.ctr_accesses,
+        })
+        .collect();
+    let j = Json::arr(out.iter().map(|r| {
+        Json::obj(vec![
+            ("scheme", Json::str(&r.scheme)),
+            ("ipc", Json::num(r.ipc)),
+            ("latency", Json::num(r.latency)),
+            ("plain", Json::num(r.plain)),
+            ("enc", Json::num(r.enc)),
+            ("ctr", Json::num(r.ctr)),
+        ])
+    }));
+    let _ = std::fs::write(&path, j.to_string());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn tiny_net() -> Network {
+        Network {
+            name: "tiny".into(),
+            layers: vec![
+                Layer::Conv { cin: 16, cout: 16, k: 3, stride: 1, h: 16, w: 16 },
+                Layer::Conv { cin: 16, cout: 16, k: 3, stride: 1, h: 16, w: 16 },
+                Layer::Conv { cin: 16, cout: 32, k: 3, stride: 1, h: 16, w: 16 },
+                Layer::Pool { c: 32, k: 2, stride: 2, h: 16, w: 16 },
+                Layer::Conv { cin: 32, cout: 32, k: 3, stride: 1, h: 8, w: 8 },
+                Layer::Fc { din: 2048, dout: 10 },
+            ],
+        }
+    }
+
+    #[test]
+    fn se_policy_matches_paper() {
+        let net = tiny_net();
+        assert_eq!(layer_se_ratio(&net, 0, 0.5), None); // first conv
+        assert_eq!(layer_se_ratio(&net, 1, 0.5), None); // second conv
+        assert_eq!(layer_se_ratio(&net, 2, 0.5), Some(0.5)); // interior
+        assert_eq!(layer_se_ratio(&net, 3, 0.5), Some(0.5)); // pool
+        assert_eq!(layer_se_ratio(&net, 4, 0.5), None); // last conv
+        assert_eq!(layer_se_ratio(&net, 5, 0.5), None); // last fc
+    }
+
+    #[test]
+    fn baseline_beats_direct_on_tiny_net() {
+        let net = tiny_net();
+        let cfg = GpuConfig::default();
+        let base = run_network(&net, Scheme::BASELINE, 0.5, &cfg, 64);
+        let dir = run_network(&net, Scheme::DIRECT, 0.5, &cfg, 64);
+        assert!(dir.latency_cycles > base.latency_cycles);
+        assert!(dir.enc_accesses > 0.0);
+        assert_eq!(base.enc_accesses, 0.0);
+    }
+
+    #[test]
+    fn vgg_first_conv_runs_sampled() {
+        let net = zoo::vgg16();
+        let cfg = GpuConfig::default();
+        // Just the heaviest layer, tightly sampled: must finish quickly
+        // and report a sane IPC.
+        let w = super::super::layers::layer_workload(
+            &net.layers[2],
+            Some(0.5),
+            &cfg,
+            256,
+            3,
+        );
+        assert!(w.sampled_fraction < 0.2);
+        let stats = super::super::simulate(&w, cfg.with_scheme(Scheme::SEAL));
+        assert!(!stats.hit_max_cycles);
+        assert!(stats.ipc() > 0.5, "ipc {}", stats.ipc());
+    }
+}

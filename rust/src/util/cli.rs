@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `seal <subcommand> [--flag value]... [--switch]...`.
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Every `--key` followed by a non-flag token is a
+    /// valued flag; a `--key` followed by another flag (or nothing) is a
+    /// boolean switch, unless `--key=value` form is used.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --model vgg16 --scheme seal --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert_eq!(a.get("scheme"), Some("seal"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_numbers() {
+        let a = parse("bench --ratio=0.5 --cycles 100000");
+        assert_eq!(a.get_f64("ratio", 0.0), 0.5);
+        assert_eq!(a.get_u64("cycles", 0), 100_000);
+        assert_eq!(a.get_u64("missing", 7), 7);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run one two --k v three");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+}

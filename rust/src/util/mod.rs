@@ -1,0 +1,39 @@
+//! Infrastructure substrates built from scratch (offline environment:
+//! no serde / clap / rand crates available).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Round `a` up to a multiple of `m`.
+pub fn round_up(a: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    a.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 128), 0);
+        assert_eq!(round_up(1, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+}

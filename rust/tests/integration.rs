@@ -1,0 +1,192 @@
+//! Integration tests across runtime + artifacts + simulator + security.
+//!
+//! These need `make artifacts` to have run (skipped gracefully
+//! otherwise so `cargo test` works in a fresh checkout).
+
+use std::path::Path;
+
+use seal::coordinator::SecureModelStore;
+use seal::model::importance::{build_mask, encrypted_fraction, se_row_selection};
+use seal::model::manifest::{Dataset, Manifest};
+use seal::runtime::{lit_f32, Runtime};
+use seal::security::{SecurityCtx, SubstituteKind, TrainCfg};
+use seal::sim::{GpuConfig, Scheme};
+use seal::traffic::{self, layers};
+
+fn artifacts() -> Option<Manifest> {
+    Manifest::load(Path::new("artifacts")).ok()
+}
+
+#[test]
+fn manifest_layouts_are_consistent() {
+    let Some(man) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    assert_eq!(man.models.len(), 3);
+    for m in &man.models {
+        let total: usize = m.params.iter().map(|p| p.size).sum();
+        assert_eq!(total, m.theta_len, "{}", m.name);
+        let theta = man.theta_init(&m.name).unwrap();
+        assert_eq!(theta.len(), m.theta_len);
+        // Row partition covers every element exactly once per tensor.
+        for p in &m.params {
+            if p.row_axis.is_some() {
+                let mut seen = vec![false; p.size];
+                for r in 0..p.n_rows() {
+                    for i in p.row_indices(r) {
+                        assert!(!seen[i], "{} row {r} idx {i}", p.name);
+                        seen[i] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{}", p.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn dataset_splits_load() {
+    let Some(man) = artifacts() else { return };
+    let ds = Dataset::load(&man).unwrap();
+    assert_eq!(ds.y_victim.len(), man.dataset.n_victim);
+    assert_eq!(ds.y_test.len(), man.dataset.n_test);
+    assert!(ds.x_test.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    assert!(ds.y_test.iter().all(|&y| (0..10).contains(&y)));
+}
+
+#[test]
+fn pjrt_matmul_demo_is_numerically_correct() {
+    let Some(man) = artifacts() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&man.hlo_path("matmul_demo.hlo.txt")).unwrap();
+    // 256x256 identity-ish check: A @ I == A for a small probe.
+    let mut a = vec![0.0f32; 256 * 256];
+    let mut eye = vec![0.0f32; 256 * 256];
+    let mut rng = seal::util::rng::Rng::seeded(4);
+    for v in a.iter_mut() {
+        *v = rng.f32() - 0.5;
+    }
+    for i in 0..256 {
+        eye[i * 256 + i] = 1.0;
+    }
+    let out = exe
+        .run(&[lit_f32(&a, &[256, 256]).unwrap(), lit_f32(&eye, &[256, 256]).unwrap()])
+        .unwrap();
+    let got = seal::runtime::to_f32(&out[0]).unwrap();
+    for (g, w) in got.iter().zip(&a) {
+        assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_predict_runs_and_is_deterministic() {
+    let Some(man) = artifacts() else { return };
+    let ds = Dataset::load(&man).unwrap();
+    let mut ctx = SecurityCtx::new(Path::new("artifacts")).unwrap();
+    let theta = man.theta_init("resnet18m").unwrap();
+    let xs = ds.x_test[..ds.image_len() * 16].to_vec();
+    let p1 = ctx.predict("resnet18m", &theta, &xs).unwrap();
+    let p2 = ctx.predict("resnet18m", &theta, &xs).unwrap();
+    assert_eq!(p1, p2);
+    assert_eq!(p1.len(), 16);
+}
+
+#[test]
+fn train_step_reduces_loss_through_pjrt() {
+    let Some(man) = artifacts() else { return };
+    let ds = Dataset::load(&man).unwrap();
+    let mut ctx = SecurityCtx::new(Path::new("artifacts")).unwrap();
+    let theta0 = man.theta_init("resnet18m").unwrap();
+    let mask = vec![1.0f32; theta0.len()];
+    let n = 256 * ds.image_len();
+    let (_, loss_early) = ctx
+        .train("resnet18m", theta0.clone(), &mask, &ds.x_victim[..n], &ds.y_victim[..256], 2, 0.3)
+        .unwrap();
+    let (_, loss_late) = ctx
+        .train("resnet18m", theta0, &mask, &ds.x_victim[..n], &ds.y_victim[..256], 30, 0.3)
+        .unwrap();
+    assert!(
+        loss_late < loss_early,
+        "loss did not fall: {loss_early} -> {loss_late}"
+    );
+}
+
+#[test]
+fn se_mask_fraction_tracks_ratio_on_real_models() {
+    let Some(man) = artifacts() else { return };
+    let info = man.model("vgg16m").unwrap().clone();
+    let theta = man.theta_init("vgg16m").unwrap();
+    let mut last = 0.0;
+    for ratio in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let sel = se_row_selection(&info, &theta, ratio);
+        let f = encrypted_fraction(&info, &sel);
+        assert!(f >= last, "fraction must grow with ratio");
+        last = f;
+    }
+    // ratio 0 still encrypts the protected layers (first/last convs,
+    // final FC, biases).
+    let sel0 = se_row_selection(&info, &theta, 0.0);
+    assert!(encrypted_fraction(&info, &sel0) > 0.0);
+    // ratio 1 encrypts everything.
+    let sel1 = se_row_selection(&info, &theta, 1.0);
+    assert!((encrypted_fraction(&info, &sel1) - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn sealed_store_roundtrips_real_model() {
+    let Some(man) = artifacts() else { return };
+    let info = man.model("resnet34m").unwrap().clone();
+    let theta = man.theta_init("resnet34m").unwrap();
+    let store = SecureModelStore::seal(&info, &theta, 0.5, &[7u8; 16]);
+    assert_eq!(store.decrypt(), theta);
+    assert!(store.encrypted_lines() > 0);
+    assert!(store.encrypted_lines() < store.n_lines());
+}
+
+#[test]
+fn substitute_mask_freezes_known_weights() {
+    let Some(man) = artifacts() else { return };
+    let mut ctx = SecurityCtx::new(Path::new("artifacts")).unwrap();
+    let info = man.model("resnet18m").unwrap().clone();
+    let victim = man.theta_init("resnet18m").unwrap();
+    let cfg = TrainCfg { substitute_steps: 2, aug_rounds: 0, ..Default::default() };
+    let sub = ctx
+        .extract_substitute("resnet18m", &victim, SubstituteKind::Se { ratio: 0.5 }, &cfg)
+        .unwrap();
+    // Known (plaintext, mask=0) weights must equal the victim's.
+    let sel = se_row_selection(&info, &victim, 0.5);
+    let mask = build_mask(&info, &sel);
+    let mut checked = 0;
+    for i in 0..victim.len() {
+        if mask[i] == 0.0 {
+            assert_eq!(sub[i], victim[i], "frozen weight {i} changed");
+            checked += 1;
+        }
+    }
+    assert!(checked > 0);
+}
+
+#[test]
+fn six_schemes_order_sanely_on_conv_traffic() {
+    // Pure-simulator invariant (no artifacts needed): baseline fastest;
+    // SE variants beat their full-encryption versions; SEAL avoids
+    // counter traffic.
+    let cfg = GpuConfig::default();
+    let layer = seal::model::zoo::fig10_conv_layers()[0];
+    let mut results = Vec::new();
+    for (name, scheme) in Scheme::ALL_SIX {
+        let ratio = if scheme.smart { 0.5 } else { 1.0 };
+        let w = layers::conv_workload(&layer, ratio, &cfg, 360, 1);
+        let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
+        results.push((name, s));
+    }
+    let ipc = |n: &str| results.iter().find(|(name, _)| *name == n).unwrap().1.ipc();
+    assert!(ipc("Baseline") > ipc("Direct"));
+    assert!(ipc("Baseline") > ipc("Counter"));
+    assert!(ipc("Direct+SE") > ipc("Direct"));
+    assert!(ipc("Counter+SE") > ipc("Counter"));
+    assert!(ipc("SEAL") >= ipc("Counter+SE") * 0.98);
+    let seal_stats = &results.iter().find(|(n, _)| *n == "SEAL").unwrap().1;
+    assert_eq!(seal_stats.mc.ctr_reads + seal_stats.mc.ctr_writes, 0);
+}
