@@ -1,39 +1,42 @@
 //! Paper Fig 10: normalized IPC of the six schemes on four VGG CONV
 //! layers (64/128/256/512 channels). SE ratio 50% (paper §3.4 default).
+//!
+//! Runs through the parallel sweep engine; results are cached in the
+//! sweep store under results/ and shared with `seal sweep` runs of the
+//! same spec.
 
-use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme};
+use seal::sim::Scheme;
 use seal::stats::Table;
-use seal::traffic::{self, layers};
+use seal::sweep::{store, SweepSpec, SweepTarget};
 
 fn main() {
-    let cfg = GpuConfig::default();
-    let sample = 1440;
+    let spec = SweepSpec {
+        name: "fig10_conv".to_string(),
+        targets: (0..4).map(|index| SweepTarget::ConvLayer { index }).collect(),
+        schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+        ratios: vec![0.5],
+        sample_tiles: 1440,
+        base_seed: 0,
+    };
+    let res = store::load_or_run_expect(&spec);
+
+    let labels: Vec<String> = spec.targets.iter().map(|t| t.label()).collect();
+    let base: Vec<f64> = labels
+        .iter()
+        .map(|l| res.get(l, "Baseline").expect("baseline row").sim.ipc)
+        .collect();
     let mut t = Table::new(
         "Fig 10: CONV-layer IPC normalized to Baseline (SE ratio 0.5)",
         &["conv64", "conv128", "conv256", "conv512"],
     );
-    let layer_set = zoo::fig10_conv_layers();
-    let base: Vec<f64> = layer_set
-        .iter()
-        .enumerate()
-        .map(|(i, l)| {
-            let w = layers::conv_workload(l, 1.0, &cfg, sample, i as u64);
-            traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
-        })
-        .collect();
-    for (name, scheme) in Scheme::ALL_SIX {
-        let vals: Vec<f64> = layer_set
+    for (name, _) in Scheme::ALL_SIX {
+        let vals: Vec<f64> = labels
             .iter()
             .enumerate()
-            .map(|(i, l)| {
-                let ratio = if scheme.smart { 0.5 } else { 1.0 };
-                let w = layers::conv_workload(l, ratio, &cfg, sample, i as u64);
-                let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
-                s.ipc() / base[i]
-            })
+            .map(|(i, l)| res.get(l, name).expect("row").sim.ipc / base[i])
             .collect();
         t.row(name, vals);
     }
     t.emit("fig10_conv_ipc.csv");
+    println!("[sweep store] {}", res.path.display());
 }

@@ -1,40 +1,42 @@
 //! Paper Fig 12: SEAL IPC vs encryption ratio (100% → 0%) for a CONV
 //! and a POOL layer. Paper shape: dropping from 100% to ~50% recovers
 //! most of the loss (CONV 65%→95%, POOL 54%→87% of baseline).
+//!
+//! This is the sweep engine's native shape: one spec, eleven ratio
+//! cells per layer plus the Baseline anchor, all run in parallel.
 
-use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme};
 use seal::stats::Table;
-use seal::traffic::{self, layers};
+use seal::sweep::{store, SweepSpec, SweepTarget};
 
 fn main() {
-    let cfg = GpuConfig::default();
-    let conv = zoo::fig10_conv_layers()[1];
-    let pool = zoo::fig11_pool_layers()[1];
-    let scheme = Scheme::SEAL;
+    let ratios: Vec<f64> = (0..=10).map(|pct| pct as f64 / 10.0).collect();
+    let spec = SweepSpec {
+        name: "fig12_ratio".to_string(),
+        targets: vec![
+            SweepTarget::ConvLayer { index: 1 },
+            SweepTarget::PoolLayer { index: 1 },
+        ],
+        schemes: vec!["Baseline".to_string(), "SEAL".to_string()],
+        ratios,
+        sample_tiles: 1440,
+        base_seed: 0,
+    };
+    let res = store::load_or_run_expect(&spec);
 
-    let conv_base = {
-        let w = layers::conv_workload(&conv, 1.0, &cfg, 1440, 1);
-        traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
-    };
-    let pool_base = {
-        let w = layers::pool_workload(&pool, 1.0, &cfg, 64 * 1440, 1);
-        traffic::simulate(&w, cfg.clone().with_scheme(Scheme::BASELINE)).ipc()
-    };
+    let conv = spec.targets[0].label();
+    let pool = spec.targets[1].label();
+    let conv_base = res.get(&conv, "Baseline").expect("conv baseline").sim.ipc;
+    let pool_base = res.get(&pool, "Baseline").expect("pool baseline").sim.ipc;
     let mut t = Table::new(
         "Fig 12: SEAL IPC vs encryption ratio (normalized to Baseline)",
         &["CONV", "POOL"],
     );
     for pct in (0..=10).rev() {
         let ratio = pct as f64 / 10.0;
-        let wc = layers::conv_workload(&conv, ratio, &cfg, 1440, 1);
-        let sc = traffic::simulate(&wc, cfg.clone().with_scheme(scheme));
-        let wp = layers::pool_workload(&pool, ratio, &cfg, 64 * 1440, 1);
-        let sp = traffic::simulate(&wp, cfg.clone().with_scheme(scheme));
-        t.row(
-            &format!("{}%", pct * 10),
-            vec![sc.ipc() / conv_base, sp.ipc() / pool_base],
-        );
+        let sc = res.get_at(&conv, "SEAL", ratio).expect("conv cell").sim.ipc;
+        let sp = res.get_at(&pool, "SEAL", ratio).expect("pool cell").sim.ipc;
+        t.row(&format!("{}%", pct * 10), vec![sc / conv_base, sp / pool_base]);
     }
     t.emit("fig12_ratio_sweep.csv");
+    println!("[sweep store] {}", res.path.display());
 }

@@ -1,29 +1,32 @@
 //! Paper Fig 13: whole-network IPC for VGG-16 / ResNet-18 / ResNet-34
-//! under all six schemes (normalized to Baseline). Results are cached
-//! under results/ and reused by the Fig 14/15 benches.
+//! under all six schemes (normalized to Baseline). The shared
+//! "networks" sweep store under results/ is reused by the Fig 14/15
+//! benches, so the simulations run once across all three.
 
 use seal::stats::Table;
-use seal::traffic::network::cached_all_schemes;
+use seal::sweep::{store, SweepSpec, PAPER_NETS};
 
 fn main() {
-    let sample = bench_sample();
+    let spec = SweepSpec::paper_networks();
+    let res = store::load_or_run_expect(&spec);
+
     let mut t = Table::new(
-        &format!("Fig 13: whole-network IPC normalized to Baseline (sample {sample})"),
-        &["vgg16", "resnet18", "resnet34"],
+        &format!(
+            "Fig 13: whole-network IPC normalized to Baseline (sample {})",
+            spec.sample_tiles
+        ),
+        &PAPER_NETS,
     );
-    let nets = ["vgg16", "resnet18", "resnet34"];
-    let per_net: Vec<_> = nets.iter().map(|n| cached_all_schemes(n, 0.5, sample)).collect();
-    for i in 0..per_net[0].len() {
-        let name = per_net[0][i].scheme.clone();
-        let vals: Vec<f64> = per_net
+    for scheme in &spec.schemes {
+        let vals: Vec<f64> = PAPER_NETS
             .iter()
-            .map(|rows| rows[i].ipc / rows[0].ipc.max(1e-12))
+            .map(|net| {
+                let base = res.get(net, "Baseline").expect("baseline").sim.ipc.max(1e-12);
+                res.get(net, scheme).expect("row").sim.ipc / base
+            })
             .collect();
-        t.row(&name, vals);
+        t.row(scheme, vals);
     }
     t.emit("fig13_overall_ipc.csv");
-}
-
-fn bench_sample() -> usize {
-    std::env::var("SEAL_NET_SAMPLE").ok().and_then(|s| s.parse().ok()).unwrap_or(240)
+    println!("[sweep store] {}", res.path.display());
 }

@@ -3,33 +3,38 @@
 //! Paper shape: Counter adds 31–35% counter accesses; SE removes
 //! 39–45% of encrypted accesses; Counter+SE still pays ~20% counters;
 //! SEAL (ColoE) pays none.
+//!
+//! Reads the shared "networks" sweep store (computed once for
+//! Figs 13/14/15).
 
 use seal::stats::Table;
-use seal::traffic::network::cached_all_schemes;
+use seal::sweep::{store, SweepSpec, PAPER_NETS};
 
 fn main() {
-    let sample = std::env::var("SEAL_NET_SAMPLE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(240);
-    for net in ["vgg16", "resnet18", "resnet34"] {
-        let rows = cached_all_schemes(net, 0.5, sample);
-        let base_total = (rows[0].plain + rows[0].enc + rows[0].ctr).max(1e-12);
+    let spec = SweepSpec::paper_networks();
+    let res = store::load_or_run_expect(&spec);
+
+    for net in PAPER_NETS {
+        let base = res.get(net, "Baseline").expect("baseline");
+        let base_total =
+            (base.sim.plain_accesses + base.sim.enc_accesses + base.sim.ctr_accesses).max(1e-12);
         let mut t = Table::new(
             &format!("Fig 14 ({net}): memory accesses normalized to Baseline"),
             &["unencrypted", "encrypted", "counter", "total"],
         );
-        for r in &rows {
+        for scheme in &spec.schemes {
+            let s = &res.get(net, scheme).expect("row").sim;
             t.row(
-                &r.scheme,
+                scheme,
                 vec![
-                    r.plain / base_total,
-                    r.enc / base_total,
-                    r.ctr / base_total,
-                    (r.plain + r.enc + r.ctr) / base_total,
+                    s.plain_accesses / base_total,
+                    s.enc_accesses / base_total,
+                    s.ctr_accesses / base_total,
+                    (s.plain_accesses + s.enc_accesses + s.ctr_accesses) / base_total,
                 ],
             );
         }
         t.emit(&format!("fig14_mem_accesses_{net}.csv"));
     }
+    println!("[sweep store] {}", res.path.display());
 }

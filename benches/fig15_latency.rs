@@ -1,28 +1,28 @@
 //! Paper Fig 15: inference latency normalized to Baseline.
 //! Paper shape: Direct/Counter +39–60%; Direct+SE/Counter+SE +5–18%;
 //! SEAL +5–7%.
+//!
+//! Reads the shared "networks" sweep store (computed once for
+//! Figs 13/14/15).
 
 use seal::stats::Table;
-use seal::traffic::network::cached_all_schemes;
+use seal::sweep::{store, SweepSpec, PAPER_NETS};
 
 fn main() {
-    let sample = std::env::var("SEAL_NET_SAMPLE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(240);
-    let mut t = Table::new(
-        "Fig 15: inference latency normalized to Baseline",
-        &["vgg16", "resnet18", "resnet34"],
-    );
-    let nets = ["vgg16", "resnet18", "resnet34"];
-    let per_net: Vec<_> = nets.iter().map(|n| cached_all_schemes(n, 0.5, sample)).collect();
-    for i in 0..per_net[0].len() {
-        let name = per_net[0][i].scheme.clone();
-        let vals: Vec<f64> = per_net
+    let spec = SweepSpec::paper_networks();
+    let res = store::load_or_run_expect(&spec);
+
+    let mut t = Table::new("Fig 15: inference latency normalized to Baseline", &PAPER_NETS);
+    for scheme in &spec.schemes {
+        let vals: Vec<f64> = PAPER_NETS
             .iter()
-            .map(|rows| rows[i].latency / rows[0].latency.max(1e-12))
+            .map(|net| {
+                let base = res.get(net, "Baseline").expect("baseline").sim.cycles.max(1e-12);
+                res.get(net, scheme).expect("row").sim.cycles / base
+            })
             .collect();
-        t.row(&name, vals);
+        t.row(scheme, vals);
     }
     t.emit("fig15_latency.csv");
+    println!("[sweep store] {}", res.path.display());
 }

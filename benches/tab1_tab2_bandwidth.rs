@@ -1,32 +1,41 @@
 //! Paper Tables 1 & 2: bandwidth of the buses vs the AES engine.
 //! We *measure* the modeled components (GDDR5 channel streaming, AES
-//! engine streaming) and print them against the paper's constants.
+//! engine streaming) through the sweep engine's microbench targets and
+//! print them against the paper's constants.
 
-use seal::sim::aes_engine::AesEngine;
-use seal::sim::config::{AesCfg, DramCfg, LINE};
-use seal::sim::dram::Channel;
+use seal::sim::config::LINE;
 use seal::stats::Table;
+use seal::sweep::{store, SweepSpec, SweepTarget};
 
 const CORE_HZ: f64 = 700e6;
+const N_LINES: u64 = 100_000;
 
 fn main() {
-    // Measured GDDR5 per-channel streaming bandwidth.
-    let mut ch = Channel::new(DramCfg::default());
-    let n = 100_000u64;
-    let mut done = 0;
-    for i in 0..n {
-        done = ch.access(i * LINE, false, 0);
-    }
-    let chan_gbps = (n * LINE) as f64 / (done as f64 / CORE_HZ) / 1e9;
-    let total_gbps = chan_gbps * 6.0;
+    let spec = SweepSpec {
+        name: "tab1_tab2".to_string(),
+        targets: vec![
+            SweepTarget::DramStream { lines: N_LINES },
+            SweepTarget::AesStream { lines: N_LINES },
+        ],
+        schemes: vec!["Baseline".to_string()],
+        ratios: vec![1.0],
+        sample_tiles: 1,
+        base_seed: 0,
+    };
+    // Always measure live (never serve the cached store): this bench's
+    // job is to catch the AES/GDDR model drifting, so stale rows would
+    // defeat the assertion below. The fresh rows still land in the
+    // results store for other consumers.
+    let rows = seal::sweep::run_parallel(&spec, &seal::sweep::RunnerCfg::from_env());
+    let res = store::save(&spec, &rows).expect("write sweep store");
 
-    // Measured AES engine streaming bandwidth.
-    let mut aes = AesEngine::new(AesCfg::default());
-    let mut adone = 0;
-    for _ in 0..n {
-        adone = aes.submit(0);
-    }
-    let aes_gbps = (n * LINE) as f64 / (adone as f64 / CORE_HZ) / 1e9;
+    let gbps = |label: &str| -> f64 {
+        let row = res.get(label, "-").expect("micro row");
+        (N_LINES * LINE) as f64 / (row.sim.cycles / CORE_HZ) / 1e9
+    };
+    let chan_gbps = gbps(&spec.targets[0].label());
+    let aes_gbps = gbps(&spec.targets[1].label());
+    let total_gbps = chan_gbps * 6.0;
 
     let mut t = Table::new(
         "Tables 1+2: modeled bandwidths vs paper",
@@ -45,5 +54,6 @@ fn main() {
         total_gbps / (aes_gbps * 6.0),
         177.4 / 48.0
     );
+    println!("[sweep store] {}", res.path.display());
     assert!((aes_gbps - 8.0).abs() < 0.5, "AES engine model drifted: {aes_gbps}");
 }

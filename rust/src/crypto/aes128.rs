@@ -4,8 +4,10 @@
 //! engine (paper Table 2). It is a straightforward table-free
 //! implementation — clarity over speed; the *hot* path in this repo is
 //! the cycle simulator, not byte encryption, and the serving path
-//! encrypts model bytes once at load. Verified against the RustCrypto
-//! `aes` crate (`tests/crypto_vs_rustcrypto.rs` + unit tests here).
+//! encrypts model bytes once at load. Verified against the official
+//! FIPS-197 / NIST SP 800-38A / AESAVS known-answer vectors in the
+//! unit tests below (the RustCrypto `aes` cross-check is unavailable
+//! offline).
 
 /// AES-128: 10 rounds, 16-byte blocks, 16-byte key.
 #[derive(Clone)]
@@ -197,28 +199,78 @@ fn inv_mix_columns(s: &mut [u8; 16]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use aes::cipher::{BlockDecrypt, BlockEncrypt, KeyInit};
+
+    /// Decode "00112233..." hex into a 16-byte block.
+    fn hex16(s: &str) -> [u8; 16] {
+        assert_eq!(s.len(), 32);
+        let mut out = [0u8; 16];
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap();
+        }
+        out
+    }
+
+    fn assert_kat(key: &str, pt: &str, ct: &str) {
+        let aes = Aes128::new(&hex16(key));
+        let (pt, ct) = (hex16(pt), hex16(ct));
+        assert_eq!(aes.encrypt_block(&pt), ct, "encrypt KAT key={key}");
+        assert_eq!(aes.decrypt_block(&ct), pt, "decrypt KAT key={key}");
+    }
 
     /// FIPS-197 Appendix C.1 known-answer test.
     #[test]
-    fn fips197_vector() {
-        let key: [u8; 16] = (0..16).collect::<Vec<u8>>().try_into().unwrap();
-        let pt: [u8; 16] = [
-            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
-            0xee, 0xff,
-        ];
-        let want: [u8; 16] = [
-            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
-            0xc5, 0x5a,
-        ];
-        let aes = Aes128::new(&key);
-        assert_eq!(aes.encrypt_block(&pt), want);
-        assert_eq!(aes.decrypt_block(&want), pt);
+    fn fips197_appendix_c1() {
+        assert_kat(
+            "000102030405060708090a0b0c0d0e0f",
+            "00112233445566778899aabbccddeeff",
+            "69c4e0d86a7b0430d8cdb78070b4c55a",
+        );
     }
 
-    /// Randomized cross-check against the RustCrypto implementation.
+    /// FIPS-197 Appendix B worked example.
     #[test]
-    fn matches_rustcrypto() {
+    fn fips197_appendix_b() {
+        assert_kat(
+            "2b7e151628aed2a6abf7158809cf4f3c",
+            "3243f6a8885a308d313198a2e0370734",
+            "3925841d02dc09fbdc118597196a0b32",
+        );
+    }
+
+    /// NIST SP 800-38A F.1.1/F.1.2 ECB-AES128 vectors (all four blocks).
+    #[test]
+    fn nist_sp800_38a_ecb() {
+        let key = "2b7e151628aed2a6abf7158809cf4f3c";
+        for (pt, ct) in [
+            ("6bc1bee22e409f96e93d7e117393172a", "3ad77bb40d7a3660a89ecaf32466ef97"),
+            ("ae2d8a571e03ac9c9eb76fac45af8e51", "f5d3d58503b9699de785895a96fdbaaf"),
+            ("30c81c46a35ce411e5fbc1191a0a52ef", "43b1cd7f598ece23881b00e3ed030688"),
+            ("f69f2445df4f9b17ad2b417be66c3710", "7b0c785e27e8ad3f8223207104725dd4"),
+        ] {
+            assert_kat(key, pt, ct);
+        }
+    }
+
+    /// NIST AESAVS GFSbox and KeySbox known-answer vectors.
+    #[test]
+    fn nist_aesavs_sbox_vectors() {
+        // GFSbox: all-zero key, varying plaintext.
+        assert_kat(
+            "00000000000000000000000000000000",
+            "f34481ec3cc627bacd5dc3fb08f273e6",
+            "0336763e966d92595a567cc9ce537f5e",
+        );
+        // KeySbox: varying key, all-zero plaintext.
+        assert_kat(
+            "10a58869d74be5a374cf867cfb473859",
+            "00000000000000000000000000000000",
+            "6d251e6944b051e04eaa6fb4dbf78465",
+        );
+    }
+
+    /// Randomized encrypt/decrypt roundtrip over many keys and blocks.
+    #[test]
+    fn roundtrip_randomized() {
         let mut rng = crate::util::rng::Rng::seeded(0xae5);
         for _ in 0..200 {
             let mut key = [0u8; 16];
@@ -227,12 +279,6 @@ mod tests {
                 *b = rng.below(256) as u8;
             }
             let ours = Aes128::new(&key);
-            let theirs = aes::Aes128::new(&key.into());
-            let mut block = aes::Block::from(pt);
-            theirs.encrypt_block(&mut block);
-            assert_eq!(ours.encrypt_block(&pt), <[u8; 16]>::from(block));
-            theirs.decrypt_block(&mut block);
-            assert_eq!(<[u8; 16]>::from(block), pt);
             assert_eq!(ours.decrypt_block(&ours.encrypt_block(&pt)), pt);
         }
     }

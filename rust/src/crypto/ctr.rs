@@ -156,4 +156,55 @@ mod tests {
             assert_ne!(pad[..16], pad[i * 16..i * 16 + 16]);
         }
     }
+
+    /// Keystream-position test: block `i` of the OTP must be exactly
+    /// AES_k(addr ‖ ctr[0..7] ‖ i) — pins the seed layout so a cipher
+    /// refactor cannot silently shift keystream positions (which would
+    /// break decryption of previously sealed models).
+    #[test]
+    fn otp_keystream_positions_match_seed_layout() {
+        let key = [0x5eu8; 16];
+        let c = CounterModeCipher::new(&key);
+        let aes = crate::crypto::Aes128::new(&key);
+        let addr = 0x1000_0080u64;
+        let ctr = 0x00ab_cdef_0123_4567u64;
+        let pad = c.otp(addr, ctr);
+        for i in 0..(LINE_BYTES / 16) {
+            let mut seed = [0u8; 16];
+            seed[..8].copy_from_slice(&addr.to_le_bytes());
+            seed[8..15].copy_from_slice(&ctr.to_le_bytes()[..7]);
+            seed[15] = i as u8;
+            assert_eq!(
+                pad[i * 16..(i + 1) * 16],
+                aes.encrypt_block(&seed),
+                "keystream block {i}"
+            );
+        }
+    }
+
+    /// The counter is packed into 56 bits: values differing only above
+    /// bit 55 produce the same pad (documents the SGX-style packing).
+    #[test]
+    fn counter_truncates_to_56_bits() {
+        let c = CounterModeCipher::new(&[7u8; 16]);
+        let ctr = 0x00ff_ffff_ffff_fffeu64;
+        assert_eq!(c.otp(0x2000, ctr), c.otp(0x2000, ctr | (1 << 56)));
+        // ...but every bit below 56 matters.
+        assert_ne!(c.otp(0x2000, ctr), c.otp(0x2000, ctr ^ (1 << 55)));
+        assert_ne!(c.otp(0x2000, ctr), c.otp(0x2000, ctr ^ 1));
+    }
+
+    /// Roundtrip across many (addr, ctr) positions, including line
+    /// addresses that only differ in high bits.
+    #[test]
+    fn roundtrip_across_positions() {
+        let mut rng = Rng::seeded(11);
+        let c = CounterModeCipher::new(&[1u8; 16]);
+        let line = rand_line(&mut rng);
+        for addr in [0u64, 0x80, 0x1000, 1 << 32, (1 << 44) + 0x80] {
+            for ctr in [0u64, 1, 2, 1 << 40, (1 << 56) - 1] {
+                assert_eq!(c.apply(addr, ctr, &c.apply(addr, ctr, &line)), line);
+            }
+        }
+    }
 }

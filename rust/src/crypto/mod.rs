@@ -6,9 +6,9 @@
 //! the way back, so the serving examples demonstrate true
 //! confidentiality, not just timing.
 //!
-//! [`aes128`] is a from-scratch AES-128 (verified bit-exactly against
-//! the RustCrypto `aes` crate in tests); [`ctr`] builds the paper's
-//! three line-cipher modes on top of it.
+//! [`aes128`] is a from-scratch AES-128 (verified against the
+//! FIPS-197 / NIST SP 800-38A / AESAVS known-answer vectors in tests);
+//! [`ctr`] builds the paper's three line-cipher modes on top of it.
 
 pub mod aes128;
 pub mod ctr;

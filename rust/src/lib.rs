@@ -7,8 +7,10 @@
 //!   memory simulator ([`sim`]), the SE/ColoE encryption schemes
 //!   ([`sim::encryption`], [`model`]), a functional AES-128 path
 //!   ([`crypto`]), a PJRT runtime that executes the AOT artifacts
-//!   ([`runtime`]), an edge-serving coordinator ([`coordinator`]), and
-//!   the model-extraction security evaluation ([`security`]).
+//!   ([`runtime`]), an edge-serving coordinator ([`coordinator`]), the
+//!   model-extraction security evaluation ([`security`]), and the
+//!   parallel experiment-sweep engine every figure bench runs on
+//!   ([`sweep`]).
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -20,6 +22,7 @@ pub mod runtime;
 pub mod security;
 pub mod sim;
 pub mod stats;
+pub mod sweep;
 pub mod traffic;
 pub mod util;
 

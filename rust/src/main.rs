@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate   one workload (matmul/conv/pool/fc) under one scheme
 //!   network    whole-network inference under all six schemes
+//!   sweep      parallel scheme×network×ratio sweep -> results store
 //!   security   victim training / substitute extraction / attacks
 //!   serve      encrypted-model serving demo (PJRT runtime)
 //!   info       print config + artifact inventory
@@ -20,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => simulate(&args),
         Some("network") => network(&args),
+        Some("sweep") => seal::sweep::cli(&args),
         Some("security") => seal::security::cli(&args),
         Some("serve") => seal::coordinator::cli(&args),
         Some("info") => info(&args),
@@ -42,6 +44,9 @@ USAGE: seal <subcommand> [flags]
   simulate  --workload matmul|conv|pool|fc --scheme <s> [--ratio r]
             [--size n] [--sample t]
   network   --model vgg16|resnet18|resnet34 [--ratio r] [--sample t]
+  sweep     [--networks a,b,c] [--schemes all|s1,s2] [--ratios r1,r2]
+            [--sample t] [--seed s] [--sequential] [--force]
+            (SEAL_SWEEP_THREADS caps the worker pool)
   security  train-victim|extract|attack --model <m> [--ratio r] ...
   serve     --model <m> [--requests n] [--batch b] [--scheme s]
   info

@@ -1,0 +1,119 @@
+//! Parallel experiment-sweep engine (DESIGN.md §4/§6).
+//!
+//! Every performance figure in the paper is a design-space sweep:
+//! schemes × workloads × SE ratios × sample budgets. This subsystem
+//! makes that a first-class, declarative object:
+//!
+//! - [`spec::SweepSpec`] declares the sweep (targets × schemes ×
+//!   ratios + sample budget + base seed) and enumerates its *cells*
+//!   with deterministic per-cell seeding.
+//! - [`runner`] fans cells out across a scoped thread pool; results are
+//!   collected in cell-enumeration order, so parallel output is
+//!   byte-identical to a sequential run (verified by
+//!   `tests/golden_stats.rs`).
+//! - [`store`] persists one structured JSON results store per spec
+//!   under `results/sweep_<name>_<hash>.json` (spec hash → stat rows),
+//!   replacing the per-bench ad-hoc caches. The fig 10–15 and
+//!   tab 1/2 benches all consume it; `seal sweep` drives it from the
+//!   CLI.
+
+pub mod runner;
+pub mod spec;
+pub mod store;
+
+pub use runner::{run_cell, run_parallel, run_sequential, RunnerCfg};
+pub use spec::{CellKey, SweepSpec, SweepTarget, PAPER_NETS};
+pub use store::{CellRow, SimSummary, SweepResults};
+
+use crate::model::zoo;
+use crate::sim::Scheme;
+use crate::stats::Table;
+use crate::util::cli::Args;
+
+/// `seal sweep` — run (or load) a whole-network scheme sweep.
+pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let networks: Vec<String> = args
+        .get_or("networks", &args.get_or("model", "vgg16"))
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    for n in &networks {
+        if zoo::by_name(n).is_none() {
+            anyhow::bail!("unknown network {n:?} (have: vgg16, resnet18, resnet34)");
+        }
+    }
+    let schemes: Vec<String> = match args.get_or("schemes", "all").as_str() {
+        "all" => Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+        list => {
+            let mut out = Vec::new();
+            for s in list.split(',') {
+                let scheme = Scheme::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown scheme {s:?}"))?;
+                out.push(scheme.name().to_string());
+            }
+            out
+        }
+    };
+    let mut ratios = Vec::new();
+    for r in args.get_or("ratios", "0.5").split(',') {
+        ratios.push(
+            r.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--ratios expects numbers, got {r:?}"))?,
+        );
+    }
+    let spec = SweepSpec {
+        name: args.get_or("name", "cli"),
+        targets: networks
+            .iter()
+            .map(|n| SweepTarget::Network { name: n.clone() })
+            .collect(),
+        schemes,
+        ratios,
+        sample_tiles: args.get_u64("sample", 240) as usize,
+        base_seed: args.get_u64("seed", 0),
+    };
+
+    let results = if args.has("sequential") {
+        let rows = run_sequential(&spec);
+        store::save(&spec, &rows)?
+    } else if args.has("force") {
+        let rows = run_parallel(&spec, &RunnerCfg::from_env());
+        store::save(&spec, &rows)?
+    } else {
+        store::load_or_run(&spec)?
+    };
+
+    for net in &networks {
+        let mut t = Table::new(
+            &format!("sweep {net} (sample {})", spec.sample_tiles),
+            &["ratio", "IPC", "norm IPC", "norm latency", "enc accesses", "ctr accesses"],
+        );
+        let base = results
+            .rows
+            .iter()
+            .find(|r| r.target == *net && r.scheme == "Baseline")
+            .map(|r| (r.sim.ipc.max(1e-12), r.sim.cycles.max(1e-12)));
+        for row in results.rows.iter().filter(|r| r.target == *net) {
+            let (bi, bl) = base.unwrap_or((1.0, 1.0));
+            t.row(
+                &row.scheme,
+                vec![
+                    row.ratio,
+                    row.sim.ipc,
+                    row.sim.ipc / bi,
+                    row.sim.cycles / bl,
+                    row.sim.enc_accesses,
+                    row.sim.ctr_accesses,
+                ],
+            );
+        }
+        t.emit(&format!("sweep_{net}.csv"));
+    }
+    println!(
+        "[sweep] {} cells ({}) -> {}",
+        results.rows.len(),
+        if results.from_cache { "cached" } else { "computed" },
+        results.path.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Multi-threaded sweep execution.
+//!
+//! Cells are claimed from a shared atomic cursor by a scoped worker
+//! pool and written into a slot vector indexed by cell number, so the
+//! output order is the spec's deterministic cell-enumeration order no
+//! matter how the OS schedules workers. Each cell's simulation is
+//! itself single-threaded and fully seeded, so a parallel sweep is
+//! byte-identical to a sequential one (asserted in
+//! `tests/golden_stats.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::model::zoo::{self, Layer};
+use crate::sim::aes_engine::AesEngine;
+use crate::sim::config::LINE;
+use crate::sim::dram::Channel;
+use crate::sim::{GpuConfig, Scheme};
+use crate::traffic::{self, gemm, layers, network};
+
+use super::spec::{CellKey, SweepSpec, SweepTarget};
+use super::store::{CellRow, SimSummary};
+
+/// Runner knobs.
+#[derive(Debug, Clone)]
+pub struct RunnerCfg {
+    /// Worker threads (1 = sequential semantics on the pool path).
+    pub threads: usize,
+}
+
+impl RunnerCfg {
+    /// `SEAL_SWEEP_THREADS` override, else the machine's parallelism.
+    pub fn from_env() -> RunnerCfg {
+        let threads = std::env::var("SEAL_SWEEP_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            });
+        RunnerCfg { threads }
+    }
+}
+
+/// Run one cell to completion (deterministic; safe to call from any
+/// thread).
+pub fn run_cell(key: &CellKey, spec: &SweepSpec) -> CellRow {
+    let cfg = GpuConfig::default();
+    let sample = spec.sample_tiles;
+    let seed = key.target.seed(spec.base_seed);
+    let label = key.target.label();
+    match &key.target {
+        SweepTarget::ConvLayer { index } => {
+            let layer = zoo::fig10_conv_layers()[*index];
+            let w = layers::conv_workload(&layer, key.ratio, &cfg, sample, seed);
+            sim_row(key, &label, &w, &cfg, seed)
+        }
+        SweepTarget::PoolLayer { index } => {
+            let layer = zoo::fig11_pool_layers()[*index];
+            let w = layers::pool_workload(&layer, key.ratio, &cfg, sample * 64, seed);
+            sim_row(key, &label, &w, &cfg, seed)
+        }
+        SweepTarget::FcLayer { din, dout } => {
+            let layer = Layer::Fc { din: *din, dout: *dout };
+            let w = layers::fc_workload(&layer, key.ratio, &cfg, sample * 16, seed);
+            sim_row(key, &label, &w, &cfg, seed)
+        }
+        SweepTarget::Matmul { m, k, n } => {
+            let w = gemm::matmul_workload(*m, *k, *n, &cfg, sample);
+            sim_row(key, &label, &w, &cfg, seed)
+        }
+        SweepTarget::Network { name } => {
+            let net = zoo::by_name(name)
+                .unwrap_or_else(|| panic!("unknown network {name:?} in sweep"));
+            let scheme = scheme_of(key);
+            let run = network::run_network_seeded(&net, scheme, key.ratio, &cfg, sample, seed);
+            CellRow {
+                target: label,
+                scheme: key.scheme.clone(),
+                ratio: key.ratio,
+                seed,
+                kind: "network".to_string(),
+                sampled_fraction: 1.0,
+                sim: SimSummary::from_network(&run),
+            }
+        }
+        SweepTarget::DramStream { lines } => {
+            let mut ch = Channel::new(cfg.dram);
+            let mut done = 0;
+            for i in 0..*lines {
+                done = ch.access(i * LINE, false, 0);
+            }
+            micro_row(key, &label, *lines, done)
+        }
+        SweepTarget::AesStream { lines } => {
+            let mut aes = AesEngine::new(cfg.aes);
+            let mut done = 0;
+            for _ in 0..*lines {
+                done = aes.submit(0);
+            }
+            micro_row(key, &label, *lines, done)
+        }
+    }
+}
+
+fn scheme_of(key: &CellKey) -> Scheme {
+    Scheme::parse(&key.scheme)
+        .unwrap_or_else(|| panic!("unknown scheme {:?} in cell", key.scheme))
+}
+
+fn sim_row(
+    key: &CellKey,
+    label: &str,
+    w: &traffic::Workload,
+    cfg: &GpuConfig,
+    seed: u64,
+) -> CellRow {
+    let stats = traffic::simulate(w, cfg.clone().with_scheme(scheme_of(key)));
+    CellRow {
+        target: label.to_string(),
+        scheme: key.scheme.clone(),
+        ratio: key.ratio,
+        seed,
+        kind: "layer".to_string(),
+        sampled_fraction: w.sampled_fraction,
+        sim: SimSummary::from_sim(&stats),
+    }
+}
+
+fn micro_row(key: &CellKey, label: &str, lines: u64, done_cycle: u64) -> CellRow {
+    let sim = SimSummary {
+        cycles: done_cycle as f64,
+        instrs: lines as f64,
+        ipc: if done_cycle == 0 { 0.0 } else { lines as f64 / done_cycle as f64 },
+        ..SimSummary::default()
+    };
+    CellRow {
+        target: label.to_string(),
+        scheme: key.scheme.clone(),
+        ratio: key.ratio,
+        seed: 0,
+        kind: "micro".to_string(),
+        sampled_fraction: 1.0,
+        sim,
+    }
+}
+
+/// Run every cell on the calling thread, in enumeration order.
+pub fn run_sequential(spec: &SweepSpec) -> Vec<CellRow> {
+    spec.cells().iter().map(|c| run_cell(c, spec)).collect()
+}
+
+/// Run every cell across a scoped worker pool; the returned rows are
+/// in enumeration order regardless of scheduling.
+pub fn run_parallel(spec: &SweepSpec, rc: &RunnerCfg) -> Vec<CellRow> {
+    let cells = spec.cells();
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let n_threads = rc.threads.clamp(1, cells.len());
+    if n_threads == 1 {
+        return run_sequential(spec);
+    }
+    let slots: Vec<Mutex<Option<CellRow>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let row = run_cell(&cells[i], spec);
+                *slots[i].lock().unwrap() = Some(row);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("sweep cell not computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_cells_report_throughput() {
+        let spec = SweepSpec {
+            name: "micro".into(),
+            targets: vec![
+                SweepTarget::DramStream { lines: 2000 },
+                SweepTarget::AesStream { lines: 2000 },
+            ],
+            schemes: vec!["Baseline".into()],
+            ratios: vec![1.0],
+            sample_tiles: 1,
+            base_seed: 0,
+        };
+        let rows = run_sequential(&spec);
+        assert_eq!(rows.len(), 2);
+        // GDDR5 streams ~3 cycles/line; the AES engine ~11.2.
+        let dram = &rows[0].sim;
+        let aes = &rows[1].sim;
+        assert!(dram.cycles < aes.cycles, "dram {} aes {}", dram.cycles, aes.cycles);
+        assert!(aes.cycles / aes.instrs > 10.0);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_on_small_grid() {
+        let spec = SweepSpec {
+            name: "tiny".into(),
+            targets: vec![SweepTarget::Matmul { m: 128, k: 128, n: 128 }],
+            schemes: vec!["Baseline".into(), "Direct".into(), "SEAL".into()],
+            ratios: vec![0.5],
+            sample_tiles: 16,
+            base_seed: 0,
+        };
+        let seq = run_sequential(&spec);
+        let par = run_parallel(&spec, &RunnerCfg { threads: 3 });
+        assert_eq!(seq, par);
+    }
+}

@@ -1,0 +1,283 @@
+//! Declarative sweep specifications and their cell enumeration.
+//!
+//! A [`SweepSpec`] is the full description of an experiment grid; a
+//! [`CellKey`] is one point of that grid after collapsing redundant
+//! coordinates (non-SE schemes ignore the ratio, so all their ratio
+//! cells fold into one). Cell enumeration order is deterministic and
+//! per-cell seeds depend only on the *target* (never the scheme or
+//! ratio), so every scheme sees the same synthetic SE masks — the
+//! invariant the paper's normalized-IPC comparisons rely on.
+
+use crate::sim::Scheme;
+use crate::util::json::Json;
+
+/// FNV-1a 64-bit hash (spec fingerprinting for the results store).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One experiment subject.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepTarget {
+    /// `zoo::fig10_conv_layers()[index]` under a tiled-GEMM trace.
+    ConvLayer { index: usize },
+    /// `zoo::fig11_pool_layers()[index]` under a streaming trace.
+    PoolLayer { index: usize },
+    /// A GEMV FC layer.
+    FcLayer { din: usize, dout: usize },
+    /// Fig 3's dense matmul (fully encrypted operands; ratio ignored).
+    Matmul { m: usize, k: usize, n: usize },
+    /// Whole-network inference over a `zoo` model.
+    Network { name: String },
+    /// Microbench: stream `lines` reads through one GDDR5 channel
+    /// (scheme and ratio ignored).
+    DramStream { lines: u64 },
+    /// Microbench: stream `lines` through one AES engine.
+    AesStream { lines: u64 },
+}
+
+impl SweepTarget {
+    /// Stable row label (also the store's `target` field).
+    pub fn label(&self) -> String {
+        match self {
+            SweepTarget::ConvLayer { index } => format!("conv{index}"),
+            SweepTarget::PoolLayer { index } => format!("pool{index}"),
+            SweepTarget::FcLayer { din, dout } => format!("fc_{din}x{dout}"),
+            SweepTarget::Matmul { m, k, n } => format!("matmul_{m}x{k}x{n}"),
+            SweepTarget::Network { name } => name.clone(),
+            SweepTarget::DramStream { lines } => format!("dram_stream_{lines}"),
+            SweepTarget::AesStream { lines } => format!("aes_stream_{lines}"),
+        }
+    }
+
+    /// Whether the scheme/ratio axes apply to this target.
+    pub fn is_micro(&self) -> bool {
+        matches!(self, SweepTarget::DramStream { .. } | SweepTarget::AesStream { .. })
+    }
+
+    /// Deterministic per-cell seed: depends on the target and the
+    /// spec's base seed only, so every scheme/ratio cell of one target
+    /// draws identical synthetic SE masks. Layer seeds reproduce the
+    /// historical per-figure seeding (seed = layer index).
+    pub fn seed(&self, base_seed: u64) -> u64 {
+        match self {
+            SweepTarget::ConvLayer { index } | SweepTarget::PoolLayer { index } => {
+                base_seed + *index as u64
+            }
+            _ => base_seed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let pair = |k: &str, vals: Vec<(&str, f64)>| {
+            let mut fields = vec![("kind", Json::str(k))];
+            fields.extend(vals.into_iter().map(|(n, v)| (n, Json::num(v))));
+            Json::obj(fields)
+        };
+        match self {
+            SweepTarget::ConvLayer { index } => pair("conv", vec![("index", *index as f64)]),
+            SweepTarget::PoolLayer { index } => pair("pool", vec![("index", *index as f64)]),
+            SweepTarget::FcLayer { din, dout } => {
+                pair("fc", vec![("din", *din as f64), ("dout", *dout as f64)])
+            }
+            SweepTarget::Matmul { m, k, n } => {
+                pair("matmul", vec![("m", *m as f64), ("k", *k as f64), ("n", *n as f64)])
+            }
+            SweepTarget::Network { name } => {
+                Json::obj(vec![("kind", Json::str("network")), ("name", Json::str(name))])
+            }
+            SweepTarget::DramStream { lines } => {
+                pair("dram_stream", vec![("lines", *lines as f64)])
+            }
+            SweepTarget::AesStream { lines } => {
+                pair("aes_stream", vec![("lines", *lines as f64)])
+            }
+        }
+    }
+}
+
+/// A declarative sweep: the cross product of targets × schemes ×
+/// ratios at one sample budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Store-file prefix; sweeps with the same name and content share
+    /// one results file.
+    pub name: String,
+    pub targets: Vec<SweepTarget>,
+    /// Canonical scheme names (see [`Scheme::ALL_SIX`]).
+    pub schemes: Vec<String>,
+    /// SE ratios; collapsed to 1.0 for non-SE schemes.
+    pub ratios: Vec<f64>,
+    /// Tile budget per layer cell (pool cells use `sample_tiles * 64`
+    /// lines and FC cells `sample_tiles * 16`, matching
+    /// `traffic::layers::layer_workload`).
+    pub sample_tiles: usize,
+    /// Offset applied to every per-cell seed.
+    pub base_seed: u64,
+}
+
+/// One unique grid point of a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellKey {
+    pub target: SweepTarget,
+    /// Canonical scheme name.
+    pub scheme: String,
+    /// Effective SE ratio (1.0 for non-SE schemes).
+    pub ratio: f64,
+}
+
+impl SweepSpec {
+    /// Enumerate unique cells in deterministic (target-major) order.
+    /// Non-SE schemes collapse every ratio to 1.0; micro targets
+    /// collapse both axes.
+    pub fn cells(&self) -> Vec<CellKey> {
+        let mut out: Vec<CellKey> = Vec::new();
+        for target in &self.targets {
+            for name in &self.schemes {
+                let scheme = Scheme::parse(name)
+                    .unwrap_or_else(|| panic!("unknown scheme {name:?} in sweep spec"));
+                for &ratio in &self.ratios {
+                    let key = if target.is_micro() {
+                        CellKey { target: target.clone(), scheme: "-".to_string(), ratio: 1.0 }
+                    } else {
+                        CellKey {
+                            target: target.clone(),
+                            scheme: scheme.name().to_string(),
+                            ratio: if scheme.smart { ratio } else { 1.0 },
+                        }
+                    };
+                    if !out.contains(&key) {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Canonical JSON form — the hash input and the store's `spec`
+    /// field. Field order is stable (BTreeMap-backed objects).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("targets", Json::arr(self.targets.iter().map(|t| t.to_json()))),
+            ("schemes", Json::arr(self.schemes.iter().map(|s| Json::str(s)))),
+            ("ratios", Json::arr(self.ratios.iter().map(|&r| Json::num(r)))),
+            ("sample_tiles", Json::num(self.sample_tiles as f64)),
+            ("base_seed", Json::str(&self.base_seed.to_string())),
+        ])
+    }
+
+    /// Content fingerprint of the spec.
+    pub fn hash(&self) -> u64 {
+        fnv1a64(self.to_json().to_string().as_bytes())
+    }
+
+    /// All six paper schemes at one ratio over whole networks — the
+    /// fig 13/14/15 grid.
+    pub fn networks_all_schemes(nets: &[&str], ratio: f64, sample_tiles: usize) -> SweepSpec {
+        SweepSpec {
+            name: "networks".to_string(),
+            targets: nets
+                .iter()
+                .map(|n| SweepTarget::Network { name: n.to_string() })
+                .collect(),
+            schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+            ratios: vec![ratio],
+            sample_tiles,
+            base_seed: 0,
+        }
+    }
+
+    /// The exact spec shared by the fig 13/14/15 benches: the paper's
+    /// three networks, all six schemes, SE ratio 0.5, sample budget
+    /// from `SEAL_NET_SAMPLE` (default 240). Centralised here so the
+    /// three benches cannot drift apart and stop sharing one store.
+    pub fn paper_networks() -> SweepSpec {
+        let sample = std::env::var("SEAL_NET_SAMPLE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(240);
+        SweepSpec::networks_all_schemes(&PAPER_NETS, 0.5, sample)
+    }
+}
+
+/// The networks of the paper's whole-network figures.
+pub const PAPER_NETS: [&str; 3] = ["vgg16", "resnet18", "resnet34"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> SweepSpec {
+        SweepSpec {
+            name: "demo".into(),
+            targets: vec![
+                SweepTarget::ConvLayer { index: 1 },
+                SweepTarget::Network { name: "vgg16".into() },
+            ],
+            schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+            ratios: vec![0.5],
+            sample_tiles: 64,
+            base_seed: 0,
+        }
+    }
+
+    #[test]
+    fn cells_collapse_non_se_ratios() {
+        let mut spec = demo_spec();
+        spec.ratios = vec![0.25, 0.5];
+        let cells = spec.cells();
+        // Per target: Baseline/Direct/Counter 1 cell each (ratio -> 1.0),
+        // the three SE schemes 2 cells each = 9 cells; 2 targets = 18.
+        assert_eq!(cells.len(), 18);
+        for c in &cells {
+            let s = Scheme::parse(&c.scheme).unwrap();
+            if !s.smart {
+                assert_eq!(c.ratio, 1.0, "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn micro_targets_collapse_everything() {
+        let spec = SweepSpec {
+            targets: vec![SweepTarget::DramStream { lines: 100 }],
+            ..demo_spec()
+        };
+        assert_eq!(spec.cells().len(), 1);
+    }
+
+    #[test]
+    fn seed_ignores_scheme_and_ratio() {
+        let t = SweepTarget::ConvLayer { index: 3 };
+        assert_eq!(t.seed(0), 3);
+        assert_eq!(t.seed(10), 13);
+        assert_eq!(SweepTarget::Network { name: "x".into() }.seed(7), 7);
+    }
+
+    #[test]
+    fn hash_is_content_sensitive_and_stable() {
+        let a = demo_spec();
+        let b = demo_spec();
+        assert_eq!(a.hash(), b.hash());
+        let mut c = demo_spec();
+        c.sample_tiles = 65;
+        assert_ne!(a.hash(), c.hash());
+        let mut d = demo_spec();
+        d.ratios = vec![0.75];
+        assert_ne!(a.hash(), d.hash());
+    }
+
+    #[test]
+    fn fnv_known_values() {
+        // FNV-1a 64 reference: empty input and "a".
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

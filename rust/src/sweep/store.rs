@@ -1,0 +1,297 @@
+//! Structured JSON results store: one file per sweep spec under
+//! `results/`, keyed by the spec's content hash.
+//!
+//! File schema (`results/sweep_<name>_<hash16>.json`):
+//!
+//! ```json
+//! {
+//!   "spec": { ...canonical spec json... },
+//!   "spec_hash": "cbf29ce484222325",
+//!   "rows": [
+//!     { "target": "vgg16", "scheme": "SEAL", "ratio": 0.5,
+//!       "seed": "0", "kind": "network", "sampled_fraction": 1,
+//!       "cycles": ..., "instrs": ..., "ipc": ...,
+//!       "plain_accesses": ..., "enc_accesses": ..., "ctr_accesses": ...,
+//!       "l1_hits": ..., "l1_misses": ..., "l2_hits": ..., "l2_misses": ...,
+//!       "ctr_cache_hits": ..., "ctr_cache_misses": ...,
+//!       "aes_lines": ..., "hit_max_cycles": false }
+//!   ]
+//! }
+//! ```
+//!
+//! Rows are written in cell-enumeration order and all numeric fields
+//! derive deterministically from the seeded simulation, so the file
+//! bytes are reproducible (and identical between parallel and
+//! sequential runs — `tests/golden_stats.rs`). Integer-valued counts
+//! are exact: they stay below 2^53 and the JSON emitter prints them
+//! without a fraction. Seeds and hashes are strings because they span
+//! the full u64 range.
+
+use std::path::{Path, PathBuf};
+
+use crate::sim::SimStats;
+use crate::traffic::network::NetworkRun;
+use crate::util::json::Json;
+
+use super::runner::{self, RunnerCfg};
+use super::spec::SweepSpec;
+
+/// Flattened per-cell statistics (layer cells carry exact counter
+/// values; network cells carry sampling-scaled aggregates).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimSummary {
+    pub cycles: f64,
+    pub instrs: f64,
+    pub ipc: f64,
+    pub plain_accesses: f64,
+    pub enc_accesses: f64,
+    pub ctr_accesses: f64,
+    pub l1_hits: f64,
+    pub l1_misses: f64,
+    pub l2_hits: f64,
+    pub l2_misses: f64,
+    pub ctr_cache_hits: f64,
+    pub ctr_cache_misses: f64,
+    pub aes_lines: f64,
+    pub hit_max_cycles: bool,
+}
+
+impl SimSummary {
+    /// Exact copy of a single simulation's counters.
+    pub fn from_sim(s: &SimStats) -> SimSummary {
+        SimSummary {
+            cycles: s.cycles as f64,
+            instrs: s.instrs as f64,
+            ipc: s.ipc(),
+            plain_accesses: (s.mc.plain_reads + s.mc.plain_writes) as f64,
+            enc_accesses: (s.mc.enc_reads + s.mc.enc_writes) as f64,
+            ctr_accesses: (s.mc.ctr_reads + s.mc.ctr_writes) as f64,
+            l1_hits: s.l1_hits as f64,
+            l1_misses: s.l1_misses as f64,
+            l2_hits: s.l2_hits as f64,
+            l2_misses: s.l2_misses as f64,
+            ctr_cache_hits: s.ctr_cache_hits as f64,
+            ctr_cache_misses: s.ctr_cache_misses as f64,
+            aes_lines: s.aes_lines as f64,
+            hit_max_cycles: s.hit_max_cycles,
+        }
+    }
+
+    /// Whole-network aggregate: headline numbers from the run, cache
+    /// counters summed over the per-layer stats scaled back to the full
+    /// (unsampled) execution.
+    pub fn from_network(run: &NetworkRun) -> SimSummary {
+        let mut out = SimSummary {
+            cycles: run.latency_cycles,
+            instrs: run.ipc * run.latency_cycles,
+            ipc: run.ipc,
+            plain_accesses: run.plain_accesses,
+            enc_accesses: run.enc_accesses,
+            ctr_accesses: run.ctr_accesses,
+            ..SimSummary::default()
+        };
+        for (_, s, scale) in &run.per_layer {
+            out.l1_hits += s.l1_hits as f64 * scale;
+            out.l1_misses += s.l1_misses as f64 * scale;
+            out.l2_hits += s.l2_hits as f64 * scale;
+            out.l2_misses += s.l2_misses as f64 * scale;
+            out.ctr_cache_hits += s.ctr_cache_hits as f64 * scale;
+            out.ctr_cache_misses += s.ctr_cache_misses as f64 * scale;
+            out.aes_lines += s.aes_lines as f64 * scale;
+            out.hit_max_cycles |= s.hit_max_cycles;
+        }
+        out
+    }
+}
+
+/// One computed sweep cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRow {
+    pub target: String,
+    pub scheme: String,
+    pub ratio: f64,
+    pub seed: u64,
+    /// "layer" | "network" | "micro".
+    pub kind: String,
+    pub sampled_fraction: f64,
+    pub sim: SimSummary,
+}
+
+impl CellRow {
+    fn to_json(&self) -> Json {
+        let s = &self.sim;
+        Json::obj(vec![
+            ("target", Json::str(&self.target)),
+            ("scheme", Json::str(&self.scheme)),
+            ("ratio", Json::num(self.ratio)),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("kind", Json::str(&self.kind)),
+            ("sampled_fraction", Json::num(self.sampled_fraction)),
+            ("cycles", Json::num(s.cycles)),
+            ("instrs", Json::num(s.instrs)),
+            ("ipc", Json::num(s.ipc)),
+            ("plain_accesses", Json::num(s.plain_accesses)),
+            ("enc_accesses", Json::num(s.enc_accesses)),
+            ("ctr_accesses", Json::num(s.ctr_accesses)),
+            ("l1_hits", Json::num(s.l1_hits)),
+            ("l1_misses", Json::num(s.l1_misses)),
+            ("l2_hits", Json::num(s.l2_hits)),
+            ("l2_misses", Json::num(s.l2_misses)),
+            ("ctr_cache_hits", Json::num(s.ctr_cache_hits)),
+            ("ctr_cache_misses", Json::num(s.ctr_cache_misses)),
+            ("aes_lines", Json::num(s.aes_lines)),
+            ("hit_max_cycles", Json::Bool(s.hit_max_cycles)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<CellRow> {
+        let num = |k: &str| j.get(k)?.as_f64();
+        Some(CellRow {
+            target: j.get("target")?.as_str()?.to_string(),
+            scheme: j.get("scheme")?.as_str()?.to_string(),
+            ratio: num("ratio")?,
+            seed: j.get("seed")?.as_str()?.parse().ok()?,
+            kind: j.get("kind")?.as_str()?.to_string(),
+            sampled_fraction: num("sampled_fraction")?,
+            sim: SimSummary {
+                cycles: num("cycles")?,
+                instrs: num("instrs")?,
+                ipc: num("ipc")?,
+                plain_accesses: num("plain_accesses")?,
+                enc_accesses: num("enc_accesses")?,
+                ctr_accesses: num("ctr_accesses")?,
+                l1_hits: num("l1_hits")?,
+                l1_misses: num("l1_misses")?,
+                l2_hits: num("l2_hits")?,
+                l2_misses: num("l2_misses")?,
+                ctr_cache_hits: num("ctr_cache_hits")?,
+                ctr_cache_misses: num("ctr_cache_misses")?,
+                aes_lines: num("aes_lines")?,
+                hit_max_cycles: j.get("hit_max_cycles")?.as_bool()?,
+            },
+        })
+    }
+}
+
+/// A sweep's rows plus provenance.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub rows: Vec<CellRow>,
+    pub path: PathBuf,
+    pub from_cache: bool,
+}
+
+impl SweepResults {
+    /// First row matching (target, scheme) — unique when the sweep has
+    /// a single ratio per scheme.
+    pub fn get(&self, target: &str, scheme: &str) -> Option<&CellRow> {
+        self.rows.iter().find(|r| r.target == target && r.scheme == scheme)
+    }
+
+    /// Row matching (target, scheme, ratio) with a small tolerance.
+    pub fn get_at(&self, target: &str, scheme: &str, ratio: f64) -> Option<&CellRow> {
+        self.rows.iter().find(|r| {
+            r.target == target && r.scheme == scheme && (r.ratio - ratio).abs() < 1e-9
+        })
+    }
+}
+
+/// The store file for a spec.
+pub fn store_path(spec: &SweepSpec) -> PathBuf {
+    PathBuf::from(format!("results/sweep_{}_{:016x}.json", spec.name, spec.hash()))
+}
+
+/// Serialize a spec + rows to the canonical store document.
+pub fn document(spec: &SweepSpec, rows: &[CellRow]) -> String {
+    Json::obj(vec![
+        ("spec", spec.to_json()),
+        ("spec_hash", Json::str(&format!("{:016x}", spec.hash()))),
+        ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ])
+    .to_string()
+}
+
+/// Parse a store document previously produced by [`document`],
+/// validating the spec hash.
+pub fn parse_document(spec: &SweepSpec, text: &str) -> Option<Vec<CellRow>> {
+    let j = Json::parse(text).ok()?;
+    if j.get("spec_hash")?.as_str()? != format!("{:016x}", spec.hash()) {
+        return None;
+    }
+    let mut rows = Vec::new();
+    for r in j.get("rows")?.as_arr()? {
+        rows.push(CellRow::from_json(r)?);
+    }
+    Some(rows)
+}
+
+/// Write rows for `spec` to its store file.
+pub fn save(spec: &SweepSpec, rows: &[CellRow]) -> anyhow::Result<SweepResults> {
+    let path = store_path(spec);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, document(spec, rows))?;
+    Ok(SweepResults { rows: rows.to_vec(), path, from_cache: false })
+}
+
+/// Load the store for `spec` if present and hash-consistent.
+pub fn load(spec: &SweepSpec) -> Option<SweepResults> {
+    let path = store_path(spec);
+    let text = std::fs::read_to_string(&path).ok()?;
+    let rows = parse_document(spec, &text)?;
+    Some(SweepResults { rows, path, from_cache: true })
+}
+
+/// Load the cached results or run the sweep in parallel and persist it.
+pub fn load_or_run(spec: &SweepSpec) -> anyhow::Result<SweepResults> {
+    if let Some(r) = load(spec) {
+        return Ok(r);
+    }
+    let rows = runner::run_parallel(spec, &RunnerCfg::from_env());
+    save(spec, &rows)
+}
+
+/// Like [`load_or_run`], but panics instead of returning an error —
+/// the bench-binary entry point.
+pub fn load_or_run_expect(spec: &SweepSpec) -> SweepResults {
+    load_or_run(spec).unwrap_or_else(|e| panic!("sweep {:?} failed: {e:#}", spec.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::SweepTarget;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            name: "store_test".into(),
+            targets: vec![SweepTarget::Matmul { m: 64, k: 64, n: 64 }],
+            schemes: vec!["Baseline".into(), "SEAL".into()],
+            ratios: vec![0.5],
+            sample_tiles: 4,
+            base_seed: 0,
+        }
+    }
+
+    #[test]
+    fn document_roundtrip() {
+        let spec = tiny_spec();
+        let rows = runner::run_sequential(&spec);
+        let text = document(&spec, &rows);
+        let parsed = parse_document(&spec, &text).expect("parse back");
+        assert_eq!(parsed, rows);
+        // Hash mismatch is rejected.
+        let mut other = tiny_spec();
+        other.sample_tiles = 5;
+        assert!(parse_document(&other, &text).is_none());
+    }
+
+    #[test]
+    fn document_is_deterministic() {
+        let spec = tiny_spec();
+        let a = document(&spec, &runner::run_sequential(&spec));
+        let b = document(&spec, &runner::run_sequential(&spec));
+        assert_eq!(a, b);
+    }
+}

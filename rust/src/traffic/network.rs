@@ -7,7 +7,7 @@
 use crate::model::zoo::{Layer, Network};
 use crate::sim::{GpuConfig, Scheme, SimStats};
 
-use super::layers::{layer_workload, DEFAULT_SAMPLE_TILES};
+use super::layers::layer_workload;
 
 /// Combined whole-network result.
 #[derive(Debug, Clone, Default)]
@@ -64,6 +64,22 @@ pub fn run_network(
     cfg_base: &GpuConfig,
     sample_tiles: usize,
 ) -> NetworkRun {
+    run_network_seeded(net, scheme, se_ratio, cfg_base, sample_tiles, 0)
+}
+
+/// [`run_network`] with an explicit base seed: layer `idx` draws its
+/// synthetic SE masks from `base_seed + idx + 1`, so sweeps can vary
+/// the mask draw while `base_seed = 0` reproduces the historical
+/// per-figure seeding. The run is fully deterministic in its inputs —
+/// the property the parallel sweep engine's byte-identity rests on.
+pub fn run_network_seeded(
+    net: &Network,
+    scheme: Scheme,
+    se_ratio: f64,
+    cfg_base: &GpuConfig,
+    sample_tiles: usize,
+    base_seed: u64,
+) -> NetworkRun {
     let mut out = NetworkRun::default();
     let mut total_instrs = 0.0;
     for (idx, layer) in net.layers.iter().enumerate() {
@@ -72,7 +88,7 @@ pub fn run_network(
         } else {
             None // full encryption
         };
-        let w = layer_workload(layer, ratio, cfg_base, sample_tiles, idx as u64 + 1);
+        let w = layer_workload(layer, ratio, cfg_base, sample_tiles, base_seed + idx as u64 + 1);
         let cfg = cfg_base.clone().with_scheme(scheme);
         let stats = super::simulate(&w, cfg);
         let scale = 1.0 / w.sampled_fraction.max(1e-12);
@@ -102,71 +118,9 @@ pub fn run_all_schemes(
         .collect()
 }
 
-/// Summary row cached to results/ so Fig 13/14/15 benches don't re-run
-/// the same whole-network simulations.
-#[derive(Debug, Clone)]
-pub struct RunSummary {
-    pub scheme: String,
-    pub ipc: f64,
-    pub latency: f64,
-    pub plain: f64,
-    pub enc: f64,
-    pub ctr: f64,
-}
-
-/// Run (or load cached) all-six-schemes summaries for a network.
-pub fn cached_all_schemes(
-    net_name: &str,
-    se_ratio: f64,
-    sample_tiles: usize,
-) -> Vec<RunSummary> {
-    use crate::util::json::Json;
-    let _ = std::fs::create_dir_all("results");
-    let path = format!("results/netruns_{net_name}_{sample_tiles}_{:.0}.json", se_ratio * 100.0);
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(j) = Json::parse(&text) {
-            if let Some(arr) = j.as_arr() {
-                return arr
-                    .iter()
-                    .map(|r| RunSummary {
-                        scheme: r.req("scheme").as_str().unwrap().to_string(),
-                        ipc: r.req("ipc").as_f64().unwrap(),
-                        latency: r.req("latency").as_f64().unwrap(),
-                        plain: r.req("plain").as_f64().unwrap(),
-                        enc: r.req("enc").as_f64().unwrap(),
-                        ctr: r.req("ctr").as_f64().unwrap(),
-                    })
-                    .collect();
-            }
-        }
-    }
-    let net = crate::model::zoo::by_name(net_name).expect("network");
-    let cfg = crate::sim::GpuConfig::default();
-    let rows = run_all_schemes(&net, se_ratio, &cfg, sample_tiles);
-    let out: Vec<RunSummary> = rows
-        .iter()
-        .map(|(s, r)| RunSummary {
-            scheme: s.to_string(),
-            ipc: r.ipc,
-            latency: r.latency_cycles,
-            plain: r.plain_accesses,
-            enc: r.enc_accesses,
-            ctr: r.ctr_accesses,
-        })
-        .collect();
-    let j = Json::arr(out.iter().map(|r| {
-        Json::obj(vec![
-            ("scheme", Json::str(&r.scheme)),
-            ("ipc", Json::num(r.ipc)),
-            ("latency", Json::num(r.latency)),
-            ("plain", Json::num(r.plain)),
-            ("enc", Json::num(r.enc)),
-            ("ctr", Json::num(r.ctr)),
-        ])
-    }));
-    let _ = std::fs::write(&path, j.to_string());
-    out
-}
+// NOTE: the former per-bench `cached_all_schemes` JSON cache lived
+// here; it is superseded by the `crate::sweep` engine's results store
+// (`sweep::store`), which the fig 13/14/15 benches now consume.
 
 #[cfg(test)]
 mod tests {

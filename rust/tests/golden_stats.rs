@@ -1,0 +1,136 @@
+//! Golden-stats regression suite for the simulator + sweep engine.
+//!
+//! Three properties:
+//! 1. A parallel sweep is byte-identical to a sequential one (the
+//!    determinism contract of `sweep::runner`).
+//! 2. `SimStats` for small fixed workloads under all six schemes match
+//!    the committed golden JSON (`rust/tests/golden/golden_stats.json`).
+//!    On a checkout where the golden file does not exist yet, the test
+//!    materializes it and passes (commit the generated file); set
+//!    `SEAL_BLESS=1` to intentionally re-bless after a simulator
+//!    change.
+//! 3. The six schemes keep their paper-shaped ordering on the golden
+//!    workloads (baseline fastest, SEAL counter-traffic-free).
+
+use std::path::Path;
+
+use seal::sim::Scheme;
+use seal::sweep::{runner, store, RunnerCfg, SweepSpec, SweepTarget};
+
+const GOLDEN_PATH: &str = "rust/tests/golden/golden_stats.json";
+
+/// Small fixed workloads under all six schemes: a dense matmul, a CONV
+/// layer, and a POOL layer, tightly sampled so the suite stays fast.
+fn golden_spec() -> SweepSpec {
+    SweepSpec {
+        name: "golden".to_string(),
+        targets: vec![
+            SweepTarget::Matmul { m: 256, k: 256, n: 256 },
+            SweepTarget::ConvLayer { index: 0 },
+            SweepTarget::PoolLayer { index: 4 },
+        ],
+        schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+        ratios: vec![0.5],
+        sample_tiles: 48,
+        base_seed: 0,
+    }
+}
+
+#[test]
+fn golden_stats_and_parallel_identity() {
+    let spec = golden_spec();
+
+    // 1. Parallel == sequential, byte for byte.
+    let seq = runner::run_sequential(&spec);
+    let par = runner::run_parallel(&spec, &RunnerCfg { threads: 4 });
+    let seq_doc = store::document(&spec, &seq);
+    let par_doc = store::document(&spec, &par);
+    assert_eq!(
+        seq_doc, par_doc,
+        "parallel sweep output diverged from sequential"
+    );
+
+    // 2. Golden comparison. A missing golden self-bootstraps on dev
+    //    machines (commit the generated file) but is a hard failure in
+    //    CI — otherwise the regression suite would re-bless itself on
+    //    every fresh runner and never catch drift.
+    let golden = Path::new(GOLDEN_PATH);
+    let bless = std::env::var("SEAL_BLESS").is_ok();
+    let in_ci = std::env::var("GITHUB_ACTIONS").is_ok();
+    match std::fs::read_to_string(golden) {
+        Ok(want) if !bless => {
+            assert_eq!(
+                par_doc, want,
+                "SimStats drifted from the committed golden file {GOLDEN_PATH}; \
+                 if the simulator change is intentional, re-bless with \
+                 SEAL_BLESS=1 cargo test golden and commit the update"
+            );
+        }
+        Err(_) if in_ci && !bless => {
+            panic!(
+                "golden file {GOLDEN_PATH} is missing in CI; generate it locally \
+                 with `cargo test golden` and commit it"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+            std::fs::write(golden, &par_doc).unwrap();
+            eprintln!("[golden_stats] wrote {GOLDEN_PATH}; commit it to pin the stats");
+        }
+    }
+
+    // 3. Scheme-ordering sanity on the golden rows.
+    let ipc = |target: &str, scheme: &str| -> f64 {
+        par.iter()
+            .find(|r| r.target == target && r.scheme == scheme)
+            .unwrap_or_else(|| panic!("missing row {target}/{scheme}"))
+            .sim
+            .ipc
+    };
+    for t in ["matmul_256x256x256", "conv0", "pool4"] {
+        assert!(
+            ipc(t, "Baseline") > ipc(t, "Direct"),
+            "{t}: baseline must beat direct"
+        );
+        assert!(
+            ipc(t, "Baseline") > ipc(t, "Counter"),
+            "{t}: baseline must beat counter"
+        );
+    }
+    // SE cuts conv/pool encryption cost (matmul has no SE structure).
+    assert!(ipc("conv0", "Direct+SE") > ipc("conv0", "Direct"));
+    assert!(ipc("pool4", "Counter+SE") > ipc("pool4", "Counter"));
+    // SEAL never touches counters.
+    for row in par.iter().filter(|r| r.scheme == "SEAL") {
+        assert_eq!(row.sim.ctr_accesses, 0.0, "{}: SEAL emitted counter traffic", row.target);
+    }
+    // Nothing hit the cycle cap (the goldens would be meaningless).
+    for row in &par {
+        assert!(!row.sim.hit_max_cycles, "{}/{} hit max_cycles", row.target, row.scheme);
+    }
+}
+
+#[test]
+fn network_sweep_parallel_identity() {
+    // Whole-network cells take the run_network_seeded path; verify the
+    // same byte-identity there with a tightly sampled VGG-16.
+    let spec = SweepSpec {
+        name: "golden_net".to_string(),
+        targets: vec![SweepTarget::Network { name: "vgg16".to_string() }],
+        schemes: vec!["Baseline".to_string(), "SEAL".to_string()],
+        ratios: vec![0.5],
+        sample_tiles: 12,
+        base_seed: 0,
+    };
+    let seq = runner::run_sequential(&spec);
+    let par = runner::run_parallel(&spec, &RunnerCfg { threads: 2 });
+    assert_eq!(
+        store::document(&spec, &seq),
+        store::document(&spec, &par),
+        "network sweep diverged between parallel and sequential"
+    );
+    let seal = par.iter().find(|r| r.scheme == "SEAL").unwrap();
+    let base = par.iter().find(|r| r.scheme == "Baseline").unwrap();
+    assert!(seal.sim.cycles > base.sim.cycles, "encryption must cost latency");
+    assert_eq!(seal.sim.ctr_accesses, 0.0);
+}

@@ -1,0 +1,210 @@
+//! Artifact-free unit tests for `model::address_map` and
+//! `model::importance` over synthetic model layouts: SE selection
+//! monotonicity in the ratio, mask/selection consistency, and
+//! address-map line classification at region boundaries.
+
+use seal::model::address_map::{Allocator, ALLOC_ALIGN};
+use seal::model::importance::{build_mask, encrypted_fraction, se_row_selection};
+use seal::model::manifest::{ModelInfo, ParamInfo};
+use seal::sim::encryption::EncMap;
+use seal::util::rng::Rng;
+
+/// A synthetic two-conv + FC + bias model with a mix of SE-eligible
+/// and protected tensors.
+fn synthetic_model() -> ModelInfo {
+    let conv0 = ParamInfo {
+        name: "conv0.w".into(),
+        shape: vec![3, 3, 8, 4], // HWIO, 8 kernel rows of 36 elements
+        offset: 0,
+        size: 288,
+        row_axis: Some(2),
+        layer_id: 0,
+        kind: "conv".into(),
+        se_eligible: true,
+    };
+    let conv1 = ParamInfo {
+        name: "conv1.w".into(),
+        shape: vec![3, 3, 4, 4],
+        offset: 288,
+        size: 144,
+        row_axis: Some(2),
+        layer_id: 1,
+        kind: "conv".into(),
+        se_eligible: false, // protected: always whole-tensor encrypted
+    };
+    let fc = ParamInfo {
+        name: "fc.w".into(),
+        shape: vec![16, 10],
+        offset: 432,
+        size: 160,
+        row_axis: Some(0),
+        layer_id: 2,
+        kind: "fc".into(),
+        se_eligible: true,
+    };
+    let bias = ParamInfo {
+        name: "fc.b".into(),
+        shape: vec![10],
+        offset: 592,
+        size: 10,
+        row_axis: None, // biases carry no rows: whole-tensor policy
+        layer_id: 2,
+        kind: "bias".into(),
+        se_eligible: true,
+    };
+    ModelInfo {
+        name: "synthetic".into(),
+        input_hw: 8,
+        input_channels: 8,
+        n_classes: 10,
+        theta_len: 602,
+        params: vec![conv0, conv1, fc, bias],
+    }
+}
+
+fn synthetic_theta() -> Vec<f32> {
+    let mut rng = Rng::seeded(0x5ea1);
+    (0..602).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn se_selection_is_monotone_in_ratio() {
+    let m = synthetic_model();
+    let theta = synthetic_theta();
+    let ratios = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0];
+    let mut prev_mask: Option<Vec<f32>> = None;
+    let mut prev_frac = -1.0;
+    for r in ratios {
+        let sel = se_row_selection(&m, &theta, r);
+        let mask = build_mask(&m, &sel);
+        // Fraction grows with ratio.
+        let frac = encrypted_fraction(&m, &sel);
+        assert!(frac >= prev_frac, "fraction fell: {prev_frac} -> {frac} at ratio {r}");
+        prev_frac = frac;
+        // Element-wise: anything encrypted at a lower ratio stays
+        // encrypted at a higher one.
+        if let Some(prev) = &prev_mask {
+            for (i, (&lo, &hi)) in prev.iter().zip(&mask).enumerate() {
+                assert!(hi >= lo, "element {i} lost encryption going to ratio {r}");
+            }
+        }
+        prev_mask = Some(mask);
+    }
+}
+
+#[test]
+fn mask_is_consistent_with_selection_counts() {
+    let m = synthetic_model();
+    let theta = synthetic_theta();
+    let sel = se_row_selection(&m, &theta, 0.5);
+    let mask = build_mask(&m, &sel);
+    assert_eq!(mask.len(), m.theta_len);
+    assert!(mask.iter().all(|&v| v == 0.0 || v == 1.0));
+    for s in &sel {
+        let p = &s.param;
+        let ones = mask[p.offset..p.offset + p.size].iter().filter(|&&v| v == 1.0).count();
+        if s.whole {
+            assert_eq!(ones, p.size, "{}: whole-tensor must be fully masked", p.name);
+        } else {
+            let per_row = p.size / p.n_rows();
+            assert_eq!(
+                ones,
+                s.n_encrypted_rows() * per_row,
+                "{}: mask count disagrees with row selection",
+                p.name
+            );
+        }
+    }
+    // Non-eligible conv1 and the row-less bias are whole-tensor.
+    assert!(sel[1].whole && sel[3].whole);
+    // The eligible conv encrypts exactly round(0.5 * 8) = 4 rows.
+    assert_eq!(sel[0].n_encrypted_rows(), 4);
+}
+
+#[test]
+fn selection_prefers_largest_l1_rows_across_tensors() {
+    let m = synthetic_model();
+    let mut theta = vec![0.01f32; 602];
+    // Make fc rows 1 and 14 heavy: they must win at ratio 2/16.
+    for r in [1usize, 14] {
+        for i in m.params[2].row_indices(r) {
+            theta[m.params[2].offset + i] = 5.0;
+        }
+    }
+    let sel = se_row_selection(&m, &theta, 0.125); // 2 of 16 fc rows
+    assert_eq!(sel[2].n_encrypted_rows(), 2);
+    assert!(sel[2].encrypted_rows[1] && sel[2].encrypted_rows[14]);
+}
+
+#[test]
+fn address_map_classifies_region_boundary_lines() {
+    let mut a = Allocator::new();
+    let stripe = 4 * ALLOC_ALIGN; // 512B stripes, line-aligned
+    let plain = a.malloc("plain", 1000); // rounds up to 1024
+    let striped = a.alloc_striped("fm", stripe, vec![true, false, true, false]);
+    let secret = a.emalloc("secret", 1);
+    let map = a.finish();
+
+    // Region bases are line-aligned and regions are disjoint.
+    assert_eq!(plain % ALLOC_ALIGN, 0);
+    assert_eq!(striped % ALLOC_ALIGN, 0);
+    assert_eq!(striped, plain + 1024);
+    assert_eq!(secret, striped + 4 * stripe);
+
+    // First/last byte of each region resolve to it; one past the end
+    // resolves to the next region.
+    assert_eq!(map.find(plain).unwrap().name, "plain");
+    assert_eq!(map.find(striped - 1).unwrap().name, "plain");
+    assert_eq!(map.find(striped).unwrap().name, "fm");
+    assert_eq!(map.find(secret - 1).unwrap().name, "fm");
+    assert_eq!(map.find(secret).unwrap().name, "secret");
+    assert!(map.find(secret + ALLOC_ALIGN).is_none());
+
+    // Line classification flips exactly at stripe boundaries.
+    assert!(map.encrypted(striped)); // stripe 0: encrypted
+    assert!(map.encrypted(striped + stripe - 1)); // last byte of stripe 0
+    assert!(!map.encrypted(striped + stripe)); // first byte of stripe 1
+    assert!(map.encrypted(striped + 2 * stripe));
+    assert!(!map.encrypted(striped + 3 * stripe));
+    // Uniform regions at their boundaries.
+    assert!(!map.encrypted(plain + 1023));
+    assert!(map.encrypted(secret));
+    assert!(map.encrypted(secret + ALLOC_ALIGN - 1));
+
+    // Encrypted fraction: 2 of 4 stripes + 128B secret over
+    // 1024 + 2048 + 128 total.
+    let want = (2.0 * stripe as f64 + 128.0) / (1024.0 + 4.0 * stripe as f64 + 128.0);
+    assert!((map.encrypted_fraction() - want).abs() < 1e-9);
+}
+
+#[test]
+fn address_map_find_is_exhaustive_over_random_probes() {
+    let mut a = Allocator::new();
+    let mut bounds = Vec::new();
+    let mut rng = Rng::seeded(17);
+    for i in 0..16 {
+        let size = 1 + rng.below(4096);
+        let base = if i % 2 == 0 {
+            a.malloc(&format!("r{i}"), size)
+        } else {
+            a.emalloc(&format!("r{i}"), size)
+        };
+        bounds.push((base, base + seal::util::round_up(size, ALLOC_ALIGN), i % 2 == 1));
+    }
+    let map = a.finish();
+    let end = bounds.last().unwrap().1;
+    for _ in 0..10_000 {
+        let addr = rng.below(end + 1024);
+        let hit = bounds.iter().find(|(lo, hi, _)| addr >= *lo && addr < *hi);
+        match hit {
+            Some((_, _, enc)) => {
+                assert!(map.find(addr).is_some(), "addr {addr} lost");
+                assert_eq!(map.encrypted(addr), *enc, "addr {addr}");
+            }
+            None => {
+                assert!(map.find(addr).is_none(), "addr {addr} phantom region");
+                assert!(!map.encrypted(addr));
+            }
+        }
+    }
+}

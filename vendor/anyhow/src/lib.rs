@@ -1,0 +1,212 @@
+//! Minimal offline reimplementation of the subset of `anyhow` this
+//! workspace uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the [`Context`] extension trait.
+//!
+//! The container that builds this repo has no crates.io access, so the
+//! real `anyhow` cannot be fetched; this path crate mirrors its public
+//! behaviour closely enough for the crate's call sites:
+//! `{e}` prints the outermost message, `{e:#}` prints the whole cause
+//! chain separated by `: ` (anyhow's alternate formatting), and `?`
+//! converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `source` under a new context message.
+    pub fn context_of<M: fmt::Display>(
+        message: M,
+        source: Box<dyn StdError + Send + Sync + 'static>,
+    ) -> Error {
+        Error { msg: message.to_string(), source: Some(source) }
+    }
+
+    /// The outermost message.
+    pub fn to_msg(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the cause chain (outermost first, excluding `self`).
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: self.source.as_deref().map(|s| s as &dyn StdError) }
+    }
+}
+
+/// Iterator over an error's causes.
+pub struct Chain<'a> {
+    next: Option<&'a dyn StdError>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a dyn StdError;
+
+    fn next(&mut self) -> Option<&'a dyn StdError> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> = self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps the blanket `From` below coherent (same trick as anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Context extension for `Result` and `Option` (the `anyhow::Context`
+/// surface the workspace uses).
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::context_of(context, Box::new(e)))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::context_of(f(), Box::new(e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("reading file")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: missing");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} and {}", 4);
+        assert_eq!(format!("{e}"), "got 3 and 4");
+
+        fn bails(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(5).unwrap(), 5);
+        assert_eq!(format!("{}", bails(0).unwrap_err()), "x must be positive, got 0");
+        assert_eq!(format!("{}", bails(11).unwrap_err()), "too big: 11");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("no value for {}", "k")).unwrap_err();
+        assert_eq!(format!("{e}"), "no value for k");
+    }
+}
