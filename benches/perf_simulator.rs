@@ -1,38 +1,33 @@
 //! §Perf: simulator throughput (the repo's own hot path — every figure
-//! is sim-bound). Reports simulated Mcycles/s and memory-request rate
-//! for a representative conv layer under SEAL.
+//! is sim-bound). Thin wrapper over `seal::perf`: runs the full basket
+//! with the lockstep comparison on, writes `BENCH_perf.json`, and
+//! reports the event-engine speedup per case. Unlike `seal perf`, the
+//! bench never fails on a baseline regression — it only reports
+//! (`cargo bench` is for measurement; the CI gate is the CLI).
 
-use std::time::Instant;
+use std::path::Path;
 
-use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme};
-use seal::stats::Table;
-use seal::traffic::{self, layers};
+use seal::perf::{self, PerfOptions};
 
 fn main() {
-    let cfg = GpuConfig::default();
-    let layer = zoo::fig10_conv_layers()[2];
-    let mut t = Table::new(
-        "§Perf: simulator throughput",
-        &["sim Mcycles/s", "M mem-accesses/s", "wall ms"],
-    );
-    for (name, scheme) in [
-        ("Baseline", Scheme::BASELINE),
-        ("SEAL", Scheme::SEAL),
-        ("Counter", Scheme::COUNTER),
-    ] {
-        let w = layers::conv_workload(&layer, 0.5, &cfg, 1440, 2);
-        let t0 = Instant::now();
-        let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
-        let dt = t0.elapsed().as_secs_f64();
-        t.row(
-            name,
-            vec![
-                s.cycles as f64 / dt / 1e6,
-                (s.l1_hits + s.l1_misses) as f64 / dt / 1e6,
-                dt * 1e3,
-            ],
-        );
+    let opts = PerfOptions { quick: false, compare_lockstep: true };
+    let report = perf::run(
+        &opts,
+        Path::new(perf::DEFAULT_BENCH_PATH),
+        Path::new(perf::DEFAULT_BASELINE_PATH),
+    )
+    .unwrap_or_else(|e| panic!("perf basket failed: {e:#}"));
+    for r in &report.results {
+        if let Some(speedup) = r.event_speedup() {
+            println!(
+                "[perf] {}: event {:.2} Mcycles/s, lockstep {:.2} Mcycles/s, speedup {speedup:.2}x",
+                r.name,
+                r.cycles_per_sec / 1e6,
+                r.lockstep.map(|(_, l)| l).unwrap_or(0.0) / 1e6
+            );
+        }
     }
-    t.emit("perf_simulator.csv");
+    if report.regressed {
+        println!("[perf] WARNING: regression vs committed baseline (see BENCH_perf.json)");
+    }
 }

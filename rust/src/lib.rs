@@ -4,13 +4,14 @@
 //! - **L1/L2 (build time)**: JAX + Pallas under `python/`, AOT-lowered to
 //!   HLO text artifacts (`make artifacts`).
 //! - **L3 (this crate)**: the paper's system — a cycle-level secure-GPU
-//!   memory simulator ([`sim`]), the SE/ColoE encryption schemes
-//!   ([`sim::encryption`], [`model`]), a functional AES-128 path
-//!   ([`crypto`]), a PJRT runtime that executes the AOT artifacts
-//!   ([`runtime`]), an edge-serving coordinator ([`coordinator`]), the
-//!   model-extraction security evaluation ([`security`]), and the
-//!   parallel experiment-sweep engine every figure bench runs on
-//!   ([`sweep`]).
+//!   memory simulator ([`sim`], event-driven core in [`sim::event`]),
+//!   the SE/ColoE encryption schemes ([`sim::encryption`], [`model`]),
+//!   a functional AES-128 path ([`crypto`]), a PJRT runtime that
+//!   executes the AOT artifacts ([`runtime`]), an edge-serving
+//!   coordinator ([`coordinator`]), the model-extraction security
+//!   evaluation ([`security`]), the parallel experiment-sweep engine
+//!   every figure bench runs on ([`sweep`]), and the simulator-
+//!   throughput benchmark + CI regression gate ([`perf`]).
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -18,6 +19,7 @@
 pub mod coordinator;
 pub mod crypto;
 pub mod model;
+pub mod perf;
 pub mod runtime;
 pub mod security;
 pub mod sim;

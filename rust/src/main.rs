@@ -4,6 +4,7 @@
 //!   simulate   one workload (matmul/conv/pool/fc) under one scheme
 //!   network    whole-network inference under all six schemes
 //!   sweep      parallel scheme×network×ratio sweep -> results store
+//!   perf       simulator-throughput basket -> BENCH_perf.json + gate
 //!   security   victim training / substitute extraction / attacks
 //!   serve      encrypted-model serving demo (PJRT runtime)
 //!   info       print config + artifact inventory
@@ -11,7 +12,7 @@
 use std::path::Path;
 
 use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme};
+use seal::sim::{GpuConfig, Scheme, SimEngine};
 use seal::stats::Table;
 use seal::traffic::{self, gemm, layers};
 use seal::util::cli::Args;
@@ -22,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => simulate(&args),
         Some("network") => network(&args),
         Some("sweep") => seal::sweep::cli(&args),
+        Some("perf") => seal::perf::cli(&args),
         Some("security") => seal::security::cli(&args),
         Some("serve") => seal::coordinator::cli(&args),
         Some("info") => info(&args),
@@ -42,16 +44,20 @@ fn print_help() {
 USAGE: seal <subcommand> [flags]
 
   simulate  --workload matmul|conv|pool|fc --scheme <s> [--ratio r]
-            [--size n] [--sample t]
+            [--size n] [--sample t] [--engine event|lockstep]
   network   --model vgg16|resnet18|resnet34 [--ratio r] [--sample t]
   sweep     [--networks a,b,c] [--schemes all|s1,s2] [--ratios r1,r2]
             [--sample t] [--seed s] [--sequential] [--force]
-            (SEAL_SWEEP_THREADS caps the worker pool)
+            (SEAL_SWEEP_THREADS caps the worker pool; =1 runs inline)
+  perf      [--quick] [--compare-lockstep] [--out f] [--baseline f]
+            [--bless-baseline] [--no-gate]
+            (writes BENCH_perf.json; nonzero exit on >2x regression)
   security  train-victim|extract|attack --model <m> [--ratio r] ...
   serve     --model <m> [--requests n] [--batch b] [--scheme s]
   info
 
-Schemes: baseline direct counter direct+se counter+se seal (coloe+se)"
+Schemes: baseline direct counter direct+se counter+se seal (coloe+se)
+Engines: event (default, idle-gap skipping) | lockstep (reference)"
     );
 }
 
@@ -61,7 +67,10 @@ fn parse_scheme(args: &Args) -> Scheme {
 }
 
 fn simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = GpuConfig::default();
+    let engine_name = args.get_or("engine", "event");
+    let engine = SimEngine::parse(&engine_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown engine {engine_name:?} (event|lockstep)"))?;
+    let cfg = GpuConfig::default().with_engine(engine);
     let scheme = parse_scheme(args);
     let ratio = args.get_f64("ratio", 0.5);
     let sample = args.get_u64("sample", layers::DEFAULT_SAMPLE_TILES as u64) as usize;
@@ -91,6 +100,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let dt = t0.elapsed();
     println!("workload       : {}", workload.name);
     println!("scheme         : {}", scheme.name());
+    println!("engine         : {}", engine.name());
     println!("sampled        : {:.4}", workload.sampled_fraction);
     println!("cycles         : {}", stats.cycles);
     println!("instrs         : {}", stats.instrs);

@@ -1,0 +1,578 @@
+//! `seal perf` — the repo's own performance benchmark: simulator
+//! throughput over a fixed basket of workloads, emitted as a
+//! machine-readable `BENCH_perf.json` and gated in CI against a
+//! committed baseline (DESIGN.md §7, README "Perf trajectory").
+//!
+//! Every figure bench, the `seal sweep` grid, and the serving
+//! coordinator's startup calibration funnel through the cycle-level
+//! simulator, so *simulated cycles per wall-clock second* is the
+//! repo's headline performance metric. The basket covers the hot
+//! shapes: single CONV/POOL layers, a dense GEMM, and the fig 13
+//! whole-network × all-six-schemes sweep. Each case can additionally
+//! be timed under the lockstep reference engine, which both measures
+//! the event-wheel speedup and re-asserts stat equality end to end.
+//!
+//! Regression gate: a case regresses when its cycles/sec falls below
+//! `baseline / REGRESSION_FACTOR` for the committed baseline in
+//! `benches/baseline_perf.json` (absorbs runner-to-runner hardware
+//! variance; the factor-2 margin is the CI contract). Baselines are
+//! mode-tagged and only gate same-mode runs, so re-bless the CI
+//! baseline on representative hardware with
+//! `seal perf --quick --bless-baseline` (CI's perf-smoke runs quick).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::model::zoo;
+use crate::sim::{GpuConfig, Scheme, SimEngine};
+use crate::stats::Table;
+use crate::traffic::{self, gemm, layers, network};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Default output path (repo root — the BENCH_* trajectory location).
+pub const DEFAULT_BENCH_PATH: &str = "BENCH_perf.json";
+/// Committed baseline the CI `perf-smoke` job gates against.
+pub const DEFAULT_BASELINE_PATH: &str = "benches/baseline_perf.json";
+/// A case regresses when `cycles_per_sec < baseline / REGRESSION_FACTOR`.
+pub const REGRESSION_FACTOR: f64 = 2.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PerfOptions {
+    /// Smaller samples / fewer networks — the CI smoke configuration.
+    pub quick: bool,
+    /// Also time every case under the lockstep reference engine and
+    /// assert (cycles, instrs) equality with the event engine.
+    pub compare_lockstep: bool,
+}
+
+/// One measured basket case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: &'static str,
+    pub kind: &'static str,
+    pub wall_s: f64,
+    /// Cycles actually simulated (raw, unscaled by wave sampling).
+    pub sim_cycles: u64,
+    pub instrs: u64,
+    pub cycles_per_sec: f64,
+    /// Lockstep reference timing: (wall_s, cycles_per_sec).
+    pub lockstep: Option<(f64, f64)>,
+}
+
+impl CaseResult {
+    /// Event-engine speedup over the lockstep reference.
+    pub fn event_speedup(&self) -> Option<f64> {
+        self.lockstep.map(|(_, lcps)| if lcps > 0.0 { self.cycles_per_sec / lcps } else { 0.0 })
+    }
+}
+
+/// Gate verdict for one case present in the baseline.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub name: String,
+    pub current_cps: f64,
+    pub baseline_cps: f64,
+    /// current / baseline (>= 1.0 means at least as fast).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Parsed `benches/baseline_perf.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    /// Authored without measurement (floor values) — reported in the
+    /// BENCH document so dashboards can tell the gate is soft.
+    pub provisional: bool,
+    /// Basket mode the baseline was recorded in ("quick" | "full").
+    /// Quick and full measure different workload sizes, so rates are
+    /// only comparable within one mode; a mismatch skips the gate.
+    /// `None` (legacy document) gates against any mode.
+    pub mode: Option<String>,
+    /// case name -> recorded cycles/sec.
+    pub cases: Vec<(String, f64)>,
+}
+
+impl Baseline {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.cases.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+}
+
+struct PerfCase {
+    name: &'static str,
+    kind: &'static str,
+    /// Run the case under an engine; returns (sim_cycles, instrs).
+    run: Box<dyn Fn(SimEngine) -> (u64, u64)>,
+}
+
+/// The fixed workload basket. Trace generation for single-layer cases
+/// happens here, outside the timed region; the fig 13 sweep times the
+/// full `run_network_seeded` path — exactly what `seal sweep` pays.
+fn basket(quick: bool) -> Vec<PerfCase> {
+    let cfg = GpuConfig::default();
+    let mut cases: Vec<PerfCase> = Vec::new();
+
+    {
+        let layer = zoo::fig10_conv_layers()[0];
+        let w = layers::conv_workload(&layer, 0.5, &cfg, if quick { 48 } else { 240 }, 1);
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "conv0_seal",
+            kind: "layer",
+            run: Box::new(move |e| {
+                let s = traffic::simulate(&w, cfg.clone().with_scheme(Scheme::SEAL).with_engine(e));
+                (s.cycles, s.instrs)
+            }),
+        });
+    }
+
+    {
+        let layer = zoo::fig11_pool_layers()[4];
+        let w = layers::pool_workload(&layer, 1.0, &cfg, if quick { 48 * 64 } else { 240 * 64 }, 1);
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "pool4_counter",
+            kind: "layer",
+            run: Box::new(move |e| {
+                let s =
+                    traffic::simulate(&w, cfg.clone().with_scheme(Scheme::COUNTER).with_engine(e));
+                (s.cycles, s.instrs)
+            }),
+        });
+    }
+
+    {
+        let n = if quick { 256 } else { 512 };
+        let w = gemm::matmul_workload(n, n, n, &cfg, if quick { 48 } else { 240 });
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "matmul_direct",
+            kind: "layer",
+            run: Box::new(move |e| {
+                let s =
+                    traffic::simulate(&w, cfg.clone().with_scheme(Scheme::DIRECT).with_engine(e));
+                (s.cycles, s.instrs)
+            }),
+        });
+    }
+
+    {
+        // The fig 13 grid: whole networks × all six schemes — the
+        // design-space-sweep workload the event engine targets.
+        let nets: Vec<&'static str> =
+            if quick { vec!["vgg16"] } else { crate::sweep::PAPER_NETS.to_vec() };
+        let sample = if quick { 16 } else { 96 };
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "fig13_networks",
+            kind: "network_sweep",
+            run: Box::new(move |e| {
+                let cfg = cfg.clone().with_engine(e);
+                let mut cycles = 0u64;
+                let mut instrs = 0u64;
+                for net_name in &nets {
+                    let net = zoo::by_name(net_name).expect("paper network");
+                    for (_, scheme) in Scheme::ALL_SIX {
+                        let run = network::run_network_seeded(&net, scheme, 0.5, &cfg, sample, 0);
+                        for (_, s, _) in &run.per_layer {
+                            cycles += s.cycles;
+                            instrs += s.instrs;
+                        }
+                    }
+                }
+                (cycles, instrs)
+            }),
+        });
+    }
+
+    cases
+}
+
+/// Measure the basket. With `compare_lockstep`, each case runs twice
+/// and the two engines' (cycles, instrs) must agree exactly — a
+/// whole-path differential check on top of `tests/event_vs_lockstep`.
+pub fn run_basket(opts: &PerfOptions) -> Vec<CaseResult> {
+    basket(opts.quick)
+        .into_iter()
+        .map(|case| {
+            let t0 = Instant::now();
+            let (cycles, instrs) = (case.run)(SimEngine::Event);
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let lockstep = if opts.compare_lockstep {
+                let t1 = Instant::now();
+                let (lc, li) = (case.run)(SimEngine::Lockstep);
+                let lw = t1.elapsed().as_secs_f64().max(1e-9);
+                assert_eq!(
+                    (lc, li),
+                    (cycles, instrs),
+                    "event vs lockstep diverged in perf case {}",
+                    case.name
+                );
+                Some((lw, lc as f64 / lw))
+            } else {
+                None
+            };
+            CaseResult {
+                name: case.name,
+                kind: case.kind,
+                wall_s: wall,
+                sim_cycles: cycles,
+                instrs,
+                cycles_per_sec: cycles as f64 / wall,
+                lockstep,
+            }
+        })
+        .collect()
+}
+
+/// Compare measured cases against the baseline (cases absent from the
+/// baseline are reported but cannot regress).
+pub fn gate(results: &[CaseResult], baseline: &Baseline) -> Vec<GateRow> {
+    results
+        .iter()
+        .filter_map(|r| {
+            let base = baseline.get(r.name)?;
+            let ratio = if base > 0.0 { r.cycles_per_sec / base } else { 1.0 };
+            Some(GateRow {
+                name: r.name.to_string(),
+                current_cps: r.cycles_per_sec,
+                baseline_cps: base,
+                ratio,
+                regressed: r.cycles_per_sec < base / REGRESSION_FACTOR,
+            })
+        })
+        .collect()
+}
+
+/// Parse a baseline document (`seal-perf-baseline/v1`).
+pub fn parse_baseline(text: &str) -> anyhow::Result<Baseline> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+    let provisional = j.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+    let mode = j.get("mode").and_then(Json::as_str).map(str::to_string);
+    let mut cases = Vec::new();
+    if let Some(Json::Obj(m)) = j.get("cases") {
+        for (name, v) in m {
+            let cps = v
+                .get("cycles_per_sec")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("baseline case {name:?}: bad cycles_per_sec"))?;
+            cases.push((name.clone(), cps));
+        }
+    } else {
+        anyhow::bail!("baseline: missing \"cases\" object");
+    }
+    Ok(Baseline { provisional, mode, cases })
+}
+
+/// Load the committed baseline; `Ok(None)` when the file is absent.
+pub fn load_baseline(path: &Path) -> anyhow::Result<Option<Baseline>> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => Ok(Some(parse_baseline(&text)?)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(anyhow::anyhow!("read {}: {e}", path.display())),
+    }
+}
+
+/// Serialize a baseline document from measured results. `mode` is the
+/// basket mode the numbers were recorded in ("quick" | "full"); the
+/// gate only fires when the current run's mode matches.
+pub fn baseline_document(
+    results: &[CaseResult],
+    provisional: bool,
+    note: &str,
+    mode: &str,
+) -> String {
+    let cases: std::collections::BTreeMap<String, Json> = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.to_string(),
+                Json::obj(vec![("cycles_per_sec", Json::num(r.cycles_per_sec))]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str("seal-perf-baseline/v1")),
+        ("provisional", Json::Bool(provisional)),
+        ("mode", Json::str(mode)),
+        ("note", Json::str(note)),
+        ("cases", Json::Obj(cases)),
+    ])
+    .to_string()
+}
+
+/// The whole `seal perf` outcome.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub results: Vec<CaseResult>,
+    pub gate: Vec<GateRow>,
+    pub regressed: bool,
+    pub baseline_found: bool,
+    pub baseline_provisional: bool,
+    /// Baseline exists but was recorded in a different basket mode —
+    /// rates are not comparable, so the gate was skipped.
+    pub baseline_mode_mismatch: bool,
+}
+
+/// Serialize the BENCH document (`seal-perf/v1` — schema in README).
+pub fn document(report: &PerfReport, opts: &PerfOptions, baseline_path: &Path) -> String {
+    let generated = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let cases = report.results.iter().map(|r| {
+        let mut fields = vec![
+            ("name", Json::str(r.name)),
+            ("kind", Json::str(r.kind)),
+            ("wall_s", Json::num(r.wall_s)),
+            ("sim_cycles", Json::num(r.sim_cycles as f64)),
+            ("instrs", Json::num(r.instrs as f64)),
+            ("cycles_per_sec", Json::num(r.cycles_per_sec)),
+        ];
+        if let Some((lw, lcps)) = r.lockstep {
+            fields.push(("lockstep_wall_s", Json::num(lw)));
+            fields.push(("lockstep_cycles_per_sec", Json::num(lcps)));
+            fields.push(("event_speedup", Json::num(r.event_speedup().unwrap_or(0.0))));
+        }
+        if let Some(g) = report.gate.iter().find(|g| g.name == r.name) {
+            fields.push(("baseline_cycles_per_sec", Json::num(g.baseline_cps)));
+            fields.push(("vs_baseline", Json::num(g.ratio)));
+            fields.push(("regressed", Json::Bool(g.regressed)));
+        }
+        Json::obj(fields)
+    });
+    Json::obj(vec![
+        ("schema", Json::str("seal-perf/v1")),
+        ("mode", Json::str(if opts.quick { "quick" } else { "full" })),
+        ("generated_unix", Json::num(generated as f64)),
+        ("cases", Json::arr(cases)),
+        (
+            "baseline",
+            Json::obj(vec![
+                ("path", Json::str(&baseline_path.display().to_string())),
+                ("found", Json::Bool(report.baseline_found)),
+                ("provisional", Json::Bool(report.baseline_provisional)),
+                ("mode_mismatch", Json::Bool(report.baseline_mode_mismatch)),
+                ("regression_factor", Json::num(REGRESSION_FACTOR)),
+            ]),
+        ),
+        ("regressed", Json::Bool(report.regressed)),
+    ])
+    .to_string()
+}
+
+/// Human-readable summary table (markdown + results/ CSV).
+pub fn print_table(report: &PerfReport) {
+    let mut t = Table::new(
+        "§Perf: simulator throughput basket",
+        &["wall ms", "Msim-cycles", "Mcycles/s", "event speedup", "vs baseline"],
+    );
+    for r in &report.results {
+        let vs = report
+            .gate
+            .iter()
+            .find(|g| g.name == r.name)
+            .map(|g| g.ratio)
+            .unwrap_or(0.0);
+        t.row(
+            r.name,
+            vec![
+                r.wall_s * 1e3,
+                r.sim_cycles as f64 / 1e6,
+                r.cycles_per_sec / 1e6,
+                r.event_speedup().unwrap_or(0.0),
+                vs,
+            ],
+        );
+    }
+    t.emit("perf_basket.csv");
+}
+
+/// Run the basket, gate against the baseline, and write the BENCH
+/// document. Does not exit on regression — callers decide (the CLI
+/// fails, the bench binary only reports).
+pub fn run(opts: &PerfOptions, out: &Path, baseline_path: &Path) -> anyhow::Result<PerfReport> {
+    let mode = if opts.quick { "quick" } else { "full" };
+    let results = run_basket(opts);
+    let baseline = load_baseline(baseline_path)?;
+    let (gate_rows, found, provisional, mode_mismatch) = match &baseline {
+        Some(b) => {
+            // Quick and full baskets measure different workload sizes;
+            // only gate when the recorded mode matches (legacy
+            // documents without a mode gate against anything).
+            let mismatch = b.mode.as_deref().is_some_and(|m| m != mode);
+            let rows = if mismatch { Vec::new() } else { gate(&results, b) };
+            (rows, true, b.provisional, mismatch)
+        }
+        None => (Vec::new(), false, false, false),
+    };
+    let regressed = gate_rows.iter().any(|g| g.regressed);
+    let report = PerfReport {
+        results,
+        gate: gate_rows,
+        regressed,
+        baseline_found: found,
+        baseline_provisional: provisional,
+        baseline_mode_mismatch: mode_mismatch,
+    };
+    std::fs::write(out, document(&report, opts, baseline_path) + "\n")
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", out.display()))?;
+    print_table(&report);
+    println!("[perf] BENCH document -> {}", out.display());
+    if !found {
+        println!("[perf] no baseline at {} (gate skipped)", baseline_path.display());
+    } else if mode_mismatch {
+        println!(
+            "[perf] baseline at {} was recorded in {:?} mode but this is a {mode:?} run — \
+             gate skipped; re-bless with `seal perf{} --bless-baseline`",
+            baseline_path.display(),
+            baseline.as_ref().and_then(|b| b.mode.clone()).unwrap_or_default(),
+            if opts.quick { " --quick" } else { "" }
+        );
+    } else if provisional {
+        println!(
+            "[perf] baseline is provisional (floor values) — re-bless on real hardware \
+             with `seal perf{} --bless-baseline`",
+            if opts.quick { " --quick" } else { "" }
+        );
+    }
+    Ok(report)
+}
+
+/// `seal perf` CLI entry point.
+pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let quick = args.has("quick");
+    let opts = PerfOptions {
+        quick,
+        // Full runs compare against lockstep by default (the headline
+        // speedup number); quick CI runs skip it unless asked.
+        compare_lockstep: args.has("compare-lockstep") || !quick,
+    };
+    let out = args.get_or("out", DEFAULT_BENCH_PATH);
+    let baseline_path = args.get_or("baseline", DEFAULT_BASELINE_PATH);
+    let report = run(&opts, Path::new(&out), Path::new(&baseline_path))?;
+    if args.has("bless-baseline") {
+        let mode = if quick { "quick" } else { "full" };
+        let doc = baseline_document(
+            &report.results,
+            false,
+            &format!("blessed by `seal perf --bless-baseline` ({mode})"),
+            mode,
+        );
+        std::fs::write(&baseline_path, doc + "\n")
+            .map_err(|e| anyhow::anyhow!("write {baseline_path}: {e}"))?;
+        println!("[perf] blessed baseline -> {baseline_path}");
+        return Ok(());
+    }
+    if report.regressed && !args.has("no-gate") {
+        for g in report.gate.iter().filter(|g| g.regressed) {
+            eprintln!(
+                "[perf] REGRESSION {}: {:.2} Mcycles/s vs baseline {:.2} (floor {:.2})",
+                g.name,
+                g.current_cps / 1e6,
+                g.baseline_cps / 1e6,
+                g.baseline_cps / REGRESSION_FACTOR / 1e6
+            );
+        }
+        anyhow::bail!(
+            "simulator throughput regressed >{}x on {} case(s)",
+            REGRESSION_FACTOR,
+            report.gate.iter().filter(|g| g.regressed).count()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &'static str, cps: f64) -> CaseResult {
+        CaseResult {
+            name,
+            kind: "layer",
+            wall_s: 1.0,
+            sim_cycles: cps as u64,
+            instrs: 1,
+            cycles_per_sec: cps,
+            lockstep: Some((5.0, cps / 5.0)),
+        }
+    }
+
+    #[test]
+    fn gate_flags_only_2x_regressions() {
+        let results = vec![result("a", 100.0), result("b", 100.0), result("c", 100.0)];
+        let baseline = Baseline {
+            provisional: false,
+            mode: None,
+            cases: vec![
+                ("a".into(), 300.0), // 3x slower than baseline -> regressed
+                ("b".into(), 150.0), // 1.5x slower -> within the margin
+                // "c" absent: cannot regress
+            ],
+        };
+        let rows = gate(&results, &baseline);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].regressed, "a must regress: {rows:?}");
+        assert!(!rows[1].regressed, "b is within margin: {rows:?}");
+        assert!((rows[1].ratio - 100.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_document_roundtrips() {
+        let results = vec![result("conv0_seal", 2.5e7), result("fig13_networks", 1.0e7)];
+        let doc = baseline_document(&results, true, "test", "quick");
+        let parsed = parse_baseline(&doc).expect("parse back");
+        assert!(parsed.provisional);
+        assert_eq!(parsed.mode.as_deref(), Some("quick"));
+        assert_eq!(parsed.get("conv0_seal"), Some(2.5e7));
+        assert_eq!(parsed.get("fig13_networks"), Some(1.0e7));
+        assert_eq!(parsed.get("missing"), None);
+    }
+
+    #[test]
+    fn committed_baseline_parses_and_matches_basket_names() {
+        // The checked-in CI baseline must stay loadable and must name
+        // exactly the quick-basket cases (and be marked for quick mode,
+        // which is what the perf-smoke job runs).
+        let text = std::fs::read_to_string(DEFAULT_BASELINE_PATH).expect("committed baseline");
+        let b = parse_baseline(&text).expect("valid baseline");
+        assert_eq!(b.mode.as_deref(), Some("quick"));
+        let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        assert_eq!(names, ["conv0_seal", "fig13_networks", "matmul_direct", "pool4_counter"]);
+    }
+
+    #[test]
+    fn bench_document_carries_gate_and_speedup() {
+        let results = vec![result("a", 100.0)];
+        let baseline = Baseline { provisional: true, mode: None, cases: vec![("a".into(), 300.0)] };
+        let rows = gate(&results, &baseline);
+        let report = PerfReport {
+            regressed: rows.iter().any(|g| g.regressed),
+            gate: rows,
+            results,
+            baseline_found: true,
+            baseline_provisional: true,
+            baseline_mode_mismatch: false,
+        };
+        let opts = PerfOptions { quick: true, compare_lockstep: true };
+        let doc = document(&report, &opts, Path::new("benches/baseline_perf.json"));
+        let j = Json::parse(&doc).expect("valid json");
+        assert_eq!(j.req("schema").as_str(), Some("seal-perf/v1"));
+        assert_eq!(j.req("mode").as_str(), Some("quick"));
+        assert_eq!(j.req("regressed").as_bool(), Some(true));
+        let case = &j.req("cases").as_arr().unwrap()[0];
+        assert_eq!(case.req("event_speedup").as_f64(), Some(5.0));
+        assert_eq!(case.req("regressed").as_bool(), Some(true));
+        assert_eq!(j.req("baseline").req("provisional").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn malformed_baseline_is_an_error_not_a_skip() {
+        assert!(parse_baseline("{}").is_err());
+        assert!(parse_baseline("{\"cases\":{\"a\":{}}}").is_err());
+        assert!(parse_baseline("not json").is_err());
+    }
+}

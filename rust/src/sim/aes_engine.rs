@@ -6,6 +6,11 @@
 //! 11.2 cycles — tracked internally in deci-cycles so the fractional
 //! occupancy accumulates exactly (the whole point of the paper is this
 //! throughput gap, so we must not round it away).
+//!
+//! Like the DRAM channel, the engine is reservation-based (no per-cycle
+//! tick): a `submit` books pipeline occupancy and returns the result
+//! cycle, which flows into the MC's in-flight completion times — the
+//! wakeups the event wheel fast-forwards to.
 
 use super::config::AesCfg;
 

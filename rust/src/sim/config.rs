@@ -3,6 +3,38 @@
 /// Memory line size in bytes (L1/L2/DRAM).
 pub const LINE: u64 = 128;
 
+/// Clock-advance strategy of the simulator core. Both engines produce
+/// **byte-identical** `SimStats` (enforced by `tests/event_vs_lockstep`
+/// and the golden-stats suite); they differ only in wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimEngine {
+    /// Tick every component once per cycle — the reference
+    /// implementation the event engine is differentially tested
+    /// against.
+    Lockstep,
+    /// Event-wheel scheduling (`sim::event`): timestamped work
+    /// registers its wakeup cycle and the global clock jumps idle gaps.
+    #[default]
+    Event,
+}
+
+impl SimEngine {
+    pub fn parse(s: &str) -> Option<SimEngine> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lockstep" => SimEngine::Lockstep,
+            "event" => SimEngine::Event,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimEngine::Lockstep => "lockstep",
+            SimEngine::Event => "event",
+        }
+    }
+}
+
 /// Which line cipher runs at the memory controllers (paper §2.3/§3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EncEngine {
@@ -149,6 +181,8 @@ pub struct GpuConfig {
     pub frfcfs_window: usize,
     /// Stop after this many cycles even if work remains (sampling).
     pub max_cycles: u64,
+    /// Clock-advance strategy (identical stats either way).
+    pub engine: SimEngine,
 }
 
 impl Default for GpuConfig {
@@ -168,6 +202,7 @@ impl Default for GpuConfig {
             l2_ports: 1,
             frfcfs_window: 16,
             max_cycles: 20_000_000,
+            engine: SimEngine::Event,
         }
     }
 }
@@ -175,6 +210,11 @@ impl Default for GpuConfig {
 impl GpuConfig {
     pub fn with_scheme(mut self, scheme: Scheme) -> Self {
         self.scheme = scheme;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: SimEngine) -> Self {
+        self.engine = engine;
         self
     }
 
@@ -195,6 +235,19 @@ mod tests {
             assert_eq!(s.name(), name);
         }
         assert!(Scheme::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn engine_parse_and_default() {
+        assert_eq!(SimEngine::parse("lockstep"), Some(SimEngine::Lockstep));
+        assert_eq!(SimEngine::parse("EVENT"), Some(SimEngine::Event));
+        assert!(SimEngine::parse("bogus").is_none());
+        assert_eq!(GpuConfig::default().engine, SimEngine::Event);
+        let cfg = GpuConfig::default().with_engine(SimEngine::Lockstep);
+        assert_eq!(cfg.engine, SimEngine::Lockstep);
+        for e in [SimEngine::Lockstep, SimEngine::Event] {
+            assert_eq!(SimEngine::parse(e.name()), Some(e));
+        }
     }
 
     #[test]

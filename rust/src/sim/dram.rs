@@ -6,6 +6,11 @@
 //! data finish if issued now", and the model advances the bank/bus
 //! next-free cursors. FR-FCFS ordering is applied by the memory
 //! controller before calling in (see `mc.rs`).
+//!
+//! Being purely reservation-based, the channel needs no per-cycle tick
+//! and registers nothing with the event wheel itself: its timing
+//! surfaces as the completion cycles the MC tracks in-flight, which
+//! the MC registers (`mc::MemoryController::next_event`).
 
 use super::config::DramCfg;
 

@@ -1,0 +1,207 @@
+//! Event wheel: the clock-advance scheduler of the event-driven
+//! simulator core (DESIGN.md §7).
+//!
+//! Components register the cycle at which their next timestamped work
+//! becomes ready (an interconnect packet landing, a DRAM read burst
+//! completing) and the wheel answers "what is the earliest cycle at or
+//! after `now` that anything registered?". The GPU loop uses that to
+//! fast-forward the global clock past idle gaps instead of ticking
+//! through them one no-op cycle at a time.
+//!
+//! Two invariants keep the event-driven run *byte-identical* to the
+//! lockstep reference (`Gpu::run_lockstep`):
+//!
+//! 1. **No missed wakeups.** Every registration is made at a cycle
+//!    strictly before its wakeup value (all simulator latencies are
+//!    ≥ 1), and the wheel never discards an entry that is still in the
+//!    future, so a jump can never pass over a registered wakeup
+//!    (`never_jumps_past_a_registered_wakeup` below).
+//! 2. **Spurious wakeups are harmless.** A stale entry (its work was
+//!    consumed earlier, or several components registered the same
+//!    cycle) just makes the GPU execute a cycle the lockstep run also
+//!    executes; simulation state only changes in cycles where work
+//!    exists, so extra wakeups cost time, never accuracy.
+//!
+//! Level-triggered activity (an SM with an issuable warp, a memory
+//! controller with queued requests) is *not* registered here — those
+//! components act on every cycle while active, so the GPU consults
+//! them directly and simply declines to jump (see `Gpu::advance_clock`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-scheduler over registered wakeup cycles.
+///
+/// Implemented as a lazy binary heap: duplicates from burst
+/// registrations are collapsed at pop time (plus a cheap last-value
+/// filter at push time), and entries the clock has already passed are
+/// discarded on the way to the minimum.
+#[derive(Debug, Clone)]
+pub struct EventWheel {
+    heap: BinaryHeap<Reverse<u64>>,
+    /// A disabled wheel ignores registrations: the lockstep engine
+    /// shares the per-cycle step code but never pops wakeups, so
+    /// accepting them would only grow the heap and skew the lockstep
+    /// reference timing the event-engine speedup is measured against.
+    enabled: bool,
+    /// Most recently registered value — burst dedup (many components
+    /// registering the same cycle back to back is the common case).
+    last: Option<u64>,
+    /// Total registrations accepted (after dedup) — diagnostics.
+    pub registered: u64,
+    /// Wakeups handed back to the clock — diagnostics.
+    pub fired: u64,
+}
+
+impl Default for EventWheel {
+    fn default() -> EventWheel {
+        EventWheel::new()
+    }
+}
+
+impl EventWheel {
+    pub fn new() -> EventWheel {
+        EventWheel { heap: BinaryHeap::new(), enabled: true, last: None, registered: 0, fired: 0 }
+    }
+
+    /// A wheel that drops every registration (lockstep runs).
+    pub fn disabled() -> EventWheel {
+        EventWheel { enabled: false, ..EventWheel::new() }
+    }
+
+    /// Register a wakeup at `cycle`. Safe to call with a cycle that is
+    /// already registered (collapsed) or that later turns out to be
+    /// stale (discarded at pop time).
+    pub fn register(&mut self, cycle: u64) {
+        if !self.enabled || self.last == Some(cycle) {
+            return;
+        }
+        self.last = Some(cycle);
+        self.heap.push(Reverse(cycle));
+        self.registered += 1;
+    }
+
+    /// Earliest registered wakeup at or after `now`, consuming it and
+    /// every stale entry before it. `None` means nothing is scheduled —
+    /// the machine is quiescent.
+    pub fn next_at_or_after(&mut self, now: u64) -> Option<u64> {
+        while let Some(Reverse(t)) = self.heap.pop() {
+            if t >= now {
+                self.fired += 1;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Registered wakeups currently queued (stale entries included).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn returns_minimum_at_or_after_now() {
+        let mut w = EventWheel::new();
+        w.register(40);
+        w.register(12);
+        w.register(300);
+        assert_eq!(w.next_at_or_after(0), Some(12));
+        assert_eq!(w.next_at_or_after(13), Some(40));
+        // Entries strictly before `now` are stale and skipped.
+        assert_eq!(w.next_at_or_after(301), None);
+    }
+
+    #[test]
+    fn exact_match_is_returned_not_skipped() {
+        let mut w = EventWheel::new();
+        w.register(7);
+        assert_eq!(w.next_at_or_after(7), Some(7));
+        assert_eq!(w.next_at_or_after(7), None);
+    }
+
+    #[test]
+    fn burst_duplicates_collapse_to_one_wakeup() {
+        let mut w = EventWheel::new();
+        for _ in 0..100 {
+            w.register(9);
+        }
+        assert_eq!(w.registered, 1, "back-to-back duplicates are deduped");
+        assert_eq!(w.next_at_or_after(0), Some(9));
+        assert_eq!(w.next_at_or_after(0), None);
+    }
+
+    #[test]
+    fn interleaved_duplicates_are_harmless() {
+        let mut w = EventWheel::new();
+        w.register(5);
+        w.register(9);
+        w.register(5); // not adjacent to the first 5: stored twice
+        assert_eq!(w.next_at_or_after(0), Some(5));
+        // The duplicate fires as a (harmless) spurious wakeup…
+        assert_eq!(w.next_at_or_after(5), Some(5));
+        // …and never hides the later entry.
+        assert_eq!(w.next_at_or_after(6), Some(9));
+    }
+
+    #[test]
+    fn empty_wheel_reports_quiescence() {
+        let mut w = EventWheel::new();
+        assert_eq!(w.next_at_or_after(0), None);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn disabled_wheel_drops_registrations() {
+        let mut w = EventWheel::disabled();
+        w.register(5);
+        w.register(9);
+        assert!(w.is_empty());
+        assert_eq!(w.registered, 0);
+        assert_eq!(w.next_at_or_after(0), None);
+    }
+
+    /// Property: however the clock advances, a jump computed from the
+    /// wheel never passes over a registered wakeup. This is invariant 1
+    /// of the event-vs-lockstep equivalence argument.
+    #[test]
+    fn never_jumps_past_a_registered_wakeup() {
+        let mut rng = Rng::seeded(7);
+        for _ in 0..200 {
+            let mut w = EventWheel::new();
+            let mut cycles: Vec<u64> = (0..(1 + rng.below(40))).map(|_| rng.below(1000)).collect();
+            for &c in &cycles {
+                w.register(c);
+            }
+            cycles.sort_unstable();
+            let mut now = 0u64;
+            loop {
+                // Reference answer: first registered cycle >= now.
+                let want = cycles.iter().copied().find(|&c| c >= now);
+                let got = w.next_at_or_after(now);
+                match (got, want) {
+                    (None, None) => break,
+                    (Some(g), Some(m)) => {
+                        assert!(g >= now, "wakeup {g} is in the past of {now}");
+                        assert_eq!(g, m, "jump target skipped a registered wakeup at {m}");
+                        // Consume the reference occurrence and advance
+                        // past it, like the GPU executing that cycle.
+                        let pos = cycles.iter().position(|&c| c == g).unwrap();
+                        cycles.remove(pos);
+                        now = g + 1;
+                    }
+                    (got, want) => panic!("wheel {got:?} vs reference {want:?} at {now}"),
+                }
+            }
+        }
+    }
+}

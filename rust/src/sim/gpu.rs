@@ -1,6 +1,22 @@
 //! Top-level simulator: SMs ↔ crossbar ↔ L2 slices ↔ memory
-//! controllers, advanced cycle by cycle (with event fast-forward when
-//! every warp is blocked on memory).
+//! controllers.
+//!
+//! Two clock-advance engines share one `step()` (the per-cycle
+//! dataflow): the **lockstep** reference ticks every cycle, and the
+//! default **event-driven** engine (DESIGN.md §7) lets timestamped
+//! work register wakeups with an [`EventWheel`] so the clock jumps
+//! idle gaps. Stats are byte-identical between the two — skipped
+//! cycles are provably no-ops:
+//!
+//! - every *timestamped* transition (interconnect packets in
+//!   `req_q`/`resp_q`, DRAM read completions in the MCs) registers its
+//!   ready cycle with the wheel at creation time;
+//! - every *level-triggered* activity (an SM with an issuable warp, an
+//!   MC with queued requests, a ripe-but-port-limited L2 request at a
+//!   queue head) suppresses jumping entirely via `busy_next_cycle`;
+//! - stats only mutate inside those two classes of cycle, so executing
+//!   a superset of them (lockstep) or exactly them (event) measures
+//!   the same machine.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -8,13 +24,14 @@ use std::sync::Arc;
 
 use super::cache::{self, Cache};
 use cache::Access;
-use super::config::{GpuConfig, LINE};
+use super::config::{GpuConfig, SimEngine, LINE};
 use super::core::{AccessStream, Sm, SmMemReq};
 use super::encryption::EncMap;
+use super::event::EventWheel;
 use super::mc::{McStats, MemReq, MemoryController};
 
 /// End-of-run measurements (the raw material for every figure).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     pub cycles: u64,
     pub instrs: u64,
@@ -73,6 +90,22 @@ pub struct Gpu {
     /// slice -> SM response queues: (ready_cycle, line).
     resp_q: Vec<VecDeque<(u64, u64)>>,
     enc_map: Arc<dyn EncMap>,
+    /// Wakeup registry of the event engine. Lockstep runs share the
+    /// same step code but use a disabled wheel (registrations dropped):
+    /// they never pop wakeups, so collecting them would only grow the
+    /// heap and skew the reference timing.
+    wheel: EventWheel,
+    /// Last completion cycle registered per MC: an MC's earliest
+    /// in-flight completion is re-examined every executed cycle, so
+    /// without this filter a busy memory-bound stretch would push the
+    /// same handful of future wakeups into the wheel once per cycle
+    /// per channel. A value is only re-registered when it changes;
+    /// the already-queued entry covers the unchanged case (entries are
+    /// popped no earlier than their cycle, and registrations always
+    /// happen strictly before it).
+    mc_next_reg: Vec<u64>,
+    /// Idle-gap jumps taken by the event engine (diagnostics).
+    jumps: u64,
     now: u64,
 }
 
@@ -95,19 +128,37 @@ impl Gpu {
             .map(|_| L2Slice { cache: Cache::new(cfg.l2_slice), mshr: HashMap::new() })
             .collect();
         let mcs = (0..cfg.n_channels).map(|_| MemoryController::new(&cfg)).collect();
+        let wheel = match cfg.engine {
+            SimEngine::Event => EventWheel::new(),
+            SimEngine::Lockstep => EventWheel::disabled(),
+        };
         Gpu {
             req_q: (0..cfg.n_channels).map(|_| VecDeque::new()).collect(),
             resp_q: (0..cfg.n_sms).map(|_| VecDeque::new()).collect(),
+            mc_next_reg: vec![u64::MAX; cfg.n_channels],
             sms,
             slices,
             mcs,
             enc_map,
             cfg,
+            wheel,
+            jumps: 0,
             now: 0,
         }
     }
 
+    /// Run to completion under the configured clock engine. Both
+    /// engines produce byte-identical stats (`tests/event_vs_lockstep`).
     pub fn run(&mut self) -> SimStats {
+        match self.cfg.engine {
+            SimEngine::Lockstep => self.run_lockstep(),
+            SimEngine::Event => self.run_event(),
+        }
+    }
+
+    /// Reference engine: execute every cycle, idle or not (`step`
+    /// advances the clock by one).
+    fn run_lockstep(&mut self) -> SimStats {
         let mut hit_cap = false;
         loop {
             if self.now >= self.cfg.max_cycles {
@@ -118,10 +169,65 @@ impl Gpu {
             if self.all_done() {
                 break;
             }
-            self.maybe_fast_forward();
         }
         self.flush_writebacks();
         self.collect(hit_cap)
+    }
+
+    /// Event engine: after each executed cycle, fast-forward the clock
+    /// to the next cycle with work.
+    fn run_event(&mut self) -> SimStats {
+        let mut hit_cap = false;
+        loop {
+            if self.now >= self.cfg.max_cycles {
+                hit_cap = true;
+                break;
+            }
+            self.step();
+            if self.all_done() {
+                break;
+            }
+            self.advance_clock();
+        }
+        self.flush_writebacks();
+        self.collect(hit_cap)
+    }
+
+    /// Something acts at cycle `self.now` regardless of the wheel:
+    /// an SM with an issuable warp (issue/stall accounting runs every
+    /// cycle), an MC with queued requests (FR-FCFS picks depend on the
+    /// current cycle), or a ripe L2 request left at a queue head by the
+    /// per-cycle port limit.
+    fn busy_next_cycle(&self) -> bool {
+        let now = self.now;
+        self.sms.iter().any(|s| s.has_ready())
+            || self.mcs.iter().any(|m| m.has_pending())
+            || self.req_q.iter().any(|q| q.front().is_some_and(|&(ready, _)| ready <= now))
+    }
+
+    /// Advance `now` past an idle gap. Called after `step` has already
+    /// moved the clock to the next cycle: stay put when any
+    /// level-triggered component is busy, else jump to the wheel's
+    /// earliest registered wakeup (capped at `max_cycles`, which the
+    /// lockstep reference would also reach by spinning through no-op
+    /// cycles).
+    fn advance_clock(&mut self) {
+        if self.busy_next_cycle() {
+            return;
+        }
+        let target = match self.wheel.next_at_or_after(self.now) {
+            Some(t) => t.min(self.cfg.max_cycles),
+            None => self.cfg.max_cycles,
+        };
+        if target > self.now {
+            self.jumps += 1;
+            self.now = target;
+        }
+    }
+
+    /// Idle-gap jumps the event engine has taken so far.
+    pub fn clock_jumps(&self) -> u64 {
+        self.jumps
     }
 
     fn step(&mut self) {
@@ -144,9 +250,18 @@ impl Gpu {
                 self.slice_access(ch, req, now);
             }
         }
-        // 3. MC scheduling.
-        for mc in &mut self.mcs {
+        // 3. MC scheduling. Newly in-flight reads are timestamped:
+        //    register each controller's earliest completion (when it
+        //    changed — see `mc_next_reg`) so the event engine can jump
+        //    straight to it once queues drain.
+        for (ch, mc) in self.mcs.iter_mut().enumerate() {
             mc.tick(now);
+            if let Some(t) = mc.next_event() {
+                if self.mc_next_reg[ch] != t {
+                    self.mc_next_reg[ch] = t;
+                    self.wheel.register(t);
+                }
+            }
         }
         // 4. SM fills + issue.
         for sm_id in 0..self.cfg.n_sms {
@@ -162,12 +277,14 @@ impl Gpu {
         let n_ch = self.cfg.n_channels as u64;
         for sm in &mut self.sms {
             let req_q = &mut self.req_q;
+            let wheel = &mut self.wheel;
             let mut send = |r: SmMemReq| {
                 let ch = ((r.line / LINE) % n_ch) as usize;
                 if req_q[ch].len() >= REQ_Q_CAP {
                     return false;
                 }
                 req_q[ch].push_back((now + icnt_lat, r));
+                wheel.register(now + icnt_lat);
                 true
             };
             sm.issue(&mut send);
@@ -183,6 +300,7 @@ impl Gpu {
         }
         if let Some(waiters) = self.slices[ch].mshr.remove(&line) {
             let ready = now + self.cfg.icnt_latency;
+            self.wheel.register(ready);
             for sm in waiters {
                 self.resp_q[sm].push_back((ready, line));
             }
@@ -220,6 +338,7 @@ impl Gpu {
             self.slices[ch].cache.access(line, false);
             let ready = now + self.cfg.l2_slice.latency + self.cfg.icnt_latency;
             self.resp_q[req.sm].push_back((ready, line));
+            self.wheel.register(ready);
             return;
         }
         // Miss: to DRAM, if the MC can take it; otherwise retry.
@@ -229,6 +348,7 @@ impl Gpu {
             self.slices[ch].mshr.insert(line, vec![req.sm]);
         } else {
             self.req_q[ch].push_front((now + 1, req));
+            self.wheel.register(now + 1);
         }
     }
 
@@ -238,37 +358,6 @@ impl Gpu {
             && self.resp_q.iter().all(|q| q.is_empty())
             && self.mcs.iter().all(|m| m.idle())
             && self.slices.iter().all(|s| s.mshr.is_empty())
-    }
-
-    /// If no SM can issue this cycle and no queue is ready, jump to the
-    /// next interesting cycle instead of idling cycle by cycle.
-    fn maybe_fast_forward(&mut self) {
-        if self.sms.iter().any(|s| s.has_ready()) {
-            return;
-        }
-        let mut next = u64::MAX;
-        for q in &self.req_q {
-            if let Some(&(ready, _)) = q.front() {
-                next = next.min(ready);
-            }
-        }
-        for q in &self.resp_q {
-            if let Some(&(ready, _)) = q.front() {
-                next = next.min(ready);
-            }
-        }
-        for mc in &self.mcs {
-            if let Some(t) = mc.next_event() {
-                next = next.min(t);
-            }
-            if !mc.idle() {
-                // Pending work is scheduled by tick(): step normally.
-                return;
-            }
-        }
-        if next != u64::MAX && next > self.now {
-            self.now = next;
-        }
     }
 
     /// End-of-run: push every dirty L2 line (and dirty counter line)
@@ -331,7 +420,7 @@ impl Gpu {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::config::Scheme;
+    use crate::sim::config::{Scheme, SimEngine};
     use crate::sim::core::Slot;
     use crate::sim::encryption::AllEncrypted;
 
@@ -427,6 +516,52 @@ mod tests {
         let s = gpu.run();
         assert!(s.mc.enc_writes > 0, "stats: {:?}", s.mc);
         assert_eq!(s.mc.enc_writes + s.mc.plain_writes, 64 * 128);
+    }
+
+    #[test]
+    fn event_engine_skips_idle_gaps_without_missing_wakeups() {
+        let prog = |_: usize| vec![Slot::Load(0), Slot::Compute(1)];
+        let cfg = GpuConfig::default();
+        let mut gpu = gpu_with(cfg.clone(), 1, &prog);
+        let s = gpu.run();
+        assert!(!s.hit_max_cycles);
+        assert_eq!(s.instrs, 2);
+        // A single in-flight load leaves the whole machine idle for the
+        // interconnect + DRAM round trip: the clock must jump it.
+        assert!(gpu.clock_jumps() > 0, "no idle-gap jump taken");
+        // …and the jumps changed nothing: the lockstep reference agrees
+        // on every counter, including the cycle count.
+        let mut ls = gpu_with(cfg.with_engine(SimEngine::Lockstep), 1, &prog);
+        assert_eq!(ls.run(), s);
+        assert_eq!(ls.clock_jumps(), 0, "lockstep must never jump");
+    }
+
+    #[test]
+    fn event_engine_matches_lockstep_across_schemes() {
+        // Mixed compute/load traffic over several warps: enough to
+        // exercise MSHR merging, FR-FCFS reordering, and AES queueing.
+        let prog = |i: usize| -> Vec<Slot> {
+            (0..48u64)
+                .map(|j| {
+                    if j % 3 == 0 {
+                        Slot::Compute(4)
+                    } else {
+                        Slot::Load((i as u64 * 64 + j) * 4096 + j * LINE)
+                    }
+                })
+                .collect()
+        };
+        for scheme in [Scheme::BASELINE, Scheme::DIRECT, Scheme::COUNTER, Scheme::SEAL] {
+            let mut ev = gpu_with(GpuConfig::default().with_scheme(scheme), 32, &prog);
+            let se = ev.run();
+            let mut ls = gpu_with(
+                GpuConfig::default().with_scheme(scheme).with_engine(SimEngine::Lockstep),
+                32,
+                &prog,
+            );
+            let sl = ls.run();
+            assert_eq!(se, sl, "engines diverged under {}", scheme.name());
+        }
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub struct MemReq {
 }
 
 /// Per-class access counters (reads, writes).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct McStats {
     pub plain_reads: u64,
     pub plain_writes: u64,
@@ -251,7 +251,17 @@ impl MemoryController {
         self.pending.is_empty() && self.inflight.is_empty()
     }
 
-    /// Earliest pending completion (fast-forward aid).
+    /// Whether scheduling work remains queued. While true the
+    /// controller acts on *every* cycle (FR-FCFS picks are a function
+    /// of the current cycle), so the event engine must not skip ahead —
+    /// this is the controller's level-triggered busy signal.
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Earliest in-flight read completion — the controller's next
+    /// timestamped wakeup, registered with the event wheel after every
+    /// executed cycle.
     pub fn next_event(&self) -> Option<u64> {
         self.inflight.peek().map(|Reverse((done, _))| *done)
     }

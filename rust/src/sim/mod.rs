@@ -8,6 +8,11 @@
 //! AES engine per controller plus the four encryption schemes
 //! (Direct, Counter-mode with a counter cache, ColoE, and the SE
 //! partial-encryption address map layered on any of them).
+//!
+//! The clock is advanced by one of two engines (see [`config::SimEngine`]
+//! and DESIGN.md §7): the event-wheel scheduler in [`event`] (default —
+//! idle gaps are skipped) or the lockstep reference it is
+//! differentially tested against. Stats are byte-identical either way.
 
 pub mod aes_engine;
 pub mod cache;
@@ -15,8 +20,10 @@ pub mod config;
 pub mod core;
 pub mod dram;
 pub mod encryption;
+pub mod event;
 pub mod gpu;
 pub mod mc;
 
-pub use config::{EncEngine, GpuConfig, Scheme, LINE};
+pub use config::{EncEngine, GpuConfig, Scheme, SimEngine, LINE};
+pub use event::EventWheel;
 pub use gpu::{Gpu, SimStats};

@@ -24,21 +24,35 @@ use super::store::{CellRow, SimSummary};
 /// Runner knobs.
 #[derive(Debug, Clone)]
 pub struct RunnerCfg {
-    /// Worker threads (1 = sequential semantics on the pool path).
+    /// Worker threads. `1` is a hard contract: the sweep runs *inline*
+    /// on the calling thread with no pool at all (`run_parallel`
+    /// degenerates to [`run_sequential`]), so `SEAL_SWEEP_THREADS=1`
+    /// CI traces are single-threaded and deterministic to debug.
     pub threads: usize,
 }
 
 impl RunnerCfg {
     /// `SEAL_SWEEP_THREADS` override, else the machine's parallelism.
     pub fn from_env() -> RunnerCfg {
-        let threads = std::env::var("SEAL_SWEEP_THREADS")
-            .ok()
-            .and_then(|s| s.parse().ok())
+        Self::from_threads_str(std::env::var("SEAL_SWEEP_THREADS").ok().as_deref())
+    }
+
+    /// Pure form of [`RunnerCfg::from_env`] (unit-testable without
+    /// touching process environment). Unparseable or zero values fall
+    /// back to the machine's parallelism.
+    pub fn from_threads_str(s: Option<&str>) -> RunnerCfg {
+        let threads = s
+            .and_then(|s| s.trim().parse().ok())
             .filter(|&n| n > 0)
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
             });
         RunnerCfg { threads }
+    }
+
+    /// Whether this config runs sweeps inline (no worker pool).
+    pub fn is_inline(&self) -> bool {
+        self.threads == 1
     }
 }
 
@@ -152,6 +166,11 @@ pub fn run_sequential(spec: &SweepSpec) -> Vec<CellRow> {
 
 /// Run every cell across a scoped worker pool; the returned rows are
 /// in enumeration order regardless of scheduling.
+///
+/// With an effective thread count of 1 (`SEAL_SWEEP_THREADS=1`, or a
+/// single-cell grid) no pool is created: every cell runs inline on the
+/// calling thread, byte-identical to [`run_sequential`] and with
+/// single-threaded stack traces.
 pub fn run_parallel(spec: &SweepSpec, rc: &RunnerCfg) -> Vec<CellRow> {
     let cells = spec.cells();
     if cells.is_empty() {
@@ -164,15 +183,19 @@ pub fn run_parallel(spec: &SweepSpec, rc: &RunnerCfg) -> Vec<CellRow> {
     let slots: Vec<Mutex<Option<CellRow>>> = cells.iter().map(|_| Mutex::new(None)).collect();
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for _ in 0..n_threads {
-            s.spawn(|| loop {
+        for t in 0..n_threads {
+            let worker = || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= cells.len() {
                     break;
                 }
                 let row = run_cell(&cells[i], spec);
                 *slots[i].lock().unwrap() = Some(row);
-            });
+            };
+            std::thread::Builder::new()
+                .name(format!("seal-sweep-{t}"))
+                .spawn_scoped(s, worker)
+                .expect("spawn sweep worker");
         }
     });
     slots
@@ -205,6 +228,31 @@ mod tests {
         let aes = &rows[1].sim;
         assert!(dram.cycles < aes.cycles, "dram {} aes {}", dram.cycles, aes.cycles);
         assert!(aes.cycles / aes.instrs > 10.0);
+    }
+
+    #[test]
+    fn threads_env_parsing_and_inline_contract() {
+        assert!(RunnerCfg::from_threads_str(Some("1")).is_inline());
+        assert_eq!(RunnerCfg::from_threads_str(Some(" 3 ")).threads, 3);
+        // Zero / garbage / unset fall back to machine parallelism (>0).
+        assert!(RunnerCfg::from_threads_str(Some("0")).threads > 0);
+        assert!(RunnerCfg::from_threads_str(Some("three")).threads > 0);
+        assert!(RunnerCfg::from_threads_str(None).threads > 0);
+    }
+
+    #[test]
+    fn single_thread_runs_inline_and_matches_sequential() {
+        let spec = SweepSpec {
+            name: "inline".into(),
+            targets: vec![SweepTarget::Matmul { m: 64, k: 64, n: 64 }],
+            schemes: vec!["Baseline".into(), "SEAL".into()],
+            ratios: vec![0.5],
+            sample_tiles: 4,
+            base_seed: 0,
+        };
+        let rc = RunnerCfg::from_threads_str(Some("1"));
+        assert!(rc.is_inline());
+        assert_eq!(run_parallel(&spec, &rc), run_sequential(&spec));
     }
 
     #[test]

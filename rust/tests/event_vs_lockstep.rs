@@ -1,0 +1,105 @@
+//! Differential suite: the event-driven simulator core must produce
+//! `SimStats` *identical* to the lockstep reference on the golden
+//! workloads (the equivalence contract of `sim::event` / DESIGN.md §7).
+//!
+//! The three golden workloads mirror `golden_stats.rs` (a dense
+//! matmul, a CONV layer, a POOL layer) and run under every paper
+//! scheme, plus a whole-network differential through the wave-sampled
+//! `run_network_seeded` path. Field-by-field equality covers cycles,
+//! per-class DRAM traffic, cache hit/miss counters, AES line counts,
+//! and stall accounting — if the event wheel ever skips a cycle that
+//! did work, one of these diverges.
+
+use seal::model::zoo;
+use seal::sim::{GpuConfig, Scheme, SimEngine, SimStats};
+use seal::traffic::{self, gemm, layers, network};
+
+fn run(w: &traffic::Workload, scheme: Scheme, engine: SimEngine) -> SimStats {
+    traffic::simulate(w, GpuConfig::default().with_scheme(scheme).with_engine(engine))
+}
+
+fn assert_engines_agree(w: &traffic::Workload, schemes: &[Scheme]) {
+    for &scheme in schemes {
+        let event = run(w, scheme, SimEngine::Event);
+        let lockstep = run(w, scheme, SimEngine::Lockstep);
+        assert_eq!(
+            event,
+            lockstep,
+            "event vs lockstep diverged: workload {} scheme {}",
+            w.name,
+            scheme.name()
+        );
+        assert!(!event.hit_max_cycles, "{}/{} hit the cycle cap", w.name, scheme.name());
+    }
+}
+
+const ALL: [Scheme; 6] = [
+    Scheme::BASELINE,
+    Scheme::DIRECT,
+    Scheme::COUNTER,
+    Scheme::DIRECT_SE,
+    Scheme::COUNTER_SE,
+    Scheme::SEAL,
+];
+
+#[test]
+fn matmul_golden_workload_identical() {
+    let cfg = GpuConfig::default();
+    let w = gemm::matmul_workload(256, 256, 256, &cfg, 48);
+    assert_engines_agree(&w, &ALL);
+}
+
+#[test]
+fn conv_golden_workload_identical() {
+    let cfg = GpuConfig::default();
+    let layer = zoo::fig10_conv_layers()[0];
+    let w = layers::conv_workload(&layer, 0.5, &cfg, 48, 0);
+    assert_engines_agree(&w, &ALL);
+}
+
+#[test]
+fn pool_golden_workload_identical() {
+    let cfg = GpuConfig::default();
+    let layer = zoo::fig11_pool_layers()[4];
+    let w = layers::pool_workload(&layer, 0.5, &cfg, 48 * 64, 4);
+    assert_engines_agree(&w, &ALL);
+}
+
+/// Whole-network differential: every per-layer `SimStats` and the
+/// derived whole-run aggregates must match through the sampled
+/// `run_network_seeded` path (the `seal sweep` / fig 13–15 hot path).
+#[test]
+fn network_run_identical_through_sampling() {
+    let net = zoo::by_name("vgg16").expect("vgg16 in zoo");
+    let cfg = GpuConfig::default();
+    for scheme in [Scheme::BASELINE, Scheme::SEAL] {
+        let ev = network::run_network_seeded(
+            &net,
+            scheme,
+            0.5,
+            &cfg.clone().with_engine(SimEngine::Event),
+            12,
+            0,
+        );
+        let ls = network::run_network_seeded(
+            &net,
+            scheme,
+            0.5,
+            &cfg.clone().with_engine(SimEngine::Lockstep),
+            12,
+            0,
+        );
+        assert_eq!(ev.latency_cycles, ls.latency_cycles, "{}", scheme.name());
+        assert_eq!(ev.ipc, ls.ipc, "{}", scheme.name());
+        assert_eq!(ev.enc_accesses, ls.enc_accesses, "{}", scheme.name());
+        assert_eq!(ev.ctr_accesses, ls.ctr_accesses, "{}", scheme.name());
+        assert_eq!(ev.per_layer.len(), ls.per_layer.len());
+        for ((name_e, stats_e, scale_e), (name_l, stats_l, scale_l)) in
+            ev.per_layer.iter().zip(ls.per_layer.iter())
+        {
+            assert_eq!(name_e, name_l);
+            assert_eq!(stats_e, stats_l, "layer {name_e} under {}", scheme.name());
+            assert_eq!(scale_e, scale_l, "layer {name_e} under {}", scheme.name());
+        }
+    }
+}
