@@ -7,7 +7,7 @@
 //!
 //!     cargo run --release --example secure_serving [n_requests]
 
-use seal::coordinator::server::{serve, ServeCfg};
+use seal::coordinator::server::{serve, Admission, ServeCfg};
 use seal::sim::Scheme;
 use seal::stats::Table;
 
@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
     let mut t = Table::new(
         "secure serving: latency/throughput per scheme",
-        &["mean us", "p99 us", "req/s", "mem slowdown", "accuracy"],
+        &["mean us", "p99 us", "req/s", "rejected", "mem slowdown", "accuracy"],
     );
     for (name, scheme) in [
         ("Baseline", Scheme::BASELINE),
@@ -27,6 +27,9 @@ fn main() -> anyhow::Result<()> {
             artifacts: "artifacts".into(),
             n_requests: n,
             batch_max: 8,
+            n_workers: 2,
+            queue_cap: 32,
+            admission: Admission::Block,
             scheme,
             se_ratio: 0.5,
             arrival_per_ms: 0.4,
@@ -39,6 +42,7 @@ fn main() -> anyhow::Result<()> {
                 report.latency_us.mean(),
                 report.latency_us.quantile(0.99) as f64,
                 report.throughput_rps,
+                report.rejected as f64,
                 report.slowdown,
                 report.sample_accuracy,
             ],

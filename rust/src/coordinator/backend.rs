@@ -1,0 +1,307 @@
+//! Inference backends the serving workers drive.
+//!
+//! Every worker owns its backend exclusively ([`InferenceBackend`] is
+//! `&mut self`), and every backend is built *from the sealed store's
+//! decrypted view* — the worker-side equivalent of the accelerator's
+//! on-chip fill (DESIGN.md §8):
+//!
+//! - [`PjrtBackend`]: the real path — a per-worker PJRT `Runtime` +
+//!   compiled predict executable fed the decrypted theta (requires
+//!   `make artifacts` and the real `xla` crate; the offline stub makes
+//!   construction fail up front so callers skip gracefully).
+//! - [`SyntheticBackend`]: a pure-Rust linear classifier over the
+//!   decrypted theta. Artifact-free and deterministic — the substrate
+//!   of `seal serve-bench`, CI serve-smoke, and the coordinator test
+//!   suite. `cost_repeats` re-runs the GEMV to emulate heavier models
+//!   (the service-time knob); predictions are independent of it.
+
+use std::sync::Arc;
+
+use crate::model::manifest::{Manifest, ModelInfo, ParamInfo};
+use crate::runtime::{argmax_rows, lit_f32, Executable, Runtime};
+use crate::util::rng::Rng;
+
+use super::secure_store::SecureModelStore;
+
+/// One worker's classification engine: `images[i]` is one flattened
+/// input; the result is one predicted class index per image.
+pub trait InferenceBackend {
+    fn infer(&mut self, images: &[&[f32]]) -> crate::Result<Vec<usize>>;
+}
+
+// -- synthetic ---------------------------------------------------------------
+
+/// Geometry + seeding of the synthetic serving workload (no artifacts
+/// needed). The model is a single conv-shaped tensor so SE row
+/// selection has real structure to bite on.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthSpec {
+    pub img_hw: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub seed: u64,
+    /// GEMV repetitions per request (service-time emulation).
+    pub cost_repeats: usize,
+}
+
+impl Default for SynthSpec {
+    fn default() -> SynthSpec {
+        SynthSpec { img_hw: 8, channels: 3, n_classes: 10, seed: 0x5ea1, cost_repeats: 1 }
+    }
+}
+
+impl SynthSpec {
+    pub fn img_len(&self) -> usize {
+        self.img_hw * self.img_hw * self.channels
+    }
+
+    pub fn theta_len(&self) -> usize {
+        // One [3, 3, 8, 64] conv tensor (HWIO, row axis = input channel).
+        3 * 3 * 8 * 64
+    }
+
+    /// A conv-shaped [`ModelInfo`] so `SecureModelStore::seal` runs the
+    /// real SE row selection over the synthetic theta.
+    pub fn model_info(&self) -> ModelInfo {
+        ModelInfo {
+            name: "synthetic".into(),
+            input_hw: self.img_hw,
+            input_channels: self.channels,
+            n_classes: self.n_classes,
+            theta_len: self.theta_len(),
+            params: vec![ParamInfo {
+                name: "conv".into(),
+                shape: vec![3, 3, 8, 64],
+                offset: 0,
+                size: self.theta_len(),
+                row_axis: Some(2),
+                layer_id: 0,
+                kind: "conv".into(),
+                se_eligible: true,
+            }],
+        }
+    }
+
+    /// The deterministic synthetic theta (standard-normal weights).
+    pub fn theta(&self) -> Vec<f32> {
+        let mut rng = Rng::seeded(self.seed);
+        (0..self.theta_len()).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// `n` request images with ground-truth labels from `reference` —
+    /// the serving engine's measured accuracy must come out at exactly
+    /// 1.0, which pins the whole seal → decrypt → infer path.
+    pub fn requests(&self, n: usize, reference: &SyntheticBackend) -> Vec<(Vec<f32>, i32)> {
+        let mut rng = Rng::seeded(self.seed ^ 0xda7a);
+        (0..n)
+            .map(|_| {
+                let image: Vec<f32> = (0..self.img_len()).map(|_| rng.f32()).collect();
+                let label = reference.label_of(&image) as i32;
+                (image, label)
+            })
+            .collect()
+    }
+}
+
+/// Pure-Rust linear classifier over the worker's decrypted on-chip
+/// view: `logits = W · x`, with `W` cycled out of the decrypted theta.
+pub struct SyntheticBackend {
+    weights: Vec<f32>,
+    img_len: usize,
+    n_classes: usize,
+    cost_repeats: usize,
+}
+
+impl SyntheticBackend {
+    /// Build from this worker's decrypt of the sealed store.
+    pub fn from_store(store: &SecureModelStore, spec: &SynthSpec) -> SyntheticBackend {
+        SyntheticBackend::from_theta(&store.decrypt(), spec)
+    }
+
+    pub fn from_theta(theta: &[f32], spec: &SynthSpec) -> SyntheticBackend {
+        assert!(!theta.is_empty(), "synthetic backend needs a non-empty theta");
+        let need = spec.img_len() * spec.n_classes;
+        let weights = (0..need).map(|i| theta[i % theta.len()]).collect();
+        SyntheticBackend {
+            weights,
+            img_len: spec.img_len(),
+            n_classes: spec.n_classes,
+            cost_repeats: spec.cost_repeats.max(1),
+        }
+    }
+
+    fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_classes];
+        for (c, o) in out.iter_mut().enumerate() {
+            let row = &self.weights[c * self.img_len..(c + 1) * self.img_len];
+            *o = row.iter().zip(x).map(|(w, v)| w * v).sum();
+        }
+        out
+    }
+
+    /// The class this backend will predict for `x` — ground truth for
+    /// synthetic request generation.
+    pub fn label_of(&self, x: &[f32]) -> usize {
+        argmax(&self.logits(x))
+    }
+}
+
+impl InferenceBackend for SyntheticBackend {
+    fn infer(&mut self, images: &[&[f32]]) -> crate::Result<Vec<usize>> {
+        let mut preds = Vec::with_capacity(images.len());
+        for &x in images {
+            anyhow::ensure!(
+                x.len() == self.img_len,
+                "synthetic backend: image of {} elements, expected {}",
+                x.len(),
+                self.img_len
+            );
+            // Service-time emulation: re-run the GEMV; black_box keeps
+            // the optimizer from collapsing the repeats.
+            for _ in 1..self.cost_repeats {
+                std::hint::black_box(self.logits(std::hint::black_box(x)));
+            }
+            preds.push(argmax(&self.logits(x)));
+        }
+        Ok(preds)
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// -- PJRT --------------------------------------------------------------------
+
+/// The real path: a per-worker PJRT runtime + predict executable fed
+/// the worker's decrypted theta.
+pub struct PjrtBackend {
+    /// Owns the PJRT client the executable runs on.
+    _rt: Runtime,
+    exe: Arc<Executable>,
+    theta_lit: xla::Literal,
+    theta_len: usize,
+    batch_cap: usize,
+    img_len: usize,
+    dims: [i64; 4],
+    n_classes: usize,
+}
+
+impl PjrtBackend {
+    /// Decrypt the sealed store and stand up this worker's runtime on
+    /// an already-resolved predict artifact (the caller — `serve` —
+    /// picks the Pallas vs. plain executable and its batch capacity in
+    /// exactly one place). Fails up front against the offline
+    /// `vendor/xla` stub.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        man: &Manifest,
+        artifact: &str,
+        batch_cap: usize,
+        store: &SecureModelStore,
+        hw: usize,
+        channels: usize,
+        n_classes: usize,
+    ) -> crate::Result<PjrtBackend> {
+        let onchip = store.decrypt();
+        let mut rt = Runtime::cpu()?;
+        let exe = rt.load(&man.hlo_path(artifact))?;
+        let theta_len = onchip.len();
+        let theta_lit = lit_f32(&onchip, &[theta_len as i64])?;
+        Ok(PjrtBackend {
+            _rt: rt,
+            exe,
+            theta_lit,
+            theta_len,
+            batch_cap,
+            img_len: hw * hw * channels,
+            dims: [batch_cap as i64, hw as i64, hw as i64, channels as i64],
+            n_classes,
+        })
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn infer(&mut self, images: &[&[f32]]) -> crate::Result<Vec<usize>> {
+        anyhow::ensure!(
+            images.len() <= self.batch_cap,
+            "batch of {} exceeds executable capacity {}",
+            images.len(),
+            self.batch_cap
+        );
+        let mut x = vec![0.0f32; self.batch_cap * self.img_len];
+        for (j, img) in images.iter().enumerate() {
+            x[j * self.img_len..(j + 1) * self.img_len].copy_from_slice(img);
+        }
+        let res = self.exe.run(&[
+            self.theta_lit.reshape(&[self.theta_len as i64])?,
+            lit_f32(&x, &self.dims)?,
+        ])?;
+        let preds = argmax_rows(&res[0], self.n_classes)?;
+        Ok(preds.into_iter().take(images.len()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_predictions_match_reference_labels() {
+        let spec = SynthSpec::default();
+        let info = spec.model_info();
+        let theta = spec.theta();
+        let store = SecureModelStore::seal(&info, &theta, 0.5, &SecureModelStore::DEMO_KEY);
+        // Worker-side view (through seal/decrypt) equals the plaintext
+        // view, so predictions agree bit for bit.
+        let mut sealed = SyntheticBackend::from_store(&store, &spec);
+        let plain = SyntheticBackend::from_theta(&theta, &spec);
+        let reqs = spec.requests(16, &plain);
+        let images: Vec<&[f32]> = reqs.iter().map(|(x, _)| x.as_slice()).collect();
+        let preds = sealed.infer(&images).unwrap();
+        for ((_, label), p) in reqs.iter().zip(&preds) {
+            assert_eq!(*label as usize, *p);
+        }
+    }
+
+    #[test]
+    fn cost_repeats_change_work_not_predictions() {
+        let spec = SynthSpec::default();
+        let theta = spec.theta();
+        let fast = SynthSpec { cost_repeats: 1, ..spec };
+        let slow = SynthSpec { cost_repeats: 64, ..spec };
+        let mut a = SyntheticBackend::from_theta(&theta, &fast);
+        let mut b = SyntheticBackend::from_theta(&theta, &slow);
+        let reqs = spec.requests(8, &SyntheticBackend::from_theta(&theta, &spec));
+        let images: Vec<&[f32]> = reqs.iter().map(|(x, _)| x.as_slice()).collect();
+        assert_eq!(a.infer(&images).unwrap(), b.infer(&images).unwrap());
+    }
+
+    #[test]
+    fn synthetic_rejects_wrong_image_geometry() {
+        let spec = SynthSpec::default();
+        let mut b = SyntheticBackend::from_theta(&spec.theta(), &spec);
+        let bad = vec![0.0f32; spec.img_len() + 1];
+        assert!(b.infer(&[bad.as_slice()]).is_err());
+    }
+
+    #[test]
+    fn synth_model_info_is_internally_consistent() {
+        let spec = SynthSpec::default();
+        let info = spec.model_info();
+        let total: usize = info.params.iter().map(|p| p.size).sum();
+        assert_eq!(total, info.theta_len);
+        assert_eq!(spec.theta().len(), info.theta_len);
+        assert_eq!(spec.img_len(), 8 * 8 * 3);
+    }
+}

@@ -1,0 +1,179 @@
+//! Dynamic batcher: each worker drains the shared admission queue into
+//! FIFO batches of at most `batch_max` requests.
+//!
+//! Policy (DESIGN.md §8): block (long-poll) for the batch head, then
+//! fill opportunistically for at most `batch_timeout` — under load a
+//! batch fills instantly to `batch_max`; under light traffic a lone
+//! request only ever waits one `batch_timeout` before execution.
+//! `next_batch` returning `None` means the queue is closed *and* fully
+//! drained: the worker's clean-shutdown signal (no admitted request is
+//! ever abandoned).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::{BoundedQueue, Pop};
+
+pub struct Batcher<T> {
+    queue: Arc<BoundedQueue<T>>,
+    batch_max: usize,
+    batch_timeout: Duration,
+    /// Head-of-batch poll granularity (re-checks closure while idle).
+    poll: Duration,
+    drained: usize,
+}
+
+impl<T> Batcher<T> {
+    /// `batch_max` is clamped to at least 1.
+    pub fn new(
+        queue: Arc<BoundedQueue<T>>,
+        batch_max: usize,
+        batch_timeout: Duration,
+    ) -> Batcher<T> {
+        Batcher {
+            queue,
+            batch_max: batch_max.max(1),
+            batch_timeout,
+            poll: Duration::from_millis(50),
+            drained: 0,
+        }
+    }
+
+    /// Override the idle poll granularity (tests).
+    pub fn with_poll(mut self, poll: Duration) -> Batcher<T> {
+        self.poll = poll;
+        self
+    }
+
+    pub fn batch_max(&self) -> usize {
+        self.batch_max
+    }
+
+    /// Total items this batcher has handed out across all batches.
+    pub fn drained(&self) -> usize {
+        self.drained
+    }
+
+    /// The next FIFO batch: blocks until a head item arrives, then
+    /// fills up to `batch_max` for at most `batch_timeout`. Returns
+    /// `None` once the queue is closed and fully drained.
+    pub fn next_batch(&mut self) -> Option<Vec<T>> {
+        let mut batch = Vec::with_capacity(self.batch_max);
+        loop {
+            match self.queue.pop_timeout(self.poll) {
+                Pop::Item(item) => {
+                    batch.push(item);
+                    break;
+                }
+                Pop::Timeout => continue,
+                Pop::Closed => return None,
+            }
+        }
+        let deadline = Instant::now() + self.batch_timeout;
+        while batch.len() < self.batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.queue.pop_timeout(deadline - now) {
+                Pop::Item(item) => batch.push(item),
+                // Closed: serve what we already hold; the *next*
+                // next_batch call reports the shutdown.
+                Pop::Timeout | Pop::Closed => break,
+            }
+        }
+        self.drained += batch.len();
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue_of(items: std::ops::Range<usize>, cap: usize) -> Arc<BoundedQueue<usize>> {
+        let q = Arc::new(BoundedQueue::new(cap));
+        for i in items {
+            q.try_push(i).unwrap();
+        }
+        q
+    }
+
+    #[test]
+    fn batch_never_exceeds_batch_max() {
+        let q = queue_of(0..10, 16);
+        q.close();
+        let mut b = Batcher::new(q, 4, Duration::from_millis(1));
+        let mut sizes = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 4, "batch of {} exceeds batch_max", batch.len());
+            sizes.push(batch.len());
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn drain_order_is_fifo_across_batches() {
+        let q = queue_of(0..9, 16);
+        q.close();
+        let mut b = Batcher::new(q, 4, Duration::from_millis(1));
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_with_pending_items_serves_them_first() {
+        // Producer disconnects (close) with requests still queued: the
+        // batcher must hand them all out before reporting shutdown.
+        let q = queue_of(0..3, 8);
+        q.close();
+        let mut b = Batcher::new(q, 2, Duration::from_millis(1));
+        assert_eq!(b.next_batch(), Some(vec![0, 1]));
+        assert_eq!(b.next_batch(), Some(vec![2]));
+        assert_eq!(b.next_batch(), None);
+        assert_eq!(b.next_batch(), None, "shutdown must be sticky");
+    }
+
+    #[test]
+    fn drained_accounting_matches_items_served() {
+        let q = queue_of(0..7, 8);
+        q.close();
+        let mut b = Batcher::new(q, 3, Duration::from_millis(1));
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 7);
+        assert_eq!(b.drained(), 7);
+    }
+
+    #[test]
+    fn head_wait_spans_idle_polls_until_an_item_arrives() {
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(4));
+        let qp = q.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                qp.try_push(42).unwrap();
+                qp.close();
+            });
+            let mut b =
+                Batcher::new(q, 4, Duration::from_millis(1)).with_poll(Duration::from_millis(5));
+            // Several idle polls elapse before the item lands.
+            assert_eq!(b.next_batch(), Some(vec![42]));
+            assert_eq!(b.next_batch(), None);
+        });
+    }
+
+    #[test]
+    fn batch_max_zero_is_clamped() {
+        let q = queue_of(0..2, 4);
+        q.close();
+        let mut b = Batcher::new(q, 0, Duration::from_millis(1));
+        assert_eq!(b.batch_max(), 1);
+        assert_eq!(b.next_batch(), Some(vec![0]));
+    }
+}

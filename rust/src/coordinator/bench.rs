@@ -1,0 +1,365 @@
+//! `seal serve-bench` — the serving engine's own benchmark: sweep
+//! schemes × worker counts × arrival rates over the synthetic backend
+//! and emit machine-readable `BENCH_serve.json` (schema
+//! `seal-serve/v1`, documented in README) for the CI serve-smoke job.
+//!
+//! Each grid cell runs the full coordinator path — Poisson producer →
+//! bounded queue → N workers × dynamic batcher → synthetic classifier
+//! over the sealed model's decrypted view — under backpressure
+//! admission, so throughput reflects end-to-end service capacity. A
+//! per-(scheme, rate) *scaling* summary records throughput across the
+//! worker axis and whether it is monotonically non-decreasing (within
+//! [`MONOTONIC_TOLERANCE`] to absorb shared-runner timing noise). One
+//! extra *shed* cell per (scheme, rate) drives a deliberately tiny
+//! queue to demonstrate load shedding: its rejected count is reported,
+//! never silently dropped.
+
+use crate::sim::Scheme;
+use crate::stats::Table;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::backend::SynthSpec;
+use super::server::{scheme_slowdown, serve_synthetic, Admission, ServeReport, SynthServeCfg};
+
+/// Default output path (repo root — the BENCH_* trajectory location).
+pub const DEFAULT_BENCH_PATH: &str = "BENCH_serve.json";
+/// Document schema tag.
+pub const SERVE_BENCH_SCHEMA: &str = "seal-serve/v1";
+/// A worker step counts as monotone when its throughput is at least
+/// this fraction of the previous step's (wall-clock measurements on
+/// shared runners jitter by a few percent).
+pub const MONOTONIC_TOLERANCE: f64 = 0.95;
+
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    pub quick: bool,
+    pub schemes: Vec<Scheme>,
+    /// Worker-count axis (sorted + deduped before the sweep).
+    pub workers: Vec<usize>,
+    /// Poisson arrival rates, requests per millisecond.
+    pub rates_per_ms: Vec<f64>,
+    pub n_requests: usize,
+    pub batch_max: usize,
+    pub queue_cap: usize,
+    /// Deliberately tiny queue for the load-shedding demo cell.
+    pub shed_queue_cap: usize,
+    /// Synthetic service-time knob (GEMV repetitions per request).
+    pub cost_repeats: usize,
+    pub se_ratio: f64,
+    /// Skip cycle-sim calibration and use this factor (tests).
+    pub slowdown_override: Option<f64>,
+}
+
+impl BenchOptions {
+    /// The CI smoke configuration (small, seconds-scale).
+    pub fn quick() -> BenchOptions {
+        BenchOptions {
+            quick: true,
+            schemes: vec![Scheme::BASELINE, Scheme::SEAL],
+            workers: vec![1, 2, 4],
+            rates_per_ms: vec![8.0],
+            n_requests: 64,
+            batch_max: 8,
+            queue_cap: 32,
+            shed_queue_cap: 2,
+            cost_repeats: 400,
+            se_ratio: 0.5,
+            slowdown_override: None,
+        }
+    }
+
+    pub fn full() -> BenchOptions {
+        BenchOptions {
+            quick: false,
+            schemes: vec![Scheme::BASELINE, Scheme::DIRECT, Scheme::COUNTER, Scheme::SEAL],
+            workers: vec![1, 2, 4, 8],
+            rates_per_ms: vec![2.0, 8.0, 32.0],
+            n_requests: 256,
+            batch_max: 8,
+            queue_cap: 64,
+            shed_queue_cap: 2,
+            cost_repeats: 800,
+            se_ratio: 0.5,
+            slowdown_override: None,
+        }
+    }
+}
+
+/// One measured grid cell: the arrival rate (the only coordinate the
+/// report does not already carry) plus the full serving report.
+#[derive(Debug)]
+pub struct BenchCell {
+    pub rate_per_ms: f64,
+    pub report: ServeReport,
+}
+
+/// Throughput across the worker axis for one (scheme, rate).
+#[derive(Debug)]
+pub struct ScalingRow {
+    pub scheme: &'static str,
+    pub rate_per_ms: f64,
+    pub workers: Vec<usize>,
+    pub throughput_rps: Vec<f64>,
+    pub monotonic: bool,
+}
+
+#[derive(Debug)]
+pub struct BenchReport {
+    pub mode: &'static str,
+    pub opts: BenchOptions,
+    pub cells: Vec<BenchCell>,
+    pub scaling: Vec<ScalingRow>,
+}
+
+impl BenchReport {
+    /// Every (scheme, rate) scaled monotonically across workers.
+    pub fn all_monotonic(&self) -> bool {
+        self.scaling.iter().all(|s| s.monotonic)
+    }
+}
+
+/// Run the grid. Worker counts are swept under backpressure admission
+/// (all requests served, so throughput compares like for like); each
+/// (scheme, rate) then runs one single-worker shed cell against
+/// `shed_queue_cap` to exercise rejection accounting.
+pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
+    let mut workers = opts.workers.clone();
+    workers.sort_unstable();
+    workers.dedup();
+    anyhow::ensure!(!workers.is_empty(), "serve-bench: empty worker axis");
+    anyhow::ensure!(!opts.schemes.is_empty(), "serve-bench: empty scheme axis");
+    anyhow::ensure!(!opts.rates_per_ms.is_empty(), "serve-bench: empty rate axis");
+
+    let spec = SynthSpec { cost_repeats: opts.cost_repeats, ..SynthSpec::default() };
+    let mut cells = Vec::new();
+    let mut scaling = Vec::new();
+    for &scheme in &opts.schemes {
+        let slowdown = opts
+            .slowdown_override
+            .unwrap_or_else(|| scheme_slowdown(scheme, opts.se_ratio));
+        for &rate in &opts.rates_per_ms {
+            let cell_cfg = |n_workers: usize, queue_cap: usize, admission: Admission| {
+                SynthServeCfg {
+                    spec,
+                    n_requests: opts.n_requests,
+                    batch_max: opts.batch_max,
+                    n_workers,
+                    queue_cap,
+                    admission,
+                    scheme,
+                    se_ratio: opts.se_ratio,
+                    arrival_per_ms: rate,
+                    slowdown,
+                }
+            };
+            let mut tps = Vec::with_capacity(workers.len());
+            for &w in &workers {
+                let report = serve_synthetic(&cell_cfg(w, opts.queue_cap, Admission::Block))?;
+                tps.push(report.throughput_rps);
+                cells.push(BenchCell { rate_per_ms: rate, report });
+            }
+            let monotonic = tps.windows(2).all(|p| p[1] >= p[0] * MONOTONIC_TOLERANCE);
+            scaling.push(ScalingRow {
+                scheme: scheme.name(),
+                rate_per_ms: rate,
+                workers: workers.clone(),
+                throughput_rps: tps,
+                monotonic,
+            });
+            // Load-shedding demo: one worker behind a tiny queue.
+            let shed = serve_synthetic(&cell_cfg(1, opts.shed_queue_cap, Admission::Shed))?;
+            cells.push(BenchCell { rate_per_ms: rate, report: shed });
+        }
+    }
+    Ok(BenchReport {
+        mode: if opts.quick { "quick" } else { "full" },
+        opts: opts.clone(),
+        cells,
+        scaling,
+    })
+}
+
+/// Serialize the BENCH document (`seal-serve/v1` — schema in README).
+pub fn document(r: &BenchReport) -> String {
+    let cells = r.cells.iter().map(|c| {
+        let rep = &c.report;
+        Json::obj(vec![
+            ("scheme", Json::str(rep.scheme)),
+            ("workers", Json::num(rep.n_workers as f64)),
+            ("arrival_per_ms", Json::num(c.rate_per_ms)),
+            ("admission", Json::str(rep.admission.name())),
+            ("queue_cap", Json::num(rep.queue_cap as f64)),
+            ("served", Json::num(rep.served as f64)),
+            ("rejected", Json::num(rep.rejected as f64)),
+            ("batches", Json::num(rep.n_batches as f64)),
+            ("throughput_rps", Json::num(rep.throughput_rps)),
+            ("mean_latency_us", Json::num(rep.latency_us.mean())),
+            ("p50_latency_us", Json::num(rep.latency_us.quantile(0.5) as f64)),
+            ("p99_latency_us", Json::num(rep.latency_us.quantile(0.99) as f64)),
+            ("max_latency_us", Json::num(rep.latency_us.max as f64)),
+            ("slowdown", Json::num(rep.slowdown)),
+            ("sample_accuracy", Json::num(rep.sample_accuracy)),
+        ])
+    });
+    let scaling = r.scaling.iter().map(|s| {
+        Json::obj(vec![
+            ("scheme", Json::str(s.scheme)),
+            ("arrival_per_ms", Json::num(s.rate_per_ms)),
+            ("workers", Json::arr(s.workers.iter().map(|&w| Json::num(w as f64)))),
+            ("throughput_rps", Json::arr(s.throughput_rps.iter().map(|&t| Json::num(t)))),
+            ("monotonic", Json::Bool(s.monotonic)),
+        ])
+    });
+    Json::obj(vec![
+        ("schema", Json::str(SERVE_BENCH_SCHEMA)),
+        ("mode", Json::str(r.mode)),
+        ("generated_unix", Json::num(crate::perf::unix_now() as f64)),
+        (
+            "engine",
+            Json::obj(vec![
+                ("backend", Json::str("synthetic")),
+                ("n_requests", Json::num(r.opts.n_requests as f64)),
+                ("batch_max", Json::num(r.opts.batch_max as f64)),
+                ("queue_cap", Json::num(r.opts.queue_cap as f64)),
+                ("shed_queue_cap", Json::num(r.opts.shed_queue_cap as f64)),
+                ("cost_repeats", Json::num(r.opts.cost_repeats as f64)),
+                ("se_ratio", Json::num(r.opts.se_ratio)),
+                ("monotonic_tolerance", Json::num(MONOTONIC_TOLERANCE)),
+            ]),
+        ),
+        ("cells", Json::arr(cells)),
+        ("scaling", Json::arr(scaling)),
+        ("all_monotonic", Json::Bool(r.all_monotonic())),
+    ])
+    .to_string()
+}
+
+/// Human-readable summary (markdown + results/ CSV).
+pub fn print_table(r: &BenchReport) {
+    let mut t = Table::new(
+        "§Serve: coordinator throughput/latency grid",
+        &["workers", "rate/ms", "req/s", "p50 us", "p99 us", "rejected", "accuracy"],
+    );
+    for c in &r.cells {
+        let rep = &c.report;
+        t.row(
+            &format!("{}/{}", rep.scheme, rep.admission.name()),
+            vec![
+                rep.n_workers as f64,
+                c.rate_per_ms,
+                rep.throughput_rps,
+                rep.latency_us.quantile(0.5) as f64,
+                rep.latency_us.quantile(0.99) as f64,
+                rep.rejected as f64,
+                rep.sample_accuracy,
+            ],
+        );
+    }
+    t.emit("serve_bench.csv");
+}
+
+/// `seal serve-bench` CLI entry point.
+pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let quick = args.has("quick");
+    let mut opts = if quick { BenchOptions::quick() } else { BenchOptions::full() };
+    if let Some(list) = args.get("schemes") {
+        let mut schemes = Vec::new();
+        for s in list.split(',') {
+            match Scheme::parse(s) {
+                Some(scheme) => schemes.push(scheme),
+                None => anyhow::bail!("unknown scheme {s:?}"),
+            }
+        }
+        opts.schemes = schemes;
+    }
+    let workers = args.get_list_u64("workers", &[]);
+    if !workers.is_empty() {
+        opts.workers = workers.iter().map(|&w| w.max(1) as usize).collect();
+    }
+    let rates = args.get_list_f64("rates", &[]);
+    if !rates.is_empty() {
+        opts.rates_per_ms = rates;
+    }
+    opts.n_requests = args.get_u64("requests", opts.n_requests as u64) as usize;
+    opts.batch_max = args.get_u64("batch", opts.batch_max as u64).max(1) as usize;
+    opts.queue_cap = args.get_u64("queue", opts.queue_cap as u64).max(1) as usize;
+    opts.cost_repeats = args.get_u64("cost", opts.cost_repeats as u64) as usize;
+    opts.se_ratio = args.get_f64("ratio", opts.se_ratio);
+
+    let report = run(&opts)?;
+    let out = args.get_or("out", DEFAULT_BENCH_PATH);
+    std::fs::write(&out, document(&report) + "\n")
+        .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+    print_table(&report);
+    println!("[serve-bench] BENCH document -> {out}");
+    for s in report.scaling.iter().filter(|s| !s.monotonic) {
+        println!(
+            "[serve-bench] WARNING: {}@{}req/ms throughput not monotonic across workers \
+             {:?}: {:?} req/s",
+            s.scheme, s.rate_per_ms, s.workers, s.throughput_rps
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Baseline-only grid: no cycle-sim calibration, milliseconds-fast.
+    fn tiny_opts() -> BenchOptions {
+        BenchOptions {
+            quick: true,
+            schemes: vec![Scheme::BASELINE],
+            workers: vec![2, 1], // deliberately unsorted
+            rates_per_ms: vec![100.0],
+            n_requests: 12,
+            batch_max: 4,
+            queue_cap: 8,
+            shed_queue_cap: 1,
+            cost_repeats: 1,
+            se_ratio: 0.5,
+            slowdown_override: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn grid_shape_and_rejection_accounting() {
+        let r = run(&tiny_opts()).unwrap();
+        // 2 worker cells + 1 shed cell.
+        assert_eq!(r.cells.len(), 3);
+        assert_eq!(r.scaling.len(), 1);
+        assert_eq!(r.scaling[0].workers, vec![1, 2], "axis must be sorted");
+        // Backpressure cells serve everything.
+        for c in &r.cells[..2] {
+            assert_eq!(c.report.served, 12);
+            assert_eq!(c.report.rejected, 0);
+        }
+        // The shed cell accounts for every generated request.
+        let shed = &r.cells[2].report;
+        assert_eq!(shed.admission, Admission::Shed);
+        assert_eq!(shed.served + shed.rejected, 12);
+    }
+
+    #[test]
+    fn document_schema_fields_roundtrip() {
+        let r = run(&tiny_opts()).unwrap();
+        let doc = document(&r);
+        let j = Json::parse(&doc).expect("valid json");
+        assert_eq!(j.req("schema").as_str(), Some(SERVE_BENCH_SCHEMA));
+        assert_eq!(j.req("mode").as_str(), Some("quick"));
+        assert!(j.req("all_monotonic").as_bool().is_some());
+        let cells = j.req("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 3);
+        for c in cells {
+            // Rejections are part of the contract: every cell reports them.
+            assert!(c.req("rejected").as_f64().is_some());
+            assert!(c.req("throughput_rps").as_f64().is_some());
+            assert!(c.req("p99_latency_us").as_f64().is_some());
+        }
+        let scaling = j.req("scaling").as_arr().unwrap();
+        assert_eq!(scaling[0].req("workers").as_arr().unwrap().len(), 2);
+        assert!(scaling[0].req("monotonic").as_bool().is_some());
+    }
+}

@@ -1,26 +1,53 @@
-//! Edge-serving coordinator: the L3 request path.
+//! Edge-serving coordinator: the L3 request path (DESIGN.md §8).
 //!
-//! A worker thread owns the PJRT runtime and the *encrypted* model
-//! store; requests flow through a bounded queue into a dynamic batcher;
-//! per-request latency combines the real PJRT execution time with the
-//! secure-memory slowdown the cycle simulator measured for the chosen
-//! scheme (the accelerator this binary "is" would spend that extra time
-//! on its GDDR bus — DESIGN.md §2).
+//! A coordinator owns a **bounded** admission queue ([`queue`]) with
+//! selectable overflow behaviour — backpressure or counted load
+//! shedding — and fans requests out to N worker threads. Each worker
+//! owns its own inference backend ([`backend`]: a per-worker PJRT
+//! runtime + executable, or the synthetic classifier) built from its
+//! own decrypted on-chip view of the sealed model
+//! ([`secure_store`]), and drains the queue through a per-worker
+//! dynamic batcher ([`batcher`]). Per-request latency combines the
+//! real execution time with the secure-memory slowdown the cycle
+//! simulator measured for the chosen scheme (memoized per
+//! scheme × SE ratio through the sweep store — `server::scheme_slowdown`).
+//!
+//! `seal serve` drives the PJRT path; `seal serve-bench` ([`bench`])
+//! sweeps schemes × workers × arrival rates over the synthetic backend
+//! and emits `BENCH_serve.json` for CI.
 
+pub mod backend;
+pub mod batcher;
+pub mod bench;
+pub mod queue;
 pub mod secure_store;
 pub mod server;
 
+pub use backend::{InferenceBackend, PjrtBackend, SynthSpec, SyntheticBackend};
+pub use batcher::Batcher;
+pub use queue::{BoundedQueue, Pop};
 pub use secure_store::SecureModelStore;
-pub use server::{ServeCfg, ServeReport};
+pub use server::{
+    poisson_gap_ms, run_engine, scheme_slowdown, serve, serve_synthetic, Admission, EngineCfg,
+    EngineStats, ServeCfg, ServeReport, SynthServeCfg,
+};
 
 use crate::util::cli::Args;
 
+/// `seal serve` CLI entry point.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
+    let admission_name = args.get_or("admission", "block");
+    let admission = Admission::parse(&admission_name)
+        .ok_or_else(|| anyhow::anyhow!("bad --admission {admission_name:?} (block|shed)"))?;
+    let batch = args.get_u64("batch", 8).max(1) as usize;
     let cfg = ServeCfg {
         model: args.get_or("model", "vgg16m"),
         artifacts: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
         n_requests: args.get_u64("requests", 64) as usize,
-        batch_max: args.get_u64("batch", 8) as usize,
+        batch_max: batch,
+        n_workers: args.get_u64("workers", 2).max(1) as usize,
+        queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
+        admission,
         scheme: crate::sim::Scheme::parse(&args.get_or("scheme", "seal"))
             .ok_or_else(|| anyhow::anyhow!("bad scheme"))?,
         se_ratio: args.get_f64("ratio", 0.5),
@@ -30,4 +57,9 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
     let report = server::serve(cfg)?;
     report.print();
     Ok(())
+}
+
+/// `seal serve-bench` CLI entry point.
+pub fn bench_cli(args: &Args) -> anyhow::Result<()> {
+    bench::cli(args)
 }

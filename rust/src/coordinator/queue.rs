@@ -1,0 +1,225 @@
+//! Bounded MPMC admission queue — the serving coordinator's front door.
+//!
+//! The queue is the *admission control point* of the request path
+//! (DESIGN.md §8): its capacity bounds coordinator memory no matter how
+//! fast requests arrive. Producers choose between two admission modes —
+//! [`BoundedQueue::try_push`] load-sheds when the queue is full (the
+//! caller owns rejection accounting; nothing is dropped silently) and
+//! [`BoundedQueue::push_blocking`] applies backpressure. Consumers
+//! (the per-worker [`super::batcher::Batcher`]s) use
+//! [`BoundedQueue::pop_timeout`]; after [`BoundedQueue::close`] they
+//! drain the remaining tail and then observe [`Pop::Closed`], which is
+//! the engine's clean-shutdown signal.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a timed pop.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
+    Timeout,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+#[derive(Debug)]
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer/multi-consumer FIFO with explicit
+/// admission control (shed vs. backpressure) and drain-then-close
+/// shutdown semantics.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// `cap` is clamped to at least 1 — a zero-capacity queue could
+    /// never admit anything.
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Load-shedding admission: `Err(item)` hands the item back when
+    /// the queue is full or closed, so the caller can account for the
+    /// rejection (it is never dropped silently).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.q.len() >= self.cap {
+            return Err(item);
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Backpressure admission: block until a slot frees up.
+    /// `Err(item)` only when the queue is (or becomes) closed.
+    pub fn push_blocking(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        while !st.closed && st.q.len() >= self.cap {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue with a bounded wait. FIFO across all producers.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Timeout;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the queue: admission is refused from now on; consumers
+    /// drain whatever is left and then observe [`Pop::Closed`]. Wakes
+    /// every blocked producer and consumer.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_shed_at_capacity() {
+        let q = BoundedQueue::new(3);
+        assert_eq!(q.capacity(), 3);
+        for i in 0..3 {
+            assert!(q.try_push(i).is_ok());
+        }
+        // Full: the item comes back to the caller.
+        assert_eq!(q.try_push(99), Err(99));
+        assert_eq!(q.len(), 3);
+        for want in 0..3 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(want));
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::<i32>::Timeout);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2));
+    }
+
+    #[test]
+    fn close_drains_tail_then_reports_closed() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        // Post-close admission is refused in both modes.
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.push_blocking(4), Err(4));
+        // But the tail is still served, in order.
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(2));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::<i32>::Closed);
+    }
+
+    #[test]
+    fn push_blocking_applies_backpressure_until_a_pop() {
+        let q = BoundedQueue::new(1);
+        q.try_push(0).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Blocks until the consumer below frees the slot.
+                assert!(q.push_blocking(1).is_ok());
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(q.pop_timeout(Duration::from_millis(100)), Pop::Item(0));
+            assert_eq!(q.pop_timeout(Duration::from_secs(5)), Pop::Item(1));
+        });
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_consumer() {
+        let q = BoundedQueue::<i32>::new(1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Parked on an empty queue until close() fires.
+                assert_eq!(q.pop_timeout(Duration::from_secs(5)), Pop::<i32>::Closed);
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+        });
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_producer() {
+        let q = BoundedQueue::new(1);
+        q.try_push(0).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // No consumer exists, so the slot never frees: the
+                // producer stays parked until close() hands the item back.
+                assert_eq!(q.push_blocking(1), Err(1));
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+        });
+        // The admitted tail still drains after close.
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(0));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::<i32>::Closed);
+    }
+}

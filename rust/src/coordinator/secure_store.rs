@@ -6,7 +6,11 @@
 //! This is the coordinator-side mirror of the paper's Figure 7: the
 //! flat theta is split into 128B lines; the SE mask (l1 row selection)
 //! marks encrypted lines; each encrypted line carries its colocated
-//! 8B counter. `decrypt()` is what the on-chip boundary does on a fill.
+//! 8B counter. `decrypt()` is what the on-chip boundary does on a fill
+//! — the serving coordinator seals once and every worker thread runs
+//! its own `decrypt()` against the shared store to build its private
+//! on-chip view (all read paths are `&self`, so workers share the
+//! store without locking).
 
 use crate::crypto::{CounterModeCipher, LINE_BYTES};
 use crate::model::importance::{build_mask, se_row_selection};
@@ -26,6 +30,12 @@ pub struct SecureModelStore {
 }
 
 impl SecureModelStore {
+    /// Demo sealing key shared by `seal serve`, `seal serve-bench`,
+    /// and the examples. A deployment provisions the key into the
+    /// accelerator's on-chip key register at enrollment (paper §3.1);
+    /// it never transits the bus this store models.
+    pub const DEMO_KEY: [u8; 16] = [42u8; 16];
+
     /// Seal a model: SE selection at `ratio` over the real weights,
     /// then encrypt the selected lines.
     pub fn seal(info: &ModelInfo, theta: &[f32], ratio: f64, key: &[u8; 16]) -> SecureModelStore {

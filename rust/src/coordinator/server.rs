@@ -1,30 +1,80 @@
-//! The serving loop: request generator → bounded queue → dynamic
-//! batcher → PJRT worker (which owns the decrypted, on-chip view of the
-//! sealed model).
+//! Multi-worker serving engine: coordinator → **bounded** admission
+//! queue → N workers, each with its own dynamic batcher and its own
+//! decrypted on-chip view of the sealed model (DESIGN.md §8).
 //!
-//! Reported per-request latency = queueing + real PJRT execution,
+//! Request path: a Poisson request generator admits into a bounded
+//! [`BoundedQueue`] — [`Admission::Shed`] load-sheds when the queue is
+//! full (rejections are *counted* in [`ServeReport::rejected`], never
+//! silently dropped), [`Admission::Block`] applies backpressure to the
+//! producer. Worker threads drain the queue through per-worker
+//! [`Batcher`]s and execute batches on their own [`InferenceBackend`]
+//! (a per-worker PJRT runtime + executable in `seal serve`; the
+//! pure-Rust synthetic classifier in `seal serve-bench` and tests).
+//!
+//! Reported per-request latency = queueing + batching + real execution,
 //! multiplied by the *memory-scheme slowdown factor* the cycle
 //! simulator measured for this model class (the extra time the edge
-//! accelerator would spend behind its AES engines). The simulator runs
-//! once at startup on a representative conv layer to obtain the factor.
+//! accelerator would spend behind its AES engines). The factor is
+//! memoized per (scheme, SE ratio): in-process via a map, across
+//! processes via the sweep results store
+//! (`SweepSpec::serve_calibration` → `results/sweep_serve_cal_*.json`),
+//! so the simulator runs at most once per key instead of once per
+//! invocation.
 
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::model::manifest::{Dataset, Manifest};
-use crate::model::zoo;
-use crate::runtime::{argmax_rows, lit_f32, Runtime};
-use crate::sim::{GpuConfig, Scheme};
+use crate::sim::Scheme;
 use crate::stats::Histogram;
-use crate::traffic::{self, layers};
+use crate::sweep::{runner, store, RunnerCfg, SweepSpec};
 use crate::util::rng::Rng;
 
+use super::backend::{InferenceBackend, PjrtBackend, SyntheticBackend, SynthSpec};
+use super::batcher::Batcher;
+use super::queue::BoundedQueue;
+use super::secure_store::SecureModelStore;
+
+/// What the coordinator does when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Producer blocks until a slot frees up (backpressure).
+    Block,
+    /// New requests are rejected and counted (load shedding).
+    Shed,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Option<Admission> {
+        match s {
+            "block" => Some(Admission::Block),
+            "shed" => Some(Admission::Shed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Block => "block",
+            Admission::Shed => "shed",
+        }
+    }
+}
+
+/// `seal serve` configuration (the PJRT/artifact path).
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
     pub model: String,
     pub artifacts: std::path::PathBuf,
     pub n_requests: usize,
     pub batch_max: usize,
+    /// Worker threads, each owning its own runtime + decrypted view.
+    pub n_workers: usize,
+    /// Admission queue capacity (bounds coordinator memory).
+    pub queue_cap: usize,
+    pub admission: Admission,
     pub scheme: Scheme,
     pub se_ratio: f64,
     /// Mean request arrivals per millisecond (Poisson).
@@ -33,11 +83,35 @@ pub struct ServeCfg {
     pub use_pallas: bool,
 }
 
+/// Synthetic-backend serving configuration (`seal serve-bench`, tests).
+#[derive(Debug, Clone)]
+pub struct SynthServeCfg {
+    pub spec: SynthSpec,
+    pub n_requests: usize,
+    pub batch_max: usize,
+    pub n_workers: usize,
+    pub queue_cap: usize,
+    pub admission: Admission,
+    pub scheme: Scheme,
+    pub se_ratio: f64,
+    pub arrival_per_ms: f64,
+    /// `> 0.0` skips calibration and uses this factor directly;
+    /// `0.0` calibrates through [`scheme_slowdown`].
+    pub slowdown: f64,
+}
+
 #[derive(Debug)]
 pub struct ServeReport {
     pub scheme: &'static str,
-    pub n_requests: usize,
+    pub n_workers: usize,
+    pub queue_cap: usize,
+    pub admission: Admission,
+    /// Requests actually served (admitted and executed).
+    pub served: usize,
+    /// Requests refused at admission — accounted, never silently lost.
+    pub rejected: usize,
     pub n_batches: usize,
+    pub per_worker_served: Vec<usize>,
     pub latency_us: Histogram,
     pub throughput_rps: f64,
     pub slowdown: f64,
@@ -48,11 +122,22 @@ pub struct ServeReport {
 
 impl ServeReport {
     pub fn print(&self) {
-        println!("serve report ({})", self.scheme);
-        println!("  requests        : {}", self.n_requests);
-        println!("  batches         : {}", self.n_batches);
+        println!(
+            "serve report ({}, {} worker(s), queue {} [{}])",
+            self.scheme,
+            self.n_workers,
+            self.queue_cap,
+            self.admission.name()
+        );
+        println!("  served          : {} ({} batches)", self.served, self.n_batches);
+        println!("  rejected        : {}", self.rejected);
+        println!("  per-worker      : {:?}", self.per_worker_served);
         println!("  mean latency    : {:.1} us", self.latency_us.mean());
-        println!("  p50/p99 latency : {} / {} us", self.latency_us.quantile(0.5), self.latency_us.quantile(0.99));
+        println!(
+            "  p50/p99 latency : {} / {} us",
+            self.latency_us.quantile(0.5),
+            self.latency_us.quantile(0.99)
+        );
         println!("  throughput      : {:.1} req/s", self.throughput_rps);
         println!("  memory slowdown : {:.3}x (cycle-sim, scheme vs baseline)", self.slowdown);
         println!("  sample accuracy : {:.4}", self.sample_accuracy);
@@ -60,141 +145,425 @@ impl ServeReport {
     }
 }
 
+// -- slowdown calibration ----------------------------------------------------
+
+/// Process-wide memo: (scheme name, se_ratio bits) → slowdown factor.
+static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64), f64>>> = OnceLock::new();
+
+/// Memory-scheme slowdown factor from the cycle simulator: cycles of a
+/// representative conv layer under `scheme` over baseline cycles.
+///
+/// Memoized per (scheme, se_ratio): in-process via [`SLOWDOWN_MEMO`],
+/// across processes via the sweep results store (the
+/// `SweepSpec::serve_calibration` grid persists to
+/// `results/sweep_serve_cal_<hash>.json`), so startup pays the
+/// simulator at most once per key.
+pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
+    if scheme == Scheme::BASELINE {
+        return 1.0;
+    }
+    let key = (scheme.name(), se_ratio.to_bits());
+    let memo = SLOWDOWN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&f) = memo.lock().unwrap().get(&key) {
+        return f;
+    }
+    let f = compute_scheme_slowdown(scheme, se_ratio);
+    memo.lock().unwrap().insert(key, f);
+    f
+}
+
+fn compute_scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
+    let spec = SweepSpec::serve_calibration(scheme, se_ratio);
+    // Two cells only: run inline rather than spinning up a pool (and
+    // fall back to an unpersisted run when results/ is unwritable).
+    let rows = match store::load_or_run_with(&spec, &RunnerCfg { threads: 1 }) {
+        Ok(r) => r.rows,
+        Err(_) => runner::run_sequential(&spec),
+    };
+    let ratio = if scheme.smart { se_ratio } else { 1.0 };
+    let enc = rows.iter().find(|r| r.scheme == scheme.name() && (r.ratio - ratio).abs() < 1e-9);
+    let base = rows.iter().find(|r| r.scheme == "Baseline");
+    match (enc, base) {
+        (Some(e), Some(b)) => e.sim.cycles / b.sim.cycles.max(1.0),
+        // Unreachable: serve_calibration always contains both cells.
+        _ => 1.0,
+    }
+}
+
+// -- request generation ------------------------------------------------------
+
+/// Exponential inter-arrival gap in milliseconds for a mean rate of
+/// `arrival_per_ms`, from a uniform draw `u`.
+///
+/// The draw is clamped away from 1.0 before the log: `-(1 - u).ln()`
+/// is `+inf` at exactly `u = 1.0`, which would put the producer thread
+/// to sleep forever. `Rng::f64` cannot currently emit 1.0, but the gap
+/// computation must stay finite under any uniform source.
+pub fn poisson_gap_ms(u: f64, arrival_per_ms: f64) -> f64 {
+    let u = u.clamp(0.0, 1.0 - 1e-12);
+    -(1.0 - u).ln() / arrival_per_ms.max(1e-3)
+}
+
+// -- the engine --------------------------------------------------------------
+
+/// Backend-agnostic engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCfg {
+    pub n_workers: usize,
+    pub queue_cap: usize,
+    pub admission: Admission,
+    pub batch_max: usize,
+    pub batch_timeout: Duration,
+    pub arrival_per_ms: f64,
+    pub arrival_seed: u64,
+    pub slowdown: f64,
+}
+
+/// Aggregated engine outcome.
+#[derive(Debug)]
+pub struct EngineStats {
+    pub served: usize,
+    pub rejected: usize,
+    pub batches: usize,
+    pub correct: usize,
+    pub latency_us: Histogram,
+    pub per_worker_served: Vec<usize>,
+    pub elapsed_s: f64,
+}
+
 struct Request {
-    id: usize,
     image: Vec<f32>,
     label: i32,
     arrived: Instant,
 }
 
-/// Memory-scheme slowdown factor from the cycle simulator: cycles of a
-/// representative conv layer under `scheme` over baseline cycles.
-pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
-    if scheme == Scheme::BASELINE {
-        return 1.0;
-    }
-    let cfg = GpuConfig::default();
-    let layer = zoo::fig10_conv_layers()[1];
-    let ratio = if scheme.smart { se_ratio } else { 1.0 };
-    let w = layers::conv_workload(&layer, ratio, &cfg, 360, 7);
-    let enc = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
-    let wb = layers::conv_workload(&layer, 1.0, &cfg, 360, 7);
-    let base = traffic::simulate(&wb, cfg.with_scheme(Scheme::BASELINE));
-    enc.cycles as f64 / base.cycles.max(1) as f64
+#[derive(Default)]
+struct WorkerStats {
+    served: usize,
+    batches: usize,
+    correct: usize,
+    latency: Histogram,
 }
 
+fn worker_loop<B: InferenceBackend>(
+    idx: usize,
+    queue: Arc<BoundedQueue<Request>>,
+    batch_max: usize,
+    batch_timeout: Duration,
+    slowdown: f64,
+    make_backend: &(impl Fn(usize) -> crate::Result<B> + Sync),
+) -> crate::Result<WorkerStats> {
+    let mut backend = make_backend(idx)?;
+    let mut batcher = Batcher::new(queue, batch_max, batch_timeout);
+    let mut stats = WorkerStats::default();
+    while let Some(batch) = batcher.next_batch() {
+        let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let preds = backend.infer(&images)?;
+        let done = Instant::now();
+        for (r, &p) in batch.iter().zip(&preds) {
+            let raw = done.duration_since(r.arrived).as_secs_f64();
+            stats.latency.record((raw * slowdown * 1e6) as u64);
+            if p == r.label as usize {
+                stats.correct += 1;
+            }
+        }
+        stats.served += batch.len();
+        stats.batches += 1;
+    }
+    Ok(stats)
+}
+
+/// Run the coordinator/worker engine over pre-generated `(image,
+/// label)` inputs. `make_backend` is called once *inside* each worker
+/// thread (index-tagged), so backends never need to be `Send`.
+///
+/// Shutdown is deadlock-free by construction: the producer closes the
+/// queue after its last admission attempt, workers drain-then-exit,
+/// and the last worker to exit (including on error paths) closes the
+/// queue again so a blocked producer can never be stranded.
+pub fn run_engine<B, F>(
+    ecfg: &EngineCfg,
+    inputs: Vec<(Vec<f32>, i32)>,
+    make_backend: F,
+) -> crate::Result<EngineStats>
+where
+    B: InferenceBackend,
+    F: Fn(usize) -> crate::Result<B> + Sync,
+{
+    let n_workers = ecfg.n_workers.max(1);
+    let queue = Arc::new(BoundedQueue::new(ecfg.queue_cap.max(1)));
+    let rejected = AtomicUsize::new(0);
+    let live_workers = AtomicUsize::new(n_workers);
+    let t_start = Instant::now();
+
+    let worker_results: Vec<crate::Result<WorkerStats>> = std::thread::scope(|s| {
+        // Producer: Poisson arrivals into the bounded queue.
+        let admission = ecfg.admission;
+        let arrival = ecfg.arrival_per_ms;
+        let seed = ecfg.arrival_seed;
+        let producer_queue = queue.clone();
+        let rejected_ref = &rejected;
+        s.spawn(move || {
+            let mut rng = Rng::seeded(seed);
+            for (image, label) in inputs {
+                let gap_ms = poisson_gap_ms(rng.f64(), arrival);
+                std::thread::sleep(Duration::from_secs_f64(gap_ms / 1e3));
+                let req = Request { image, label, arrived: Instant::now() };
+                let refused = match admission {
+                    Admission::Shed => producer_queue.try_push(req).is_err(),
+                    Admission::Block => producer_queue.push_blocking(req).is_err(),
+                };
+                if refused {
+                    // Queue full (shed) or closed because every worker
+                    // died: count the rejection, never drop it silently.
+                    rejected_ref.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            producer_queue.close();
+        });
+
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let worker_queue = queue.clone();
+            let make_backend = &make_backend;
+            let live = &live_workers;
+            let (batch_max, batch_timeout, slowdown) =
+                (ecfg.batch_max, ecfg.batch_timeout, ecfg.slowdown);
+            handles.push(s.spawn(move || {
+                let out = worker_loop(
+                    w,
+                    worker_queue.clone(),
+                    batch_max,
+                    batch_timeout,
+                    slowdown,
+                    make_backend,
+                );
+                if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // Last worker out: unblock the producer even on
+                    // error paths so the scope can never deadlock.
+                    worker_queue.close();
+                }
+                out
+            }));
+        }
+        let mut results = Vec::with_capacity(n_workers);
+        for h in handles {
+            results.push(h.join().expect("serve worker panicked"));
+        }
+        results
+    });
+
+    let mut agg = EngineStats {
+        served: 0,
+        rejected: rejected.load(Ordering::Relaxed),
+        batches: 0,
+        correct: 0,
+        latency_us: Histogram::default(),
+        per_worker_served: Vec::with_capacity(n_workers),
+        elapsed_s: 0.0,
+    };
+    let mut first_err = None;
+    for res in worker_results {
+        match res {
+            Ok(w) => {
+                agg.served += w.served;
+                agg.batches += w.batches;
+                agg.correct += w.correct;
+                agg.latency_us.merge(&w.latency);
+                agg.per_worker_served.push(w.served);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+                agg.per_worker_served.push(0);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    agg.elapsed_s = t_start.elapsed().as_secs_f64();
+    Ok(agg)
+}
+
+fn report_from(
+    scheme: Scheme,
+    ecfg: &EngineCfg,
+    stats: EngineStats,
+    encrypted_lines: usize,
+    total_lines: usize,
+) -> ServeReport {
+    ServeReport {
+        scheme: scheme.name(),
+        n_workers: ecfg.n_workers.max(1),
+        queue_cap: ecfg.queue_cap.max(1),
+        admission: ecfg.admission,
+        served: stats.served,
+        rejected: stats.rejected,
+        n_batches: stats.batches,
+        per_worker_served: stats.per_worker_served,
+        throughput_rps: stats.served as f64 / stats.elapsed_s.max(1e-9),
+        slowdown: ecfg.slowdown,
+        sample_accuracy: stats.correct as f64 / stats.served.max(1) as f64,
+        latency_us: stats.latency_us,
+        encrypted_lines,
+        total_lines,
+    }
+}
+
+// -- entry points ------------------------------------------------------------
+
+/// Serve through real PJRT artifacts: every worker stands up its own
+/// runtime, loads the predict executable, and decrypts its own on-chip
+/// view of the (singly sealed) model.
 pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
     let man = Manifest::load(&cfg.artifacts)?;
     let data = Dataset::load(&man)?;
     let info = man.model(&cfg.model)?.clone();
     let slowdown = scheme_slowdown(cfg.scheme, cfg.se_ratio);
 
-    // Request generator (Poisson arrivals over the test split).
-    let (tx, rx) = mpsc::channel::<Request>();
+    // Request sample: Poisson arrivals over the test split.
     let img = data.image_len();
-    let n_req = cfg.n_requests;
-    let arrival = cfg.arrival_per_ms.max(1e-3);
-    let gen_images: Vec<(Vec<f32>, i32)> = {
+    let inputs: Vec<(Vec<f32>, i32)> = {
         let mut rng = Rng::seeded(man.seed ^ 0x5e7e);
-        (0..n_req)
+        (0..cfg.n_requests)
             .map(|_| {
                 let i = rng.below(data.y_test.len() as u64) as usize;
                 (data.x_test[i * img..(i + 1) * img].to_vec(), data.y_test[i])
             })
             .collect()
     };
-    let producer = std::thread::spawn(move || {
-        let mut rng = Rng::seeded(7);
-        for (id, (image, label)) in gen_images.into_iter().enumerate() {
-            // Exponential inter-arrival, mean 1/arrival ms.
-            let gap_ms = -(1.0 - rng.f64()).ln() / arrival;
-            std::thread::sleep(Duration::from_secs_f64(gap_ms / 1e3));
-            if tx.send(Request { id, image, label, arrived: Instant::now() }).is_err() {
-                break;
-            }
-        }
-    });
 
-    // Worker: owns the runtime + the sealed model.
+    // Seal once; each worker performs its own on-chip decrypt.
     let theta = man
         .load_f32(&format!("victim_{}.bin", cfg.model))
         .or_else(|_| man.theta_init(&cfg.model))?;
-    let store =
-        super::secure_store::SecureModelStore::seal(&info, &theta, cfg.se_ratio, &[42u8; 16]);
-    let onchip_theta = store.decrypt();
-    debug_assert_eq!(onchip_theta.len(), theta.len());
+    let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
+    let encrypted_lines = sealed.encrypted_lines();
+    let total_lines = sealed.n_lines();
 
-    let mut rt = Runtime::cpu()?;
-    // The quickstart Pallas artifact exists for vgg16m only.
+    // Resolve the predict executable once (the quickstart Pallas
+    // artifact exists for vgg16m only); workers just load it.
     let pallas_name = format!("predict_pallas_{}.hlo.txt", cfg.model);
-    let (exe, batch_cap) = if cfg.use_pallas && man.hlo_path(&pallas_name).exists() {
-        (rt.load(&man.hlo_path(&pallas_name))?, man.batch_pallas)
+    let (artifact, batch_cap) = if cfg.use_pallas && man.hlo_path(&pallas_name).exists() {
+        (pallas_name, man.batch_pallas)
     } else {
-        (rt.load_model_fn(&man, &cfg.model, "predict")?, man.batch_eval)
+        (format!("predict_{}.hlo.txt", cfg.model), man.batch_eval)
     };
-    let batch_max = cfg.batch_max.min(batch_cap).max(1);
-    let theta_lit = lit_f32(&onchip_theta, &[onchip_theta.len() as i64])?;
-    let dims = [batch_cap as i64, data.hw as i64, data.hw as i64, data.channels as i64];
 
-    let mut latency = Histogram::default();
-    let mut served = 0usize;
-    let mut batches = 0usize;
-    let mut correct = 0usize;
-    let t_start = Instant::now();
-    let batch_timeout = Duration::from_millis(2);
-    let mut pending: Vec<Request> = Vec::new();
-    while served < n_req {
-        // Dynamic batching: take what is queued, wait briefly to fill.
-        match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => pending.push(r),
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) if pending.is_empty() => break,
-            Err(_) => {}
-        }
-        let deadline = Instant::now() + batch_timeout;
-        while pending.len() < batch_max {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-        if pending.is_empty() {
-            continue;
-        }
-        let take = pending.len().min(batch_max);
-        let batch: Vec<Request> = pending.drain(..take).collect();
-        let mut x = vec![0.0f32; batch_cap * img];
-        for (j, r) in batch.iter().enumerate() {
-            x[j * img..(j + 1) * img].copy_from_slice(&r.image);
-        }
-        let res = exe.run(&[theta_lit.reshape(&[onchip_theta.len() as i64])?, lit_f32(&x, &dims)?])?;
-        let preds = argmax_rows(&res[0], data.n_classes)?;
-        let done = Instant::now();
-        for (j, r) in batch.iter().enumerate() {
-            let raw = done.duration_since(r.arrived).as_secs_f64();
-            latency.record((raw * slowdown * 1e6) as u64);
-            if preds[j] == r.label as usize {
-                correct += 1;
-            }
-        }
-        served += batch.len();
-        batches += 1;
-    }
-    let _ = producer.join();
-    let elapsed = t_start.elapsed().as_secs_f64();
-    Ok(ServeReport {
-        scheme: cfg.scheme.name(),
-        n_requests: served,
-        n_batches: batches,
-        latency_us: latency,
-        throughput_rps: served as f64 / elapsed.max(1e-9),
+    let ecfg = EngineCfg {
+        n_workers: cfg.n_workers.max(1),
+        queue_cap: cfg.queue_cap.max(1),
+        admission: cfg.admission,
+        batch_max: cfg.batch_max.min(batch_cap).max(1),
+        batch_timeout: Duration::from_millis(2),
+        arrival_per_ms: cfg.arrival_per_ms,
+        arrival_seed: 7,
         slowdown,
-        sample_accuracy: correct as f64 / served.max(1) as f64,
-        encrypted_lines: store.encrypted_lines(),
-        total_lines: store.n_lines(),
-    })
+    };
+    let stats = run_engine(&ecfg, inputs, |_worker| {
+        let (hw, ch, ncls) = (data.hw, data.channels, data.n_classes);
+        PjrtBackend::new(&man, &artifact, batch_cap, &sealed, hw, ch, ncls)
+    })?;
+    Ok(report_from(cfg.scheme, &ecfg, stats, encrypted_lines, total_lines))
+}
+
+/// Serve the synthetic (artifact-free) workload: the substrate of
+/// `seal serve-bench`, CI serve-smoke, and the coordinator tests.
+pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
+    let spec = cfg.spec;
+    let info = spec.model_info();
+    let theta = spec.theta();
+    let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
+    let reference = SyntheticBackend::from_theta(&theta, &spec);
+    let inputs = spec.requests(cfg.n_requests, &reference);
+    let slowdown =
+        if cfg.slowdown > 0.0 { cfg.slowdown } else { scheme_slowdown(cfg.scheme, cfg.se_ratio) };
+
+    let ecfg = EngineCfg {
+        n_workers: cfg.n_workers.max(1),
+        queue_cap: cfg.queue_cap.max(1),
+        admission: cfg.admission,
+        batch_max: cfg.batch_max.max(1),
+        batch_timeout: Duration::from_millis(2),
+        arrival_per_ms: cfg.arrival_per_ms,
+        arrival_seed: spec.seed ^ 0xa771,
+        slowdown,
+    };
+    let encrypted_lines = sealed.encrypted_lines();
+    let total_lines = sealed.n_lines();
+    let stats = run_engine(&ecfg, inputs, |_worker| {
+        // Per-worker on-chip fill: each worker decrypts its own view.
+        Ok(SyntheticBackend::from_store(&sealed, &spec))
+    })?;
+    Ok(report_from(cfg.scheme, &ecfg, stats, encrypted_lines, total_lines))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gap_is_finite_even_at_the_u64_boundary() {
+        // The old inline expression was +inf at u = 1.0 — a producer
+        // thread asleep forever. The clamp keeps every draw finite.
+        assert!(poisson_gap_ms(1.0, 2.0).is_finite());
+        assert!(poisson_gap_ms(0.999_999_999_999_99, 2.0).is_finite());
+        assert!(poisson_gap_ms(f64::from_bits(1.0f64.to_bits() - 1), 2.0).is_finite());
+    }
+
+    #[test]
+    fn poisson_gap_shape() {
+        // Zero draw -> zero gap; monotone in u; inversely scaled by rate.
+        assert_eq!(poisson_gap_ms(0.0, 2.0), 0.0);
+        assert!(poisson_gap_ms(0.9, 2.0) > poisson_gap_ms(0.5, 2.0));
+        let g1 = poisson_gap_ms(0.7, 1.0);
+        let g4 = poisson_gap_ms(0.7, 4.0);
+        assert!((g1 / g4 - 4.0).abs() < 1e-9);
+        // Non-positive rates are clamped, not divided through.
+        assert!(poisson_gap_ms(0.5, 0.0).is_finite());
+    }
+
+    #[test]
+    fn poisson_gap_mean_tracks_rate() {
+        let mut rng = Rng::seeded(11);
+        let n = 50_000;
+        let rate = 4.0;
+        let mean: f64 = (0..n).map(|_| poisson_gap_ms(rng.f64(), rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean gap {mean}");
+    }
+
+    #[test]
+    fn admission_parse_roundtrip() {
+        for a in [Admission::Block, Admission::Shed] {
+            assert_eq!(Admission::parse(a.name()), Some(a));
+        }
+        assert_eq!(Admission::parse("drop"), None);
+    }
+
+    #[test]
+    fn engine_serves_everything_under_backpressure() {
+        let spec = SynthSpec::default();
+        let report = serve_synthetic(&SynthServeCfg {
+            spec,
+            n_requests: 24,
+            batch_max: 4,
+            n_workers: 2,
+            queue_cap: 4,
+            admission: Admission::Block,
+            scheme: Scheme::BASELINE,
+            se_ratio: 0.5,
+            arrival_per_ms: 1000.0,
+            slowdown: 1.0,
+        })
+        .unwrap();
+        assert_eq!(report.served, 24);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.latency_us.n, 24);
+        assert_eq!(report.per_worker_served.iter().sum::<usize>(), 24);
+        assert_eq!(report.sample_accuracy, 1.0, "seal->decrypt->infer path must be exact");
+        assert!(report.n_batches >= 24usize.div_ceil(4));
+        assert!(report.latency_us.quantile(0.99) <= report.latency_us.max);
+    }
 }

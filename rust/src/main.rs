@@ -1,13 +1,15 @@
 //! `seal` — CLI for the SEAL secure-DL-accelerator reproduction.
 //!
 //! Subcommands:
-//!   simulate   one workload (matmul/conv/pool/fc) under one scheme
-//!   network    whole-network inference under all six schemes
-//!   sweep      parallel scheme×network×ratio sweep -> results store
-//!   perf       simulator-throughput basket -> BENCH_perf.json + gate
-//!   security   victim training / substitute extraction / attacks
-//!   serve      encrypted-model serving demo (PJRT runtime)
-//!   info       print config + artifact inventory
+//!   simulate    one workload (matmul/conv/pool/fc) under one scheme
+//!   network     whole-network inference under all six schemes
+//!   sweep       parallel scheme×network×ratio sweep -> results store
+//!   perf        simulator-throughput basket -> BENCH_perf.json + gate
+//!   security    victim training / substitute extraction / attacks
+//!   serve       multi-worker encrypted-model serving (PJRT runtime)
+//!   serve-bench serving-engine grid (schemes×workers×rates)
+//!               -> BENCH_serve.json
+//!   info        print config + artifact inventory
 
 use std::path::Path;
 
@@ -26,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         Some("perf") => seal::perf::cli(&args),
         Some("security") => seal::security::cli(&args),
         Some("serve") => seal::coordinator::cli(&args),
+        Some("serve-bench") => seal::coordinator::bench_cli(&args),
         Some("info") => info(&args),
         other => {
             if let Some(cmd) = other {
@@ -54,6 +57,12 @@ USAGE: seal <subcommand> [flags]
             (writes BENCH_perf.json; nonzero exit on >2x regression)
   security  train-victim|extract|attack --model <m> [--ratio r] ...
   serve     --model <m> [--requests n] [--batch b] [--scheme s]
+            [--workers n] [--queue cap] [--admission block|shed]
+            [--rate req_per_ms] [--no-pallas]
+  serve-bench [--quick] [--schemes s1,s2] [--workers 1,2,4]
+            [--rates r1,r2] [--requests n] [--batch b] [--queue cap]
+            [--cost gemv_repeats] [--out f]
+            (synthetic backend; writes BENCH_serve.json)
   info
 
 Schemes: baseline direct counter direct+se counter+se seal (coloe+se)
@@ -87,11 +96,13 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         "pool" => {
             let idx = args.get_u64("layer", 0) as usize;
             let layer = zoo::fig11_pool_layers()[idx.min(4)];
-            layers::pool_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample * 64, 1)
+            let r = if scheme.smart { ratio } else { 1.0 };
+            layers::pool_workload(&layer, r, &cfg, sample * 64, 1)
         }
         "fc" => {
             let layer = zoo::Layer::Fc { din: 4096, dout: 4096 };
-            layers::fc_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample * 16, 1)
+            let r = if scheme.smart { ratio } else { 1.0 };
+            layers::fc_workload(&layer, r, &cfg, sample * 16, 1)
         }
         w => anyhow::bail!("unknown workload {w:?}"),
     };

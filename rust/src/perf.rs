@@ -302,6 +302,15 @@ pub fn baseline_document(
     .to_string()
 }
 
+/// Seconds since the Unix epoch — the BENCH_* document timestamp
+/// (shared with `coordinator::bench`'s BENCH_serve.json).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
 /// The whole `seal perf` outcome.
 #[derive(Debug, Clone)]
 pub struct PerfReport {
@@ -317,10 +326,7 @@ pub struct PerfReport {
 
 /// Serialize the BENCH document (`seal-perf/v1` — schema in README).
 pub fn document(report: &PerfReport, opts: &PerfOptions, baseline_path: &Path) -> String {
-    let generated = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
+    let generated = unix_now();
     let cases = report.results.iter().map(|r| {
         let mut fields = vec![
             ("name", Json::str(r.name)),

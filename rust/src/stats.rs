@@ -30,17 +30,38 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile from bucket boundaries: the *in-bucket*
+    /// upper bound of the bucket holding the q-th sample, clamped to
+    /// the recorded maximum — so `quantile(q) <= max` holds for every
+    /// recorded distribution. (The previous implementation returned
+    /// `bucket * 2`, the lower bound of the *next* bucket: recording
+    /// only 100 made p50 = 128 > max = 100.)
     pub fn quantile(&self, q: f64) -> u64 {
-        let target = (self.n as f64 * q).ceil() as u64;
+        if self.n == 0 {
+            return 0;
+        }
+        let target = ((self.n as f64 * q).ceil() as u64).max(1);
         let mut seen = 0;
         for (&bucket, &c) in &self.counts {
             seen += c;
             if seen >= target {
-                return bucket * 2;
+                // Bucket b >= 1 covers [b, 2b - 1]; bucket 0 holds only
+                // zero. `(b - 1) * 2 + 1` avoids overflow at b = 2^63.
+                let upper = if bucket == 0 { 0 } else { (bucket - 1) * 2 + 1 };
+                return upper.min(self.max);
             }
         }
         self.max
+    }
+
+    /// Fold another histogram into this one (per-worker aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (&bucket, &c) in &other.counts {
+            *self.counts.entry(bucket).or_insert(0) += c;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -129,6 +150,97 @@ mod tests {
         assert!((h.mean() - 22.0).abs() < 1e-9);
         assert!(h.quantile(0.5) >= 2);
         assert!(h.quantile(1.0) >= 100);
+    }
+
+    #[test]
+    fn quantile_of_single_value_is_that_value() {
+        // Regression: recording only 100 used to report p50 = 128 (the
+        // next bucket's lower bound), overshooting the observed max.
+        let mut h = Histogram::default();
+        h.record(100);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 100, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_of_all_equal_values_is_that_value() {
+        let mut h = Histogram::default();
+        for _ in 0..1000 {
+            h.record(7);
+        }
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 7, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_zero() {
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), 0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max_on_any_distribution() {
+        // Property over randomized distributions (seeded): for every
+        // recorded distribution and every q, quantile(q) <= max, and
+        // quantile is monotone in q.
+        use crate::util::rng::Rng;
+        for seed in 0..20u64 {
+            let mut rng = Rng::seeded(seed);
+            let mut h = Histogram::default();
+            let n = 1 + rng.below(200) as usize;
+            for _ in 0..n {
+                // Mix of magnitudes, including the u64 extremes.
+                let v = match rng.below(4) {
+                    0 => rng.below(100),
+                    1 => rng.below(1 << 20),
+                    2 => rng.next_u64() >> (rng.below(40) as u32),
+                    _ => rng.next_u64(), // can land in the top bucket
+                };
+                h.record(v);
+            }
+            let mut prev = 0;
+            for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+                let v = h.quantile(q);
+                assert!(v <= h.max, "seed {seed} q {q}: {v} > max {}", h.max);
+                assert!(v >= prev, "seed {seed} q {q}: quantile not monotone");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_bucket_quantile() {
+        let mut h = Histogram::default();
+        h.record(0);
+        h.record(0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), 0);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one_histogram() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut all = Histogram::default();
+        for v in [1u64, 5, 9, 100] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [2u64, 70_000, 3] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, all.n);
+        assert_eq!(a.sum, all.sum);
+        assert_eq!(a.max, all.max);
+        for q in [0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
     }
 
     #[test]

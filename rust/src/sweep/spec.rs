@@ -194,6 +194,24 @@ impl SweepSpec {
         }
     }
 
+    /// The serving coordinator's startup-calibration grid
+    /// (`coordinator::server::scheme_slowdown`): one representative
+    /// conv layer (fig 10 layer 1) under `scheme` and Baseline.
+    /// `base_seed` 6 makes the conv cell's seed 6 + 1 = 7 and the
+    /// 360-tile budget matches the coordinator's historical inline
+    /// calibration, so the factors are unchanged — but now persisted
+    /// in the results store and shared across invocations.
+    pub fn serve_calibration(scheme: Scheme, se_ratio: f64) -> SweepSpec {
+        SweepSpec {
+            name: "serve_cal".to_string(),
+            targets: vec![SweepTarget::ConvLayer { index: 1 }],
+            schemes: vec![scheme.name().to_string(), "Baseline".to_string()],
+            ratios: vec![se_ratio],
+            sample_tiles: 360,
+            base_seed: 6,
+        }
+    }
+
     /// The exact spec shared by the fig 13/14/15 benches: the paper's
     /// three networks, all six schemes, SE ratio 0.5, sample budget
     /// from `SEAL_NET_SAMPLE` (default 240). Centralised here so the
@@ -272,6 +290,24 @@ mod tests {
         let mut d = demo_spec();
         d.ratios = vec![0.75];
         assert_ne!(a.hash(), d.hash());
+    }
+
+    #[test]
+    fn serve_calibration_contains_scheme_and_baseline_cells() {
+        let spec = SweepSpec::serve_calibration(Scheme::SEAL, 0.25);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scheme, "SEAL");
+        assert_eq!(cells[0].ratio, 0.25);
+        assert_eq!(cells[1].scheme, "Baseline");
+        assert_eq!(cells[1].ratio, 1.0, "non-SE baseline collapses the ratio");
+        // Historical coordinator seeding: conv layer 1 at seed 7.
+        assert_eq!(cells[0].target.seed(spec.base_seed), 7);
+        // Distinct ratios -> distinct store files.
+        assert_ne!(
+            SweepSpec::serve_calibration(Scheme::SEAL, 0.25).hash(),
+            SweepSpec::serve_calibration(Scheme::SEAL, 0.5).hash()
+        );
     }
 
     #[test]

@@ -243,13 +243,20 @@ pub fn load(spec: &SweepSpec) -> Option<SweepResults> {
     Some(SweepResults { rows, path, from_cache: true })
 }
 
-/// Load the cached results or run the sweep in parallel and persist it.
-pub fn load_or_run(spec: &SweepSpec) -> anyhow::Result<SweepResults> {
+/// Load the cached results or run the sweep with `rc` and persist it.
+/// `RunnerCfg { threads: 1 }` runs inline — small grids (e.g. the
+/// serving coordinator's two-cell calibration) skip the worker pool.
+pub fn load_or_run_with(spec: &SweepSpec, rc: &RunnerCfg) -> anyhow::Result<SweepResults> {
     if let Some(r) = load(spec) {
         return Ok(r);
     }
-    let rows = runner::run_parallel(spec, &RunnerCfg::from_env());
+    let rows = runner::run_parallel(spec, rc);
     save(spec, &rows)
+}
+
+/// Load the cached results or run the sweep in parallel and persist it.
+pub fn load_or_run(spec: &SweepSpec) -> anyhow::Result<SweepResults> {
+    load_or_run_with(spec, &RunnerCfg::from_env())
 }
 
 /// Like [`load_or_run`], but panics instead of returning an error —

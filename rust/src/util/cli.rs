@@ -66,6 +66,36 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list flag; `default` when the flag is absent.
+    /// Panics on unparsable elements, like [`Args::get_u64`] /
+    /// [`Args::get_f64`] do for scalar flags.
+    fn get_list<T>(&self, key: &str, default: &[T], kind: &str) -> Vec<T>
+    where
+        T: std::str::FromStr + Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().unwrap_or_else(|_| {
+                        panic!("--{key} expects comma-separated {kind}, got {t:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated integer list flag (e.g. `--workers 1,2,4`).
+    pub fn get_list_u64(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        self.get_list(key, default, "integers")
+    }
+
+    /// Comma-separated number list flag (e.g. `--rates 2,8,32`).
+    pub fn get_list_f64(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.get_list(key, default, "numbers")
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -94,6 +124,24 @@ mod tests {
         assert_eq!(a.get_f64("ratio", 0.0), 0.5);
         assert_eq!(a.get_u64("cycles", 0), 100_000);
         assert_eq!(a.get_u64("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = parse("serve-bench --workers 1,2,4 --rates 2.0,8.5");
+        assert_eq!(a.get_list_u64("workers", &[9]), vec![1, 2, 4]);
+        assert_eq!(a.get_list_f64("rates", &[1.0]), vec![2.0, 8.5]);
+        // Absent flag -> default; single value -> one-element list.
+        assert_eq!(a.get_list_u64("missing", &[7, 8]), vec![7, 8]);
+        let b = parse("serve-bench --workers 3 --rates 0.25");
+        assert_eq!(b.get_list_u64("workers", &[]), vec![3]);
+        assert_eq!(b.get_list_f64("rates", &[]), vec![0.25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn list_flag_rejects_garbage() {
+        parse("serve-bench --workers 1,x").get_list_u64("workers", &[]);
     }
 
     #[test]

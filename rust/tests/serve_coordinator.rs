@@ -1,0 +1,143 @@
+//! Integration suite for the multi-worker serving coordinator:
+//! bounded admission (backpressure + counted load shedding), worker
+//! scaling accounting, deadlock-free shutdown on backend failure, and
+//! the `seal serve-bench` document contract. Everything runs on the
+//! synthetic backend — no artifacts, no PJRT.
+
+use std::time::Duration;
+
+use seal::coordinator::{
+    bench, run_engine, serve_synthetic, Admission, EngineCfg, SynthServeCfg, SynthSpec,
+    SyntheticBackend,
+};
+use seal::sim::Scheme;
+use seal::util::json::Json;
+
+fn base_cfg() -> SynthServeCfg {
+    SynthServeCfg {
+        spec: SynthSpec::default(),
+        n_requests: 48,
+        batch_max: 8,
+        n_workers: 3,
+        queue_cap: 8,
+        admission: Admission::Block,
+        scheme: Scheme::BASELINE,
+        se_ratio: 0.5,
+        arrival_per_ms: 1000.0,
+        slowdown: 1.0,
+    }
+}
+
+#[test]
+fn backpressure_serves_every_request_exactly_once() {
+    let report = serve_synthetic(&base_cfg()).unwrap();
+    assert_eq!(report.served, 48);
+    assert_eq!(report.rejected, 0, "backpressure must not shed");
+    assert_eq!(report.latency_us.n, 48, "one latency sample per served request");
+    assert_eq!(report.per_worker_served.len(), 3);
+    assert_eq!(report.per_worker_served.iter().sum::<usize>(), 48);
+    // Ground-truth labels come from the same sealed model the workers
+    // decrypt, so accuracy pins the whole seal->decrypt->infer path.
+    assert_eq!(report.sample_accuracy, 1.0);
+    // Latency accounting invariant (the histogram bugfix): no quantile
+    // may overshoot the observed maximum.
+    for q in [0.5, 0.9, 0.99, 1.0] {
+        assert!(report.latency_us.quantile(q) <= report.latency_us.max, "q={q}");
+    }
+}
+
+#[test]
+fn overload_sheds_with_full_accounting() {
+    // One slow worker (heavy GEMV emulation) behind a single-slot
+    // queue, hammered by microsecond-scale arrivals: most requests
+    // must be rejected — and every one of them accounted for.
+    let cfg = SynthServeCfg {
+        spec: SynthSpec { cost_repeats: 20_000, ..SynthSpec::default() },
+        n_requests: 32,
+        batch_max: 1,
+        n_workers: 1,
+        queue_cap: 1,
+        admission: Admission::Shed,
+        arrival_per_ms: 1000.0,
+        ..base_cfg()
+    };
+    let report = serve_synthetic(&cfg).unwrap();
+    assert!(report.served >= 1, "at least the first admitted request is served");
+    assert!(report.rejected > 0, "a single-slot queue under burst load must shed");
+    assert_eq!(
+        report.served + report.rejected,
+        32,
+        "served + rejected must account for every generated request"
+    );
+    assert_eq!(report.latency_us.n as usize, report.served);
+}
+
+#[test]
+fn worker_backend_failure_errors_instead_of_hanging() {
+    // Every worker fails to build its backend while the producer uses
+    // blocking admission: the engine must surface the error (with all
+    // rejections accounted) rather than deadlock on a full queue.
+    let ecfg = EngineCfg {
+        n_workers: 2,
+        queue_cap: 1,
+        admission: Admission::Block,
+        batch_max: 4,
+        batch_timeout: Duration::from_millis(1),
+        arrival_per_ms: 1000.0,
+        arrival_seed: 1,
+        slowdown: 1.0,
+    };
+    let inputs = vec![(vec![0.0f32; SynthSpec::default().img_len()], 0i32); 8];
+    let result = run_engine::<SyntheticBackend, _>(&ecfg, inputs, |_w| {
+        anyhow::bail!("backend unavailable")
+    });
+    let err = result.expect_err("engine must propagate the backend error");
+    assert!(err.to_string().contains("backend unavailable"), "{err:#}");
+}
+
+#[test]
+fn single_worker_degenerate_engine_works() {
+    let cfg = SynthServeCfg { n_workers: 1, n_requests: 10, ..base_cfg() };
+    let report = serve_synthetic(&cfg).unwrap();
+    assert_eq!(report.served, 10);
+    assert_eq!(report.per_worker_served, vec![10]);
+    assert!(report.n_batches >= 2, "10 requests at batch_max 8 need >= 2 batches");
+}
+
+#[test]
+fn serve_bench_document_contract() {
+    // Baseline-only grid skips cycle-sim calibration, so this stays
+    // milliseconds-fast while exercising the whole bench path.
+    let opts = bench::BenchOptions {
+        quick: true,
+        schemes: vec![Scheme::BASELINE],
+        workers: vec![1, 2],
+        rates_per_ms: vec![200.0],
+        n_requests: 16,
+        batch_max: 4,
+        queue_cap: 8,
+        shed_queue_cap: 1,
+        cost_repeats: 1,
+        se_ratio: 0.5,
+        slowdown_override: Some(1.0),
+    };
+    let report = bench::run(&opts).unwrap();
+    let doc = bench::document(&report);
+    let j = Json::parse(&doc).expect("BENCH_serve.json must be valid JSON");
+    assert_eq!(j.req("schema").as_str(), Some(bench::SERVE_BENCH_SCHEMA));
+    // Worker cells + one shed cell; every cell reports rejections.
+    let cells = j.req("cells").as_arr().unwrap();
+    assert_eq!(cells.len(), 3);
+    for c in cells {
+        assert!(c.req("rejected").as_f64().is_some(), "rejected must always be reported");
+        let served = c.req("served").as_f64().unwrap();
+        let rejected = c.req("rejected").as_f64().unwrap();
+        assert_eq!(served + rejected, 16.0, "admission accounting must balance");
+    }
+    // The scaling summary carries the worker axis and the verdict.
+    let scaling = j.req("scaling").as_arr().unwrap();
+    assert_eq!(scaling.len(), 1);
+    assert_eq!(scaling[0].req("workers").as_arr().unwrap().len(), 2);
+    assert!(scaling[0].req("monotonic").as_bool().is_some());
+    assert!(j.req("all_monotonic").as_bool().is_some());
+}
