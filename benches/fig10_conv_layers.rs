@@ -5,7 +5,7 @@
 //! sweep store under results/ and shared with `seal sweep` runs of the
 //! same spec.
 
-use seal::sim::Scheme;
+use seal::sim::SchemeRegistry;
 use seal::stats::Table;
 use seal::sweep::{store, SweepSpec, SweepTarget};
 
@@ -13,7 +13,7 @@ fn main() {
     let spec = SweepSpec {
         name: "fig10_conv".to_string(),
         targets: (0..4).map(|index| SweepTarget::ConvLayer { index }).collect(),
-        schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+        schemes: SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
         ratios: vec![0.5],
         sample_tiles: 1440,
         base_seed: 0,
@@ -29,7 +29,7 @@ fn main() {
         "Fig 10: CONV-layer IPC normalized to Baseline (SE ratio 0.5)",
         &["conv64", "conv128", "conv256", "conv512"],
     );
-    for (name, _) in Scheme::ALL_SIX {
+    for name in SchemeRegistry::paper_six().map(|s| s.name()) {
         let vals: Vec<f64> = labels
             .iter()
             .enumerate()

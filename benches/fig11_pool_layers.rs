@@ -4,7 +4,7 @@
 //! Runs through the parallel sweep engine (pool cells stream
 //! `sample_tiles * 64` lines, matching `layer_workload`'s convention).
 
-use seal::sim::Scheme;
+use seal::sim::SchemeRegistry;
 use seal::stats::Table;
 use seal::sweep::{store, SweepSpec, SweepTarget};
 
@@ -12,7 +12,7 @@ fn main() {
     let spec = SweepSpec {
         name: "fig11_pool".to_string(),
         targets: (0..5).map(|index| SweepTarget::PoolLayer { index }).collect(),
-        schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+        schemes: SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
         ratios: vec![0.5],
         sample_tiles: 1440,
         base_seed: 0,
@@ -28,7 +28,7 @@ fn main() {
         "Fig 11: POOL-layer IPC normalized to Baseline (SE ratio 0.5)",
         &["pool1", "pool2", "pool3", "pool4", "pool5"],
     );
-    for (name, _) in Scheme::ALL_SIX {
+    for name in SchemeRegistry::paper_six().map(|s| s.name()) {
         let vals: Vec<f64> = labels
             .iter()
             .enumerate()

@@ -13,7 +13,12 @@ fn main() -> anyhow::Result<()> {
     let ratio: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
     let model = "resnet18m";
     let mut ctx = SecurityCtx::new(std::path::Path::new("artifacts"))?;
-    let cfg = TrainCfg { victim_steps: 300, substitute_steps: 120, aug_rounds: 1, ..Default::default() };
+    let cfg = TrainCfg {
+        victim_steps: 300,
+        substitute_steps: 120,
+        aug_rounds: 1,
+        ..Default::default()
+    };
 
     let victim = ctx.train_victim(model, &cfg)?;
     let vacc = ctx.test_accuracy(model, &victim)?;

@@ -72,7 +72,17 @@ impl BenchOptions {
     pub fn full() -> BenchOptions {
         BenchOptions {
             quick: false,
-            schemes: vec![Scheme::BASELINE, Scheme::DIRECT, Scheme::COUNTER, Scheme::SEAL],
+            // The paper's interesting span plus the two registry-only
+            // related-work schemes, so the full grid exercises the
+            // open-registry serving path end to end.
+            schemes: vec![
+                Scheme::BASELINE,
+                Scheme::DIRECT,
+                Scheme::COUNTER,
+                Scheme::SEAL,
+                Scheme::parse("guardnn").expect("registered scheme"),
+                Scheme::parse("seculator").expect("registered scheme"),
+            ],
             workers: vec![1, 2, 4, 8],
             rates_per_ms: vec![2.0, 8.0, 32.0],
             n_requests: 256,

@@ -147,41 +147,47 @@ impl ServeReport {
 
 // -- slowdown calibration ----------------------------------------------------
 
-/// Process-wide memo: (scheme name, se_ratio bits) → slowdown factor.
+/// Process-wide memo: (scheme name, *effective* se_ratio bits) →
+/// slowdown factor.
 static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64), f64>>> = OnceLock::new();
 
 /// Memory-scheme slowdown factor from the cycle simulator: cycles of a
 /// representative conv layer under `scheme` over baseline cycles.
 ///
-/// Memoized per (scheme, se_ratio): in-process via [`SLOWDOWN_MEMO`],
-/// across processes via the sweep results store (the
-/// `SweepSpec::serve_calibration` grid persists to
+/// Memoized per (scheme, effective se_ratio): in-process via
+/// [`SLOWDOWN_MEMO`], across processes via the sweep results store
+/// (the `SweepSpec::serve_calibration` grid persists to
 /// `results/sweep_serve_cal_<hash>.json`), so startup pays the
-/// simulator at most once per key.
+/// simulator at most once per key. Non-SE schemes ignore the ratio, so
+/// the key (and the persisted calibration spec) uses the *effective*
+/// ratio — sweeping `se_ratio` over a non-SE scheme hits one memo
+/// entry and one store file instead of minting duplicates per raw
+/// ratio value.
 pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
     if scheme == Scheme::BASELINE {
         return 1.0;
     }
-    let key = (scheme.name(), se_ratio.to_bits());
+    let eff_ratio = scheme.effective_ratio(se_ratio);
+    let key = (scheme.name(), eff_ratio.to_bits());
     let memo = SLOWDOWN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
     if let Some(&f) = memo.lock().unwrap().get(&key) {
         return f;
     }
-    let f = compute_scheme_slowdown(scheme, se_ratio);
+    let f = compute_scheme_slowdown(scheme, eff_ratio);
     memo.lock().unwrap().insert(key, f);
     f
 }
 
-fn compute_scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
-    let spec = SweepSpec::serve_calibration(scheme, se_ratio);
+fn compute_scheme_slowdown(scheme: Scheme, eff_ratio: f64) -> f64 {
+    let spec = SweepSpec::serve_calibration(scheme, eff_ratio);
     // Two cells only: run inline rather than spinning up a pool (and
     // fall back to an unpersisted run when results/ is unwritable).
     let rows = match store::load_or_run_with(&spec, &RunnerCfg { threads: 1 }) {
         Ok(r) => r.rows,
         Err(_) => runner::run_sequential(&spec),
     };
-    let ratio = if scheme.smart { se_ratio } else { 1.0 };
-    let enc = rows.iter().find(|r| r.scheme == scheme.name() && (r.ratio - ratio).abs() < 1e-9);
+    let enc =
+        rows.iter().find(|r| r.scheme == scheme.name() && (r.ratio - eff_ratio).abs() < 1e-9);
     let base = rows.iter().find(|r| r.scheme == "Baseline");
     match (enc, base) {
         (Some(e), Some(b)) => e.sim.cycles / b.sim.cycles.max(1.0),
@@ -532,6 +538,20 @@ mod tests {
         let rate = 4.0;
         let mean: f64 = (0..n).map(|_| poisson_gap_ms(rng.f64(), rate)).sum::<f64>() / n as f64;
         assert!((mean - 1.0 / rate).abs() < 0.01, "mean gap {mean}");
+    }
+
+    #[test]
+    fn slowdown_calibration_collapses_ratio_for_non_se_schemes() {
+        // scheme_slowdown keys its memo and its persisted calibration
+        // spec on the *effective* ratio. For a non-SE scheme every raw
+        // ratio maps to the same spec (one store file, one memo entry);
+        // SE schemes legitimately calibrate per ratio.
+        let a = SweepSpec::serve_calibration(Scheme::DIRECT, Scheme::DIRECT.effective_ratio(0.25));
+        let b = SweepSpec::serve_calibration(Scheme::DIRECT, Scheme::DIRECT.effective_ratio(0.75));
+        assert_eq!(a.hash(), b.hash());
+        let c = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.25));
+        let d = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.75));
+        assert_ne!(c.hash(), d.hash());
     }
 
     #[test]

@@ -9,12 +9,13 @@
 //!   serve       multi-worker encrypted-model serving (PJRT runtime)
 //!   serve-bench serving-engine grid (schemes×workers×rates)
 //!               -> BENCH_serve.json
+//!   schemes     list the open scheme registry (names + doc strings)
 //!   info        print config + artifact inventory
 
 use std::path::Path;
 
 use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme, SimEngine};
+use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine};
 use seal::stats::Table;
 use seal::traffic::{self, gemm, layers};
 use seal::util::cli::Args;
@@ -29,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("security") => seal::security::cli(&args),
         Some("serve") => seal::coordinator::cli(&args),
         Some("serve-bench") => seal::coordinator::bench_cli(&args),
+        Some("schemes") => schemes(&args),
         Some("info") => info(&args),
         other => {
             if let Some(cmd) = other {
@@ -49,7 +51,7 @@ USAGE: seal <subcommand> [flags]
   simulate  --workload matmul|conv|pool|fc --scheme <s> [--ratio r]
             [--size n] [--sample t] [--engine event|lockstep]
   network   --model vgg16|resnet18|resnet34 [--ratio r] [--sample t]
-  sweep     [--networks a,b,c] [--schemes all|s1,s2] [--ratios r1,r2]
+  sweep     [--networks a,b,c] [--schemes paper|all|s1,s2] [--ratios r1,r2]
             [--sample t] [--seed s] [--sequential] [--force]
             (SEAL_SWEEP_THREADS caps the worker pool; =1 runs inline)
   perf      [--quick] [--compare-lockstep] [--out f] [--baseline f]
@@ -63,11 +65,35 @@ USAGE: seal <subcommand> [flags]
             [--rates r1,r2] [--requests n] [--batch b] [--queue cap]
             [--cost gemv_repeats] [--out f]
             (synthetic backend; writes BENCH_serve.json)
+  schemes   list every registered scheme with its doc string
   info
 
-Schemes: baseline direct counter direct+se counter+se seal (coloe+se)
+Schemes: an open registry (`seal schemes` lists it) — the paper's six
+plus ColoE, GuardNN (fixed on-chip counters) and Seculator
+(pregenerated keystream); any registered name works everywhere a
+--scheme(s) flag does.
 Engines: event (default, idle-gap skipping) | lockstep (reference)"
     );
+}
+
+/// `seal schemes` — print the open scheme registry.
+fn schemes(_args: &Args) -> anyhow::Result<()> {
+    println!("{:<12} {:<11} {:<6} {:<9} doc", "name", "engine", "SE", "ctr-store");
+    for s in SchemeRegistry::all() {
+        let spec = s.spec();
+        println!(
+            "{:<12} {:<11} {:<6} {:<9} {}",
+            spec.name,
+            spec.engine,
+            if spec.smart { "yes" } else { "no" },
+            if spec.counter_store { "yes" } else { "no" },
+            spec.doc
+        );
+        if !spec.aliases.is_empty() {
+            println!("{:<12} aliases: {}", "", spec.aliases.join(", "));
+        }
+    }
+    Ok(())
 }
 
 fn parse_scheme(args: &Args) -> Scheme {
@@ -91,17 +117,17 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         "conv" => {
             let idx = args.get_u64("layer", 0) as usize;
             let layer = zoo::fig10_conv_layers()[idx.min(3)];
-            layers::conv_workload(&layer, if scheme.smart { ratio } else { 1.0 }, &cfg, sample, 1)
+            layers::conv_workload(&layer, scheme.effective_ratio(ratio), &cfg, sample, 1)
         }
         "pool" => {
             let idx = args.get_u64("layer", 0) as usize;
             let layer = zoo::fig11_pool_layers()[idx.min(4)];
-            let r = if scheme.smart { ratio } else { 1.0 };
+            let r = scheme.effective_ratio(ratio);
             layers::pool_workload(&layer, r, &cfg, sample * 64, 1)
         }
         "fc" => {
             let layer = zoo::Layer::Fc { din: 4096, dout: 4096 };
-            let r = if scheme.smart { ratio } else { 1.0 };
+            let r = scheme.effective_ratio(ratio);
             layers::fc_workload(&layer, r, &cfg, sample * 16, 1)
         }
         w => anyhow::bail!("unknown workload {w:?}"),

@@ -53,7 +53,9 @@ impl Layer {
                 let (ho, wo) = self.out_hw();
                 ((h * w * c * 4) as u64, 0, (ho * wo * c * 4) as u64)
             }
-            Layer::Fc { din, dout } => ((din * 4) as u64, (din * dout * 4) as u64, (dout * 4) as u64),
+            Layer::Fc { din, dout } => {
+                ((din * 4) as u64, (din * dout * 4) as u64, (dout * 4) as u64)
+            }
         }
     }
 

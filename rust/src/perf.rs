@@ -24,7 +24,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::model::zoo;
-use crate::sim::{GpuConfig, Scheme, SimEngine};
+use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine};
 use crate::stats::Table;
 use crate::traffic::{self, gemm, layers, network};
 use crate::util::cli::Args;
@@ -173,12 +173,40 @@ fn basket(quick: bool) -> Vec<PerfCase> {
                 let mut instrs = 0u64;
                 for net_name in &nets {
                     let net = zoo::by_name(net_name).expect("paper network");
-                    for (_, scheme) in Scheme::ALL_SIX {
+                    for scheme in SchemeRegistry::paper_six() {
                         let run = network::run_network_seeded(&net, scheme, 0.5, &cfg, sample, 0);
                         for (_, s, _) in &run.per_layer {
                             cycles += s.cycles;
                             instrs += s.instrs;
                         }
+                    }
+                }
+                (cycles, instrs)
+            }),
+        });
+    }
+
+    {
+        // Registry-only schemes end to end: vgg16 under the
+        // GuardNN-style fixed-counter and Seculator-style
+        // pregenerated-keystream pipelines — the open-registry paths a
+        // closed six-scheme basket would never execute.
+        let sample = if quick { 8 } else { 48 };
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "registry_new_schemes",
+            kind: "network_sweep",
+            run: Box::new(move |e| {
+                let cfg = cfg.clone().with_engine(e);
+                let net = zoo::by_name("vgg16").expect("paper network");
+                let mut cycles = 0u64;
+                let mut instrs = 0u64;
+                for name in ["GuardNN", "Seculator"] {
+                    let scheme = Scheme::parse(name).expect("registered scheme");
+                    let run = network::run_network_seeded(&net, scheme, 0.5, &cfg, sample, 0);
+                    for (_, s, _) in &run.per_layer {
+                        cycles += s.cycles;
+                        instrs += s.instrs;
                     }
                 }
                 (cycles, instrs)
@@ -547,7 +575,16 @@ mod tests {
         assert_eq!(b.mode.as_deref(), Some("quick"));
         let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
         names.sort_unstable();
-        assert_eq!(names, ["conv0_seal", "fig13_networks", "matmul_direct", "pool4_counter"]);
+        assert_eq!(
+            names,
+            [
+                "conv0_seal",
+                "fig13_networks",
+                "matmul_direct",
+                "pool4_counter",
+                "registry_new_schemes"
+            ]
+        );
     }
 
     #[test]

@@ -130,7 +130,13 @@ impl SecurityCtx {
             let theta_lit = lit_f32(&theta, &[theta.len() as i64])?;
             let x_lit = lit_f32(&bx, &self.img_dims(b))?;
             let y_lit = lit_i32(&by, &[b as i64])?;
-            let out = exe.run(&[theta_lit, x_lit, y_lit, mask_lit.reshape(&[mask.len() as i64])?, lr_lit.reshape(&[1])?])?;
+            let out = exe.run(&[
+                theta_lit,
+                x_lit,
+                y_lit,
+                mask_lit.reshape(&[mask.len() as i64])?,
+                lr_lit.reshape(&[1])?,
+            ])?;
             theta = to_f32(&out[0])?;
             loss = to_f32(&out[1])?[0];
         }
@@ -160,7 +166,13 @@ impl SecurityCtx {
         Ok(out)
     }
 
-    pub fn accuracy(&mut self, model: &str, theta: &[f32], xs: &[f32], ys: &[i32]) -> crate::Result<f64> {
+    pub fn accuracy(
+        &mut self,
+        model: &str,
+        theta: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+    ) -> crate::Result<f64> {
         let pred = self.predict(model, theta, xs)?;
         let hits = pred.iter().zip(ys).filter(|(p, y)| **p == **y as usize).count();
         Ok(hits as f64 / ys.len() as f64)
@@ -185,7 +197,8 @@ impl SecurityCtx {
         let mask = vec![1.0f32; theta0.len()];
         let xs = self.data.x_victim.clone();
         let ys = self.data.y_victim.clone();
-        let (theta, loss) = self.train(model, theta0, &mask, &xs, &ys, cfg.victim_steps, cfg.lr_for(model))?;
+        let (theta, loss) =
+            self.train(model, theta0, &mask, &xs, &ys, cfg.victim_steps, cfg.lr_for(model))?;
         eprintln!("[security] victim {model} trained ({} steps, loss {loss:.4})", cfg.victim_steps);
         let bytes: Vec<u8> = theta.iter().flat_map(|f| f.to_le_bytes()).collect();
         std::fs::write(&path, bytes).with_context(|| format!("writing {path:?}"))?;
@@ -279,8 +292,15 @@ impl SecurityCtx {
                 let theta0 = self.he_init(model, cfg.seed ^ 0xb1ac)?;
                 let mask = vec![1.0f32; info.theta_len];
                 let (xs, ys) = self.adversary_set(model, victim, &theta0, cfg)?;
-                let (theta, _) =
-                    self.train(model, theta0, &mask, &xs, &ys, cfg.substitute_steps, cfg.lr_for(model))?;
+                let (theta, _) = self.train(
+                    model,
+                    theta0,
+                    &mask,
+                    &xs,
+                    &ys,
+                    cfg.substitute_steps,
+                    cfg.lr_for(model),
+                )?;
                 Ok(theta)
             }
             SubstituteKind::Se { ratio } => {
@@ -299,8 +319,15 @@ impl SecurityCtx {
                     .map(|((v, f), m)| if *m == 1.0 { *f } else { *v })
                     .collect();
                 let (xs, ys) = self.adversary_set(model, victim, &theta0, cfg)?;
-                let (theta, _) =
-                    self.train(model, theta0, &mask, &xs, &ys, cfg.substitute_steps, cfg.lr_for(model))?;
+                let (theta, _) = self.train(
+                    model,
+                    theta0,
+                    &mask,
+                    &xs,
+                    &ys,
+                    cfg.substitute_steps,
+                    cfg.lr_for(model),
+                )?;
                 Ok(theta)
             }
         }

@@ -1,5 +1,9 @@
 //! Simulator configuration (paper §4.1 Table 3 defaults).
 
+// The scheme type itself lives in `sim::scheme` (the open registry);
+// configs carry the registered handle.
+use super::scheme::Scheme;
+
 /// Memory line size in bytes (L1/L2/DRAM).
 pub const LINE: u64 = 128;
 
@@ -31,75 +35,6 @@ impl SimEngine {
         match self {
             SimEngine::Lockstep => "lockstep",
             SimEngine::Event => "event",
-        }
-    }
-}
-
-/// Which line cipher runs at the memory controllers (paper §2.3/§3.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EncEngine {
-    /// No encryption at all (insecure baseline GPU).
-    None,
-    /// Direct (ECB-with-global-key) encryption: decrypt serialized
-    /// after every encrypted read, encrypt before every write.
-    Direct,
-    /// Traditional counter mode: per-line counters in DRAM + an on-chip
-    /// counter cache; OTP overlaps the data read on a counter hit.
-    Counter,
-    /// SEAL's colocation mode: the 8B counter lives in the same 136B
-    /// line (ECC-chip style), so no counter traffic and no counter
-    /// cache; OTP starts when the line (with its counter) arrives.
-    ColoE,
-}
-
-/// A full scheme = engine + whether the SE partial-encryption address
-/// map is active (paper's six compared configurations).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Scheme {
-    pub engine: EncEngine,
-    pub smart: bool,
-}
-
-impl Scheme {
-    pub const BASELINE: Scheme = Scheme { engine: EncEngine::None, smart: false };
-    pub const DIRECT: Scheme = Scheme { engine: EncEngine::Direct, smart: false };
-    pub const COUNTER: Scheme = Scheme { engine: EncEngine::Counter, smart: false };
-    pub const DIRECT_SE: Scheme = Scheme { engine: EncEngine::Direct, smart: true };
-    pub const COUNTER_SE: Scheme = Scheme { engine: EncEngine::Counter, smart: true };
-    /// SEAL = SE + ColoE.
-    pub const SEAL: Scheme = Scheme { engine: EncEngine::ColoE, smart: true };
-
-    pub const ALL_SIX: [(&'static str, Scheme); 6] = [
-        ("Baseline", Scheme::BASELINE),
-        ("Direct", Scheme::DIRECT),
-        ("Counter", Scheme::COUNTER),
-        ("Direct+SE", Scheme::DIRECT_SE),
-        ("Counter+SE", Scheme::COUNTER_SE),
-        ("SEAL", Scheme::SEAL),
-    ];
-
-    pub fn parse(s: &str) -> Option<Scheme> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "baseline" => Scheme::BASELINE,
-            "direct" => Scheme::DIRECT,
-            "counter" => Scheme::COUNTER,
-            "direct+se" | "direct_se" => Scheme::DIRECT_SE,
-            "counter+se" | "counter_se" => Scheme::COUNTER_SE,
-            "seal" | "coloe+se" => Scheme::SEAL,
-            "coloe" => Scheme { engine: EncEngine::ColoE, smart: false },
-            _ => return None,
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match (self.engine, self.smart) {
-            (EncEngine::None, _) => "Baseline",
-            (EncEngine::Direct, false) => "Direct",
-            (EncEngine::Counter, false) => "Counter",
-            (EncEngine::Direct, true) => "Direct+SE",
-            (EncEngine::Counter, true) => "Counter+SE",
-            (EncEngine::ColoE, true) => "SEAL",
-            (EncEngine::ColoE, false) => "ColoE",
         }
     }
 }
@@ -227,15 +162,6 @@ impl GpuConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn scheme_parse_roundtrip() {
-        for (name, s) in Scheme::ALL_SIX {
-            assert_eq!(Scheme::parse(name).unwrap(), s);
-            assert_eq!(s.name(), name);
-        }
-        assert!(Scheme::parse("bogus").is_none());
-    }
 
     #[test]
     fn engine_parse_and_default() {

@@ -115,7 +115,11 @@ impl Gpu {
     /// Build a GPU with one stream per (sm, warp); `streams.len()` must
     /// be `n_sms * warps_per_sm` (use `Slot::Compute(0)`-free empty
     /// vecs for unused warps).
-    pub fn new(cfg: GpuConfig, enc_map: Arc<dyn EncMap>, mut streams: Vec<Box<dyn AccessStream>>) -> Gpu {
+    pub fn new(
+        cfg: GpuConfig,
+        enc_map: Arc<dyn EncMap>,
+        mut streams: Vec<Box<dyn AccessStream>>,
+    ) -> Gpu {
         let want = cfg.n_sms * cfg.warps_per_sm;
         assert_eq!(streams.len(), want, "need {want} warp streams");
         let mut sms = Vec::with_capacity(cfg.n_sms);
@@ -379,14 +383,8 @@ impl Gpu {
             self.now += 1;
             guard += 1;
         }
-        for ch in 0..self.cfg.n_channels {
-            if let Some(cc) = self.mcs[ch].ctr_cache.as_mut() {
-                let dirty = cc.flush_dirty();
-                for line in dirty {
-                    self.mcs[ch].stats.ctr_writes += 1;
-                    self.mcs[ch].dram.access(line, true, self.now);
-                }
-            }
+        for mc in &mut self.mcs {
+            mc.flush_scheme_state(self.now);
         }
     }
 
@@ -408,7 +406,7 @@ impl Gpu {
             s.dram_row_hits += mc.dram.row_hits;
             s.dram_row_misses += mc.dram.row_misses;
             s.dram_bus_busy += mc.dram.bus_busy_cycles;
-            if let Some(cc) = mc.ctr_cache.as_ref() {
+            if let Some(cc) = mc.ctr_cache() {
                 s.ctr_cache_hits += cc.hits;
                 s.ctr_cache_misses += cc.misses;
             }
@@ -420,9 +418,10 @@ impl Gpu {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::config::{Scheme, SimEngine};
+    use crate::sim::config::SimEngine;
     use crate::sim::core::Slot;
     use crate::sim::encryption::AllEncrypted;
+    use crate::sim::scheme::Scheme;
 
     /// Build a GPU where the first `n_active` warps run `prog` and the
     /// rest are empty.

@@ -13,6 +13,13 @@
 //! and DESIGN.md §7): the event-wheel scheduler in [`event`] (default —
 //! idle gaps are skipped) or the lockstep reference it is
 //! differentially tested against. Stats are byte-identical either way.
+//!
+//! Schemes are an *open registry* ([`scheme`], DESIGN.md §3): each is a
+//! [`scheme::CipherPipeline`] implementation registered under a
+//! canonical name, and the memory controller ([`mc`]) is
+//! scheme-agnostic — it delegates every encrypted access to the
+//! configured pipeline through the narrow [`scheme::McResources`]
+//! facade.
 
 pub mod aes_engine;
 pub mod cache;
@@ -23,7 +30,9 @@ pub mod encryption;
 pub mod event;
 pub mod gpu;
 pub mod mc;
+pub mod scheme;
 
-pub use config::{EncEngine, GpuConfig, Scheme, SimEngine, LINE};
+pub use config::{GpuConfig, SimEngine, LINE};
 pub use event::EventWheel;
 pub use gpu::{Gpu, SimStats};
+pub use scheme::{CipherPipeline, McResources, Scheme, SchemeRegistry, SchemeSpec};

@@ -1,0 +1,635 @@
+//! Open scheme registry: memory-encryption pipelines as first-class,
+//! pluggable objects (DESIGN.md §3).
+//!
+//! The paper's six compared configurations are *points* in a design
+//! space of memory-encryption pipelines. This module makes that space
+//! open: a scheme is a [`SchemeSpec`] (name, doc string, SE flag,
+//! counter-store requirement, pipeline factory) registered with the
+//! process-wide [`SchemeRegistry`]; its timing behaviour is a
+//! [`CipherPipeline`] implementation that composes completion cycles
+//! from the narrow [`McResources`] facade the memory controller hands
+//! it (DRAM channel, AES engine, optional on-chip counter store,
+//! per-class stats). `sim::mc` is scheme-agnostic: it classifies and
+//! schedules requests, then delegates every encrypted access to the
+//! pipeline.
+//!
+//! Built-in registrations: the paper's six schemes (Baseline, Direct,
+//! Counter, Direct+SE, Counter+SE, SEAL) with byte-identical timing to
+//! the historical closed implementation (golden-stats +
+//! event-vs-lockstep enforced), the ColoE-without-SE ablation, and two
+//! registry-only schemes from related work — a GuardNN-style
+//! fixed-on-chip-counter pipeline and a Seculator-style
+//! pregenerated-keystream pipeline (PAPERS.md). Out-of-crate schemes
+//! join via [`SchemeRegistry::register`].
+
+use std::sync::{Mutex, OnceLock};
+
+use super::aes_engine::AesEngine;
+use super::config::GpuConfig;
+use super::dram::Channel;
+use super::encryption::{counter_line_of, CounterCache, CtrProbe};
+use super::mc::McStats;
+
+/// The narrow view of one memory controller a [`CipherPipeline`]
+/// composes timing against. All resources are reservation-based:
+/// `dram.access` / `aes.submit` book occupancy and return completion
+/// cycles, so a pipeline expresses a scheme purely as the order in
+/// which it reserves resources and combines their completion times.
+pub struct McResources<'a> {
+    pub dram: &'a mut Channel,
+    pub aes: &'a mut AesEngine,
+    /// On-chip counter store; present iff the scheme's spec set
+    /// [`SchemeSpec::counter_store`].
+    pub ctr: Option<&'a mut CounterCache>,
+    /// Per-class access counters (counter-traffic classes are the
+    /// pipeline's to account; data classes are counted by the MC).
+    pub stats: &'a mut McStats,
+}
+
+impl McResources<'_> {
+    /// Counter-mode helper shared by pipelines that keep per-line
+    /// counters in DRAM behind an on-chip counter cache: the cycle at
+    /// which the counter value for `line` is available on chip,
+    /// accounting counter-cache traffic (fetch on miss, dirty-victim
+    /// writeback).
+    pub fn counter_ready(&mut self, line: u64, write: bool, now: u64) -> u64 {
+        let cc = self.ctr.as_deref_mut().expect("scheme requires a counter store");
+        match cc.access(line, write) {
+            CtrProbe::Hit => now + 1,
+            CtrProbe::Miss { dirty_victim } => {
+                if let Some(victim) = dirty_victim {
+                    self.stats.ctr_writes += 1;
+                    self.dram.access(victim, true, now);
+                }
+                self.stats.ctr_reads += 1;
+                let ctr_line = counter_line_of(line);
+                self.dram.access(ctr_line, false, now)
+            }
+        }
+    }
+}
+
+/// Read/write timing composition of one memory-encryption scheme at a
+/// memory controller. One pipeline instance exists per MC (schemes may
+/// hold per-controller state); `read`/`write` reserve resources for a
+/// single 128B line and return its completion cycle.
+pub trait CipherPipeline: Send {
+    /// Reserve resources for an encrypted read of `line` issued at
+    /// `now`; returns the cycle the decrypted line is on chip.
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64;
+
+    /// Reserve resources for an encrypted write of `line` issued at
+    /// `now`; returns the cycle the ciphertext write completes.
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64;
+
+    /// Whether this pipeline encrypts anything at all. The baseline
+    /// no-op pipeline returns `false`, sending even encrypted-marked
+    /// lines down the plain path (never into `read`/`write`).
+    fn encrypts(&self) -> bool {
+        true
+    }
+
+    /// End-of-run hook: write back any dirty scheme state (dirty
+    /// counter-store lines, buffered per-line metadata, ...) through
+    /// the DRAM channel so access-count figures are complete. Default:
+    /// nothing to flush.
+    fn flush(&mut self, _res: &mut McResources, _now: u64) {}
+}
+
+/// A registered scheme: identity, documentation, and how to build its
+/// per-controller pipeline.
+pub struct SchemeSpec {
+    /// Canonical display name (store rows, CLI tables, memo keys).
+    pub name: &'static str,
+    /// Extra lowercase parse aliases ("direct_se", "coloe+se", ...).
+    /// The canonical name always parses case-insensitively.
+    pub aliases: &'static [&'static str],
+    /// Engine-family label for docs/tables ("none", "direct",
+    /// "counter", "coloe", "fixed-ctr", "pregen-otp", ...).
+    pub engine: &'static str,
+    /// Whether the SE partial-encryption address map applies (the
+    /// criticality-aware bypass axis; non-SE schemes encrypt every
+    /// line and collapse the SE-ratio axis to 1.0).
+    pub smart: bool,
+    /// Whether each MC must provision an on-chip counter store for
+    /// this scheme (passed to the pipeline via [`McResources::ctr`]).
+    pub counter_store: bool,
+    /// One-line description (`seal schemes`, README table).
+    pub doc: &'static str,
+    /// Build the per-controller timing pipeline.
+    pub pipeline: fn(&GpuConfig) -> Box<dyn CipherPipeline>,
+}
+
+/// Handle to a registered scheme — the value that flows through
+/// configs, sweeps, and the serving engine. Copyable and cheap;
+/// equality is by canonical name (the registry rejects duplicates).
+#[derive(Clone, Copy)]
+pub struct Scheme(&'static SchemeSpec);
+
+impl Scheme {
+    pub const BASELINE: Scheme = Scheme(&BASELINE_SPEC);
+    pub const DIRECT: Scheme = Scheme(&DIRECT_SPEC);
+    pub const COUNTER: Scheme = Scheme(&COUNTER_SPEC);
+    pub const DIRECT_SE: Scheme = Scheme(&DIRECT_SE_SPEC);
+    pub const COUNTER_SE: Scheme = Scheme(&COUNTER_SE_SPEC);
+    /// SEAL = SE + ColoE.
+    pub const SEAL: Scheme = Scheme(&SEAL_SPEC);
+
+    /// Registry lookup by canonical name (case-insensitive) or alias.
+    pub fn parse(s: &str) -> Option<Scheme> {
+        SchemeRegistry::lookup(s)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.0.name
+    }
+
+    /// Whether the SE partial-encryption address map applies.
+    pub fn smart(&self) -> bool {
+        self.0.smart
+    }
+
+    pub fn spec(&self) -> &'static SchemeSpec {
+        self.0
+    }
+
+    /// Effective SE ratio for this scheme: non-SE schemes encrypt
+    /// everything, collapsing any requested ratio to 1.0.
+    pub fn effective_ratio(&self, ratio: f64) -> f64 {
+        if self.0.smart {
+            ratio
+        } else {
+            1.0
+        }
+    }
+}
+
+impl PartialEq for Scheme {
+    fn eq(&self, other: &Scheme) -> bool {
+        self.0.name == other.0.name
+    }
+}
+
+impl Eq for Scheme {}
+
+impl std::fmt::Debug for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Scheme({})", self.0.name)
+    }
+}
+
+// -- built-in pipelines ------------------------------------------------------
+//
+// Timing composition per 128B line (read path):
+//
+// | pipeline  | completion                                            |
+// |-----------|-------------------------------------------------------|
+// | NoCipher  | dram (never called: encrypts() = false)               |
+// | Direct    | aes(dram)  — decrypt serialized after the data        |
+// | Counter   | ctr hit:  max(dram, aes(now+1)) + 1 (OTP overlaps)    |
+// |           | ctr miss: max(dram, aes(dram_ctr)) + 1 (+ctr traffic) |
+// | ColoE     | aes(dram) + 1 — counter arrives *with* the line       |
+// | FixedCtr  | max(dram, aes(now+1)) + 1 — ctr always on chip        |
+// | PregenOtp | max(dram, keystream slot) + 1 — AES latency hidden    |
+//
+// Writes reserve the engine for OTP/encrypt, then the channel.
+
+/// Baseline: no encryption; encrypted-marked lines take the plain path.
+struct NoCipher;
+
+impl CipherPipeline for NoCipher {
+    fn read(&mut self, _res: &mut McResources, _line: u64, _now: u64) -> u64 {
+        unreachable!("NoCipher never reaches the encrypted path")
+    }
+
+    fn write(&mut self, _res: &mut McResources, _line: u64, _now: u64) -> u64 {
+        unreachable!("NoCipher never reaches the encrypted path")
+    }
+
+    fn encrypts(&self) -> bool {
+        false
+    }
+}
+
+/// Direct (ECB-with-global-key): decrypt serialized after every
+/// encrypted read, encrypt before every write.
+struct DirectPipeline;
+
+impl CipherPipeline for DirectPipeline {
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        // Decrypt strictly after the data arrives.
+        let data = res.dram.access(line, false, now);
+        res.aes.submit(data)
+    }
+
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let enc = res.aes.submit(now);
+        res.dram.access(line, true, enc)
+    }
+}
+
+/// Traditional counter mode: per-line counters in DRAM behind an
+/// on-chip counter cache; OTP generation overlaps the data read on a
+/// counter hit (the latency-hiding that makes counter mode attractive
+/// on CPUs).
+struct CounterPipeline;
+
+impl CipherPipeline for CounterPipeline {
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let ctr_ready = res.counter_ready(line, false, now);
+        let data = res.dram.access(line, false, now);
+        // OTP generation may start once the counter is known.
+        let otp = res.aes.submit(ctr_ready);
+        data.max(otp) + 1 // +1: XOR
+    }
+
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let ctr_ready = res.counter_ready(line, true, now);
+        let otp = res.aes.submit(ctr_ready);
+        res.dram.access(line, true, otp)
+    }
+
+    fn flush(&mut self, res: &mut McResources, now: u64) {
+        // Dirty counter lines left in the on-chip store go back to
+        // DRAM (Fig 14's counter-write traffic would under-report
+        // otherwise).
+        let dirty = res.ctr.as_deref_mut().map(|cc| cc.flush_dirty()).unwrap_or_default();
+        for line in dirty {
+            res.stats.ctr_writes += 1;
+            res.dram.access(line, true, now);
+        }
+    }
+}
+
+/// SEAL's colocation mode: the 8B counter lives in the same 136B line
+/// (ECC-chip style), so no counter traffic and no counter cache; OTP
+/// starts when the line (with its counter) arrives.
+struct ColoEPipeline;
+
+impl CipherPipeline for ColoEPipeline {
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        // Counter is colocated: OTP starts when the line lands.
+        let data = res.dram.access(line, false, now);
+        res.aes.submit(data) + 1
+    }
+
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        // Counter came on-chip with the fill; bump + OTP.
+        let otp = res.aes.submit(now);
+        res.dram.access(line, true, otp)
+    }
+}
+
+/// GuardNN-style fixed on-chip version counters (PAPERS.md): every
+/// line's counter lives in dedicated on-chip storage, so there is no
+/// counter DRAM traffic and no counter cache to miss. Reads behave
+/// like a guaranteed counter-cache hit: the OTP starts one cycle in
+/// (the on-chip counter read) and overlaps the data fetch.
+struct FixedCounterPipeline;
+
+impl CipherPipeline for FixedCounterPipeline {
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let otp = res.aes.submit(now + 1);
+        let data = res.dram.access(line, false, now);
+        data.max(otp) + 1 // +1: XOR
+    }
+
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let otp = res.aes.submit(now + 1);
+        res.dram.access(line, true, otp)
+    }
+}
+
+/// Seculator-style keystream pregeneration (PAPERS.md): OTP blocks are
+/// produced ahead of use during engine idle time, so the AES pipeline
+/// *latency* is hidden — only its sustained throughput (the keystream
+/// refill rate) can bound an access, modeled by
+/// [`AesEngine::submit_pregenerated`].
+struct PregenKeystreamPipeline;
+
+impl CipherPipeline for PregenKeystreamPipeline {
+    fn read(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let data = res.dram.access(line, false, now);
+        let otp = res.aes.submit_pregenerated(now);
+        data.max(otp) + 1 // +1: XOR
+    }
+
+    fn write(&mut self, res: &mut McResources, line: u64, now: u64) -> u64 {
+        let otp = res.aes.submit_pregenerated(now);
+        res.dram.access(line, true, otp)
+    }
+}
+
+// -- built-in specs ----------------------------------------------------------
+
+// Named factories: `const` spec initializers need plain `fn` items
+// (closure-to-fn-pointer coercion inside `const` promotion is murkier
+// than a function path, and `const` items cannot reference `static`s).
+fn make_no_cipher(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(NoCipher)
+}
+
+fn make_direct(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(DirectPipeline)
+}
+
+fn make_counter(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(CounterPipeline)
+}
+
+fn make_coloe(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(ColoEPipeline)
+}
+
+fn make_fixed_counter(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(FixedCounterPipeline)
+}
+
+fn make_pregen_keystream(_: &GpuConfig) -> Box<dyn CipherPipeline> {
+    Box::new(PregenKeystreamPipeline)
+}
+
+const BASELINE_SPEC: SchemeSpec = SchemeSpec {
+    name: "Baseline",
+    aliases: &[],
+    engine: "none",
+    smart: false,
+    counter_store: false,
+    doc: "Insecure GPU: no memory encryption at all (the IPC anchor).",
+    pipeline: make_no_cipher,
+};
+
+const DIRECT_SPEC: SchemeSpec = SchemeSpec {
+    name: "Direct",
+    aliases: &[],
+    engine: "direct",
+    smart: false,
+    counter_store: false,
+    doc: "AES-ECB with a global key: decrypt serialized after every read.",
+    pipeline: make_direct,
+};
+
+const COUNTER_SPEC: SchemeSpec = SchemeSpec {
+    name: "Counter",
+    aliases: &[],
+    engine: "counter",
+    smart: false,
+    counter_store: true,
+    doc: "Counter mode: per-line counters in DRAM + on-chip counter cache.",
+    pipeline: make_counter,
+};
+
+const DIRECT_SE_SPEC: SchemeSpec = SchemeSpec {
+    name: "Direct+SE",
+    aliases: &["direct_se"],
+    engine: "direct",
+    smart: true,
+    counter_store: false,
+    doc: "Direct encryption restricted to the SE-selected critical lines.",
+    pipeline: make_direct,
+};
+
+const COUNTER_SE_SPEC: SchemeSpec = SchemeSpec {
+    name: "Counter+SE",
+    aliases: &["counter_se"],
+    engine: "counter",
+    smart: true,
+    counter_store: true,
+    doc: "Counter mode restricted to the SE-selected critical lines.",
+    pipeline: make_counter,
+};
+
+const SEAL_SPEC: SchemeSpec = SchemeSpec {
+    name: "SEAL",
+    aliases: &["coloe+se", "coloe_se"],
+    engine: "coloe",
+    smart: true,
+    counter_store: false,
+    doc: "The paper's scheme: SE + colocated counters (no counter traffic).",
+    pipeline: make_coloe,
+};
+
+const COLOE_SPEC: SchemeSpec = SchemeSpec {
+    name: "ColoE",
+    aliases: &[],
+    engine: "coloe",
+    smart: false,
+    counter_store: false,
+    doc: "Colocated-counter ablation: ColoE timing with full encryption.",
+    pipeline: make_coloe,
+};
+
+const GUARDNN_SPEC: SchemeSpec = SchemeSpec {
+    name: "GuardNN",
+    aliases: &["fixed-ctr"],
+    engine: "fixed-ctr",
+    smart: false,
+    counter_store: false,
+    doc: "GuardNN-style fixed on-chip counters: hit-like OTP overlap, zero counter traffic.",
+    pipeline: make_fixed_counter,
+};
+
+const SECULATOR_SPEC: SchemeSpec = SchemeSpec {
+    name: "Seculator",
+    aliases: &["pregen-otp"],
+    engine: "pregen-otp",
+    smart: false,
+    counter_store: false,
+    doc: "Seculator-style pregenerated keystream: AES latency hidden, throughput still paid.",
+    pipeline: make_pregen_keystream,
+};
+
+/// Built-in registration order: the paper's six first (their historical
+/// enumeration order — sweep specs and golden stats depend on it), then
+/// the ablation and related-work schemes.
+static BUILTIN: [&SchemeSpec; 9] = [
+    &BASELINE_SPEC,
+    &DIRECT_SPEC,
+    &COUNTER_SPEC,
+    &DIRECT_SE_SPEC,
+    &COUNTER_SE_SPEC,
+    &SEAL_SPEC,
+    &COLOE_SPEC,
+    &GUARDNN_SPEC,
+    &SECULATOR_SPEC,
+];
+
+/// Process-wide extension list ([`SchemeRegistry::register`]).
+static EXTRA: OnceLock<Mutex<Vec<&'static SchemeSpec>>> = OnceLock::new();
+
+fn extra() -> &'static Mutex<Vec<&'static SchemeSpec>> {
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// The open scheme registry: canonical name → [`SchemeSpec`]. Every
+/// registered scheme is listable ([`SchemeRegistry::all`]), parseable
+/// ([`Scheme::parse`]), and runnable through every consumer (`seal
+/// sweep`/`seal perf`/`seal serve-bench`, the fig benches, the tests).
+pub struct SchemeRegistry;
+
+impl SchemeRegistry {
+    /// Every registered scheme, built-ins first in registration order.
+    pub fn all() -> Vec<Scheme> {
+        let mut out: Vec<Scheme> = BUILTIN.iter().map(|&s| Scheme(s)).collect();
+        out.extend(extra().lock().unwrap().iter().map(|&s| Scheme(s)));
+        out
+    }
+
+    /// The paper's six compared configurations, in their historical
+    /// order (golden sweep specs hash this order — do not reorder).
+    pub fn paper_six() -> [Scheme; 6] {
+        [
+            Scheme::BASELINE,
+            Scheme::DIRECT,
+            Scheme::COUNTER,
+            Scheme::DIRECT_SE,
+            Scheme::COUNTER_SE,
+            Scheme::SEAL,
+        ]
+    }
+
+    /// Case-insensitive lookup by canonical name or alias.
+    pub fn lookup(name: &str) -> Option<Scheme> {
+        Self::all().into_iter().find(|s| {
+            s.spec().name.eq_ignore_ascii_case(name)
+                || s.spec().aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+        })
+    }
+
+    /// Register a new scheme at runtime. Rejects canonical names and
+    /// aliases that collide (case-insensitively) with an existing
+    /// registration — [`Scheme`] equality is by name.
+    pub fn register(spec: SchemeSpec) -> anyhow::Result<Scheme> {
+        let mut guard = extra().lock().unwrap();
+        let taken = |n: &str| {
+            let n = n.to_ascii_lowercase();
+            BUILTIN
+                .iter()
+                .copied()
+                .chain(guard.iter().copied())
+                .any(|s| {
+                    s.name.to_ascii_lowercase() == n
+                        || s.aliases.iter().any(|a| a.to_ascii_lowercase() == n)
+                })
+        };
+        if taken(spec.name) {
+            anyhow::bail!("scheme {:?} is already registered", spec.name);
+        }
+        if let Some(&a) = spec.aliases.iter().find(|&&a| taken(a)) {
+            anyhow::bail!("scheme alias {a:?} is already registered");
+        }
+        let leaked: &'static SchemeSpec = Box::leak(Box::new(spec));
+        guard.push(leaked);
+        Ok(Scheme(leaked))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_name_lookup_name_roundtrip() {
+        // Every registered scheme parses back to itself: by canonical
+        // name, case-folded, and through every alias.
+        for scheme in SchemeRegistry::all() {
+            let name = scheme.name();
+            assert_eq!(Scheme::parse(name), Some(scheme), "{name}");
+            assert_eq!(Scheme::parse(&name.to_ascii_lowercase()), Some(scheme), "{name}");
+            assert_eq!(Scheme::parse(&name.to_ascii_uppercase()), Some(scheme), "{name}");
+            for alias in scheme.spec().aliases {
+                assert_eq!(Scheme::parse(alias), Some(scheme), "alias {alias}");
+            }
+        }
+        assert!(Scheme::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn registry_lists_paper_six_first_in_historical_order() {
+        let all = SchemeRegistry::all();
+        let names: Vec<&str> = all.iter().take(6).map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["Baseline", "Direct", "Counter", "Direct+SE", "Counter+SE", "SEAL"],
+            "golden sweep specs hash this order"
+        );
+        assert_eq!(SchemeRegistry::paper_six().to_vec(), all[..6].to_vec());
+    }
+
+    #[test]
+    fn legacy_aliases_still_parse() {
+        assert_eq!(Scheme::parse("seal"), Some(Scheme::SEAL));
+        assert_eq!(Scheme::parse("coloe+se"), Some(Scheme::SEAL));
+        assert_eq!(Scheme::parse("direct_se"), Some(Scheme::DIRECT_SE));
+        assert_eq!(Scheme::parse("counter_se"), Some(Scheme::COUNTER_SE));
+        // The old parse/ALL_SIX asymmetry is gone: ColoE is a listed,
+        // first-class registration.
+        let coloe = Scheme::parse("coloe").expect("coloe registered");
+        assert!(SchemeRegistry::all().contains(&coloe));
+        assert!(!coloe.smart());
+    }
+
+    #[test]
+    fn registry_only_schemes_are_listed_and_not_smart() {
+        for name in ["GuardNN", "Seculator"] {
+            let s = Scheme::parse(name).unwrap_or_else(|| panic!("{name} registered"));
+            assert!(!s.smart(), "{name} models full encryption");
+            assert!(!s.spec().counter_store, "{name} needs no counter cache");
+            assert!(SchemeRegistry::all().contains(&s));
+        }
+    }
+
+    #[test]
+    fn effective_ratio_collapses_for_non_se() {
+        assert_eq!(Scheme::SEAL.effective_ratio(0.25), 0.25);
+        assert_eq!(Scheme::COUNTER.effective_ratio(0.25), 1.0);
+        assert_eq!(Scheme::BASELINE.effective_ratio(0.25), 1.0);
+    }
+
+    #[test]
+    fn register_rejects_collisions_and_accepts_new() {
+        // Name collision (case-insensitive) with a built-in.
+        let dup = SchemeSpec {
+            name: "seal",
+            aliases: &[],
+            engine: "x",
+            smart: false,
+            counter_store: false,
+            doc: "dup",
+            pipeline: make_direct,
+        };
+        assert!(SchemeRegistry::register(dup).is_err());
+        // Alias collision.
+        let dup_alias = SchemeSpec {
+            name: "test-dup-alias",
+            aliases: &["coloe+se"],
+            engine: "x",
+            smart: false,
+            counter_store: false,
+            doc: "dup alias",
+            pipeline: make_direct,
+        };
+        assert!(SchemeRegistry::register(dup_alias).is_err());
+        // A genuinely new scheme registers, lists, and parses.
+        let fresh = SchemeSpec {
+            name: "test-direct-clone",
+            aliases: &["tdc"],
+            engine: "direct",
+            smart: false,
+            counter_store: false,
+            doc: "test registration",
+            pipeline: make_direct,
+        };
+        let s = SchemeRegistry::register(fresh).expect("register");
+        assert_eq!(Scheme::parse("TEST-DIRECT-CLONE"), Some(s));
+        assert_eq!(Scheme::parse("tdc"), Some(s));
+        assert!(SchemeRegistry::all().contains(&s));
+    }
+
+    #[test]
+    fn scheme_equality_is_by_name() {
+        assert_eq!(Scheme::SEAL, Scheme::parse("coloe+se").unwrap());
+        assert_ne!(Scheme::SEAL, Scheme::parse("coloe").unwrap());
+        assert_eq!(format!("{:?}", Scheme::SEAL), "Scheme(SEAL)");
+    }
+}

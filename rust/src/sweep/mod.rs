@@ -26,11 +26,14 @@ pub use spec::{CellKey, SweepSpec, SweepTarget, PAPER_NETS};
 pub use store::{CellRow, SimSummary, SweepResults};
 
 use crate::model::zoo;
-use crate::sim::Scheme;
+use crate::sim::{Scheme, SchemeRegistry};
 use crate::stats::Table;
 use crate::util::cli::Args;
 
 /// `seal sweep` — run (or load) a whole-network scheme sweep.
+/// `--schemes all` iterates the *whole* registry (every registered
+/// scheme is listable); `--schemes paper` is the six compared
+/// configurations of the paper.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
     let networks: Vec<String> = args
         .get_or("networks", &args.get_or("model", "vgg16"))
@@ -42,8 +45,9 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("unknown network {n:?} (have: vgg16, resnet18, resnet34)");
         }
     }
-    let schemes: Vec<String> = match args.get_or("schemes", "all").as_str() {
-        "all" => Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+    let schemes: Vec<String> = match args.get_or("schemes", "paper").as_str() {
+        "all" => SchemeRegistry::all().iter().map(|s| s.name().to_string()).collect(),
+        "paper" => SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
         list => {
             let mut out = Vec::new();
             for s in list.split(',') {

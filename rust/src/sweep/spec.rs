@@ -8,7 +8,7 @@
 //! ratio), so every scheme sees the same synthetic SE masks — the
 //! invariant the paper's normalized-IPC comparisons rely on.
 
-use crate::sim::Scheme;
+use crate::sim::{Scheme, SchemeRegistry};
 use crate::util::json::Json;
 
 /// FNV-1a 64-bit hash (spec fingerprinting for the results store).
@@ -109,7 +109,7 @@ pub struct SweepSpec {
     /// one results file.
     pub name: String,
     pub targets: Vec<SweepTarget>,
-    /// Canonical scheme names (see [`Scheme::ALL_SIX`]).
+    /// Canonical scheme names (any [`SchemeRegistry`] registration).
     pub schemes: Vec<String>,
     /// SE ratios; collapsed to 1.0 for non-SE schemes.
     pub ratios: Vec<f64>,
@@ -148,7 +148,7 @@ impl SweepSpec {
                         CellKey {
                             target: target.clone(),
                             scheme: scheme.name().to_string(),
-                            ratio: if scheme.smart { ratio } else { 1.0 },
+                            ratio: scheme.effective_ratio(ratio),
                         }
                     };
                     if !out.contains(&key) {
@@ -179,7 +179,9 @@ impl SweepSpec {
     }
 
     /// All six paper schemes at one ratio over whole networks — the
-    /// fig 13/14/15 grid.
+    /// fig 13/14/15 grid. (Registry-only schemes join a sweep by
+    /// naming them in `schemes`; this historical grid stays the paper
+    /// six so the shared store hash is stable.)
     pub fn networks_all_schemes(nets: &[&str], ratio: f64, sample_tiles: usize) -> SweepSpec {
         SweepSpec {
             name: "networks".to_string(),
@@ -187,7 +189,7 @@ impl SweepSpec {
                 .iter()
                 .map(|n| SweepTarget::Network { name: n.to_string() })
                 .collect(),
-            schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+            schemes: SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
             ratios: vec![ratio],
             sample_tiles,
             base_seed: 0,
@@ -239,7 +241,7 @@ mod tests {
                 SweepTarget::ConvLayer { index: 1 },
                 SweepTarget::Network { name: "vgg16".into() },
             ],
-            schemes: Scheme::ALL_SIX.iter().map(|(n, _)| n.to_string()).collect(),
+            schemes: SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
             ratios: vec![0.5],
             sample_tiles: 64,
             base_seed: 0,
@@ -256,9 +258,25 @@ mod tests {
         assert_eq!(cells.len(), 18);
         for c in &cells {
             let s = Scheme::parse(&c.scheme).unwrap();
-            if !s.smart {
+            if !s.smart() {
                 assert_eq!(c.ratio, 1.0, "{c:?}");
             }
+        }
+    }
+
+    #[test]
+    fn registry_only_schemes_enumerate_cells() {
+        // Schemes that never existed in the old closed enum flow
+        // through cell enumeration like any registered scheme.
+        let mut spec = demo_spec();
+        spec.schemes = vec!["GuardNN".into(), "Seculator".into()];
+        spec.ratios = vec![0.25, 0.5];
+        let cells = spec.cells();
+        // Both are non-SE: the ratio axis collapses to one cell per
+        // (target, scheme).
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert_eq!(c.ratio, 1.0, "{c:?}");
         }
     }
 

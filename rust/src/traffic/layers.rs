@@ -221,7 +221,11 @@ pub fn fc_workload(
     let mask = synthetic_row_mask(din, ratio, seed);
 
     let mut alloc = Allocator::new();
-    let x_base = alloc.alloc_striped("x", LINE, synthetic_row_mask(ceil_div((din * 4) as u64, LINE) as usize, ratio, seed ^ 7));
+    let x_base = alloc.alloc_striped(
+        "x",
+        LINE,
+        synthetic_row_mask(ceil_div((din * 4) as u64, LINE) as usize, ratio, seed ^ 7),
+    );
     let w_base = alloc.alloc_striped("weights", row_stripe, mask);
     let y_base = alloc.emalloc("y", (dout * 4) as u64);
     let map = alloc.finish();

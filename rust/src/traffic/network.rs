@@ -5,7 +5,7 @@
 //! fraction).
 
 use crate::model::zoo::{Layer, Network};
-use crate::sim::{GpuConfig, Scheme, SimStats};
+use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimStats};
 
 use super::layers::layer_workload;
 
@@ -56,7 +56,7 @@ pub fn layer_se_ratio(net: &Network, idx: usize, ratio: f64) -> Option<f64> {
 }
 
 /// Simulate an entire network under `scheme`. `se_ratio` is the SE
-/// encryption ratio (used only when `scheme.smart`).
+/// encryption ratio (used only when `scheme.smart()`).
 pub fn run_network(
     net: &Network,
     scheme: Scheme,
@@ -83,7 +83,7 @@ pub fn run_network_seeded(
     let mut out = NetworkRun::default();
     let mut total_instrs = 0.0;
     for (idx, layer) in net.layers.iter().enumerate() {
-        let ratio = if scheme.smart {
+        let ratio = if scheme.smart() {
             layer_se_ratio(net, idx, se_ratio)
         } else {
             None // full encryption
@@ -105,16 +105,16 @@ pub fn run_network_seeded(
     out
 }
 
-/// Run all six paper schemes over a network; returns (name, run) rows.
+/// Run the six paper schemes over a network; returns (name, run) rows.
 pub fn run_all_schemes(
     net: &Network,
     se_ratio: f64,
     cfg: &GpuConfig,
     sample_tiles: usize,
 ) -> Vec<(&'static str, NetworkRun)> {
-    Scheme::ALL_SIX
+    SchemeRegistry::paper_six()
         .iter()
-        .map(|(name, scheme)| (*name, run_network(net, *scheme, se_ratio, cfg, sample_tiles)))
+        .map(|&scheme| (scheme.name(), run_network(net, scheme, se_ratio, cfg, sample_tiles)))
         .collect()
 }
 

@@ -3,15 +3,17 @@
 //! workloads (the equivalence contract of `sim::event` / DESIGN.md §7).
 //!
 //! The three golden workloads mirror `golden_stats.rs` (a dense
-//! matmul, a CONV layer, a POOL layer) and run under every paper
-//! scheme, plus a whole-network differential through the wave-sampled
+//! matmul, a CONV layer, a POOL layer) and run under **every scheme in
+//! the open registry** — the paper's six plus ColoE and the
+//! registry-only GuardNN/Seculator pipelines, and anything registered
+//! later — plus a whole-network differential through the wave-sampled
 //! `run_network_seeded` path. Field-by-field equality covers cycles,
 //! per-class DRAM traffic, cache hit/miss counters, AES line counts,
 //! and stall accounting — if the event wheel ever skips a cycle that
 //! did work, one of these diverges.
 
 use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme, SimEngine, SimStats};
+use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine, SimStats};
 use seal::traffic::{self, gemm, layers, network};
 
 fn run(w: &traffic::Workload, scheme: Scheme, engine: SimEngine) -> SimStats {
@@ -33,20 +35,19 @@ fn assert_engines_agree(w: &traffic::Workload, schemes: &[Scheme]) {
     }
 }
 
-const ALL: [Scheme; 6] = [
-    Scheme::BASELINE,
-    Scheme::DIRECT,
-    Scheme::COUNTER,
-    Scheme::DIRECT_SE,
-    Scheme::COUNTER_SE,
-    Scheme::SEAL,
-];
+/// Every registered scheme — a new registration is differentially
+/// tested on the next `cargo test` with no edit to this file.
+fn all_registered() -> Vec<Scheme> {
+    let all = SchemeRegistry::all();
+    assert!(all.len() >= 9, "registry lost built-ins? {all:?}");
+    all
+}
 
 #[test]
 fn matmul_golden_workload_identical() {
     let cfg = GpuConfig::default();
     let w = gemm::matmul_workload(256, 256, 256, &cfg, 48);
-    assert_engines_agree(&w, &ALL);
+    assert_engines_agree(&w, &all_registered());
 }
 
 #[test]
@@ -54,7 +55,7 @@ fn conv_golden_workload_identical() {
     let cfg = GpuConfig::default();
     let layer = zoo::fig10_conv_layers()[0];
     let w = layers::conv_workload(&layer, 0.5, &cfg, 48, 0);
-    assert_engines_agree(&w, &ALL);
+    assert_engines_agree(&w, &all_registered());
 }
 
 #[test]
@@ -62,7 +63,7 @@ fn pool_golden_workload_identical() {
     let cfg = GpuConfig::default();
     let layer = zoo::fig11_pool_layers()[4];
     let w = layers::pool_workload(&layer, 0.5, &cfg, 48 * 64, 4);
-    assert_engines_agree(&w, &ALL);
+    assert_engines_agree(&w, &all_registered());
 }
 
 /// Whole-network differential: every per-layer `SimStats` and the
@@ -72,7 +73,13 @@ fn pool_golden_workload_identical() {
 fn network_run_identical_through_sampling() {
     let net = zoo::by_name("vgg16").expect("vgg16 in zoo");
     let cfg = GpuConfig::default();
-    for scheme in [Scheme::BASELINE, Scheme::SEAL] {
+    let schemes = [
+        Scheme::BASELINE,
+        Scheme::SEAL,
+        Scheme::parse("guardnn").expect("registered scheme"),
+        Scheme::parse("seculator").expect("registered scheme"),
+    ];
+    for scheme in schemes {
         let ev = network::run_network_seeded(
             &net,
             scheme,

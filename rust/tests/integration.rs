@@ -11,7 +11,7 @@ use seal::model::importance::{build_mask, encrypted_fraction, se_row_selection};
 use seal::model::manifest::{Dataset, Manifest};
 use seal::runtime::{lit_f32, Runtime};
 use seal::security::{SecurityCtx, SubstituteKind, TrainCfg};
-use seal::sim::{GpuConfig, Scheme};
+use seal::sim::GpuConfig;
 use seal::traffic::{self, layers};
 
 fn artifacts() -> Option<Manifest> {
@@ -199,11 +199,10 @@ fn six_schemes_order_sanely_on_conv_traffic() {
     let cfg = GpuConfig::default();
     let layer = seal::model::zoo::fig10_conv_layers()[0];
     let mut results = Vec::new();
-    for (name, scheme) in Scheme::ALL_SIX {
-        let ratio = if scheme.smart { 0.5 } else { 1.0 };
-        let w = layers::conv_workload(&layer, ratio, &cfg, 360, 1);
+    for scheme in seal::sim::SchemeRegistry::paper_six() {
+        let w = layers::conv_workload(&layer, scheme.effective_ratio(0.5), &cfg, 360, 1);
         let s = traffic::simulate(&w, cfg.clone().with_scheme(scheme));
-        results.push((name, s));
+        results.push((scheme.name(), s));
     }
     let ipc = |n: &str| results.iter().find(|(name, _)| *name == n).unwrap().1.ipc();
     assert!(ipc("Baseline") > ipc("Direct"));
