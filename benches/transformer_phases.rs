@@ -1,0 +1,64 @@
+//! Transformer phase bench: prefill vs decode IPC and per-class memory
+//! traffic for bert_tiny / gpt2_small under the paper span plus the
+//! registry-only related-work schemes (GuardNN fixed counters,
+//! Seculator pregenerated keystream) — the pipelines whose decode
+//! predictions diverge (DESIGN.md §9).
+//!
+//! `SEAL_NET_SAMPLE` (or the shared default 48) sets the per-layer
+//! sample budget; results persist to the `transformer_phases` sweep
+//! store.
+
+use seal::model::zoo;
+use seal::stats::Table;
+use seal::sweep::{resolve_sample, store, SweepSpec, SweepTarget};
+use seal::traffic::Phase;
+
+const NETS: [&str; 2] = ["bert_tiny", "gpt2_small"];
+const SCHEMES: [&str; 6] = ["Baseline", "Direct", "Counter", "SEAL", "GuardNN", "Seculator"];
+
+fn main() {
+    let spec = SweepSpec {
+        name: "transformer_phases".to_string(),
+        targets: NETS
+            .iter()
+            .flat_map(|n| {
+                [Phase::Prefill, Phase::Decode].into_iter().map(move |phase| {
+                    SweepTarget::TransformerNet {
+                        name: n.to_string(),
+                        phase,
+                        seq: zoo::DEFAULT_SEQ,
+                    }
+                })
+            })
+            .collect(),
+        schemes: SCHEMES.iter().map(|s| s.to_string()).collect(),
+        ratios: vec![0.5],
+        sample_tiles: resolve_sample(None, 48),
+        base_seed: 0,
+    };
+    let res = store::load_or_run_expect(&spec);
+
+    for target in &spec.targets {
+        let label = target.label();
+        let base = res.get(&label, "Baseline").expect("baseline row").sim.clone();
+        let mut t = Table::new(
+            &format!("Transformer phases: {label} (sample {})", spec.sample_tiles),
+            &["IPC", "norm IPC", "norm latency", "enc accesses", "ctr accesses"],
+        );
+        for scheme in &spec.schemes {
+            let row = res.get(&label, scheme).expect("scheme row");
+            t.row(
+                scheme,
+                vec![
+                    row.sim.ipc,
+                    row.sim.ipc / base.ipc.max(1e-12),
+                    row.sim.cycles / base.cycles.max(1e-12),
+                    row.sim.enc_accesses,
+                    row.sim.ctr_accesses,
+                ],
+            );
+        }
+        t.emit(&format!("transformer_{}.csv", label.replace(':', "_")));
+    }
+    println!("[sweep store] {}", res.path.display());
+}

@@ -20,7 +20,9 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 
 use super::backend::SynthSpec;
-use super::server::{scheme_slowdown, serve_synthetic, Admission, ServeReport, SynthServeCfg};
+use super::server::{
+    scheme_slowdown_for, serve_synthetic, Admission, CalWorkload, ServeReport, SynthServeCfg,
+};
 
 /// Default output path (repo root — the BENCH_* trajectory location).
 pub const DEFAULT_BENCH_PATH: &str = "BENCH_serve.json";
@@ -47,6 +49,10 @@ pub struct BenchOptions {
     /// Synthetic service-time knob (GEMV repetitions per request).
     pub cost_repeats: usize,
     pub se_ratio: f64,
+    /// Which cycle-sim workload calibrates the slowdown factor
+    /// (`--calibration cnn|transformer`): a conv layer, or a bert_tiny
+    /// decode step for transformer-serving latency models.
+    pub calibration: CalWorkload,
     /// Skip cycle-sim calibration and use this factor (tests).
     pub slowdown_override: Option<f64>,
 }
@@ -65,6 +71,7 @@ impl BenchOptions {
             shed_queue_cap: 2,
             cost_repeats: 400,
             se_ratio: 0.5,
+            calibration: CalWorkload::Cnn,
             slowdown_override: None,
         }
     }
@@ -91,6 +98,7 @@ impl BenchOptions {
             shed_queue_cap: 2,
             cost_repeats: 800,
             se_ratio: 0.5,
+            calibration: CalWorkload::Cnn,
             slowdown_override: None,
         }
     }
@@ -147,7 +155,7 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
     for &scheme in &opts.schemes {
         let slowdown = opts
             .slowdown_override
-            .unwrap_or_else(|| scheme_slowdown(scheme, opts.se_ratio));
+            .unwrap_or_else(|| scheme_slowdown_for(scheme, opts.se_ratio, opts.calibration));
         for &rate in &opts.rates_per_ms {
             let cell_cfg = |n_workers: usize, queue_cap: usize, admission: Admission| {
                 SynthServeCfg {
@@ -235,6 +243,7 @@ pub fn document(r: &BenchReport) -> String {
                 ("shed_queue_cap", Json::num(r.opts.shed_queue_cap as f64)),
                 ("cost_repeats", Json::num(r.opts.cost_repeats as f64)),
                 ("se_ratio", Json::num(r.opts.se_ratio)),
+                ("calibration", Json::str(r.opts.calibration.name())),
                 ("monotonic_tolerance", Json::num(MONOTONIC_TOLERANCE)),
             ]),
         ),
@@ -296,6 +305,10 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
     opts.queue_cap = args.get_u64("queue", opts.queue_cap as u64).max(1) as usize;
     opts.cost_repeats = args.get_u64("cost", opts.cost_repeats as u64) as usize;
     opts.se_ratio = args.get_f64("ratio", opts.se_ratio);
+    if let Some(c) = args.get("calibration") {
+        opts.calibration = CalWorkload::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("bad --calibration {c:?} (cnn|transformer)"))?;
+    }
 
     let report = run(&opts)?;
     let out = args.get_or("out", DEFAULT_BENCH_PATH);
@@ -330,6 +343,7 @@ mod tests {
             shed_queue_cap: 1,
             cost_repeats: 1,
             se_ratio: 0.5,
+            calibration: CalWorkload::Cnn,
             slowdown_override: Some(1.0),
         }
     }

@@ -28,8 +28,8 @@ pub use batcher::Batcher;
 pub use queue::{BoundedQueue, Pop};
 pub use secure_store::SecureModelStore;
 pub use server::{
-    poisson_gap_ms, run_engine, scheme_slowdown, serve, serve_synthetic, Admission, EngineCfg,
-    EngineStats, ServeCfg, ServeReport, SynthServeCfg,
+    poisson_gap_ms, run_engine, scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic,
+    Admission, CalWorkload, EngineCfg, EngineStats, ServeCfg, ServeReport, SynthServeCfg,
 };
 
 use crate::util::cli::Args;

@@ -147,14 +147,42 @@ impl ServeReport {
 
 // -- slowdown calibration ----------------------------------------------------
 
-/// Process-wide memo: (scheme name, *effective* se_ratio bits) →
-/// slowdown factor.
-static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64), f64>>> = OnceLock::new();
+/// Which cycle-sim workload calibrates the serving slowdown factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CalWorkload {
+    /// Representative CNN conv layer (the historical default).
+    Cnn,
+    /// bert_tiny decode step: the bandwidth-bound per-token phase a
+    /// transformer-serving fleet actually pays.
+    TransformerDecode,
+}
+
+impl CalWorkload {
+    pub fn parse(s: &str) -> Option<CalWorkload> {
+        match s {
+            "cnn" => Some(CalWorkload::Cnn),
+            "transformer" | "transformer_decode" => Some(CalWorkload::TransformerDecode),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CalWorkload::Cnn => "cnn",
+            CalWorkload::TransformerDecode => "transformer_decode",
+        }
+    }
+}
+
+/// Process-wide memo: (scheme name, *effective* se_ratio bits,
+/// calibration workload) → slowdown factor.
+static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64, CalWorkload), f64>>> =
+    OnceLock::new();
 
 /// Memory-scheme slowdown factor from the cycle simulator: cycles of a
 /// representative conv layer under `scheme` over baseline cycles.
 ///
-/// Memoized per (scheme, effective se_ratio): in-process via
+/// Memoized per (scheme, effective se_ratio, workload): in-process via
 /// [`SLOWDOWN_MEMO`], across processes via the sweep results store
 /// (the `SweepSpec::serve_calibration` grid persists to
 /// `results/sweep_serve_cal_<hash>.json`), so startup pays the
@@ -164,22 +192,33 @@ static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64), f64>>> = OnceL
 /// entry and one store file instead of minting duplicates per raw
 /// ratio value.
 pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
+    scheme_slowdown_for(scheme, se_ratio, CalWorkload::Cnn)
+}
+
+/// [`scheme_slowdown`] calibrated against an explicit workload class
+/// (`seal serve-bench --calibration transformer` routes here).
+pub fn scheme_slowdown_for(scheme: Scheme, se_ratio: f64, workload: CalWorkload) -> f64 {
     if scheme == Scheme::BASELINE {
         return 1.0;
     }
     let eff_ratio = scheme.effective_ratio(se_ratio);
-    let key = (scheme.name(), eff_ratio.to_bits());
+    let key = (scheme.name(), eff_ratio.to_bits(), workload);
     let memo = SLOWDOWN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
     if let Some(&f) = memo.lock().unwrap().get(&key) {
         return f;
     }
-    let f = compute_scheme_slowdown(scheme, eff_ratio);
+    let f = compute_scheme_slowdown(scheme, eff_ratio, workload);
     memo.lock().unwrap().insert(key, f);
     f
 }
 
-fn compute_scheme_slowdown(scheme: Scheme, eff_ratio: f64) -> f64 {
-    let spec = SweepSpec::serve_calibration(scheme, eff_ratio);
+fn compute_scheme_slowdown(scheme: Scheme, eff_ratio: f64, workload: CalWorkload) -> f64 {
+    let spec = match workload {
+        CalWorkload::Cnn => SweepSpec::serve_calibration(scheme, eff_ratio),
+        CalWorkload::TransformerDecode => {
+            SweepSpec::serve_calibration_transformer(scheme, eff_ratio)
+        }
+    };
     // Two cells only: run inline rather than spinning up a pool (and
     // fall back to an unpersisted run when results/ is unwritable).
     let rows = match store::load_or_run_with(&spec, &RunnerCfg { threads: 1 }) {
@@ -552,6 +591,21 @@ mod tests {
         let c = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.25));
         let d = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.75));
         assert_ne!(c.hash(), d.hash());
+    }
+
+    #[test]
+    fn calibration_workload_parse_and_distinct_specs() {
+        assert_eq!(CalWorkload::parse("cnn"), Some(CalWorkload::Cnn));
+        assert_eq!(CalWorkload::parse("transformer"), Some(CalWorkload::TransformerDecode));
+        assert_eq!(CalWorkload::parse("transformer_decode"), Some(CalWorkload::TransformerDecode));
+        assert_eq!(CalWorkload::parse("gemm"), None);
+        // The transformer calibration grid is its own store (never
+        // collides with the conv grid), still scheme + Baseline.
+        let cnn = SweepSpec::serve_calibration(Scheme::SEAL, 0.5);
+        let tfm = SweepSpec::serve_calibration_transformer(Scheme::SEAL, 0.5);
+        assert_ne!(cnn.hash(), tfm.hash());
+        assert_eq!(tfm.cells().len(), 2);
+        assert_eq!(tfm.cells()[1].scheme, "Baseline");
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! `seal` — CLI for the SEAL secure-DL-accelerator reproduction.
 //!
 //! Subcommands:
-//!   simulate    one workload (matmul/conv/pool/fc) under one scheme
+//!   simulate    one workload (matmul/conv/pool/fc/attn/ffn) under one
+//!               scheme (transformer workloads take --phase/--seq)
 //!   network     whole-network inference under all six schemes
+//!   networks    the model zoo table (markdown; the README source)
 //!   sweep       parallel scheme×network×ratio sweep -> results store
 //!   perf        simulator-throughput basket -> BENCH_perf.json + gate
 //!   security    victim training / substitute extraction / attacks
@@ -17,7 +19,7 @@ use std::path::Path;
 use seal::model::zoo;
 use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine};
 use seal::stats::Table;
-use seal::traffic::{self, gemm, layers};
+use seal::traffic::{self, attention, gemm, layers, Phase};
 use seal::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -25,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => simulate(&args),
         Some("network") => network(&args),
+        Some("networks") => networks(&args),
         Some("sweep") => seal::sweep::cli(&args),
         Some("perf") => seal::perf::cli(&args),
         Some("security") => seal::security::cli(&args),
@@ -48,12 +51,17 @@ fn print_help() {
 
 USAGE: seal <subcommand> [flags]
 
-  simulate  --workload matmul|conv|pool|fc --scheme <s> [--ratio r]
-            [--size n] [--sample t] [--engine event|lockstep]
-  network   --model vgg16|resnet18|resnet34 [--ratio r] [--sample t]
+  simulate  --workload matmul|conv|pool|fc|attn|ffn --scheme <s>
+            [--ratio r] [--size n] [--sample t] [--phase prefill|decode]
+            [--seq n] [--engine event|lockstep]
+  network   --model <net> [--ratio r] [--sample t] [--phase p] [--seq n]
+            (nets: vgg16|resnet18|resnet34|bert_tiny|gpt2_small)
+  networks  print the model zoo table (markdown; regenerates README's)
   sweep     [--networks a,b,c] [--schemes paper|all|s1,s2] [--ratios r1,r2]
-            [--sample t] [--seed s] [--sequential] [--force]
-            (SEAL_SWEEP_THREADS caps the worker pool; =1 runs inline)
+            [--sample t] [--seed s] [--phase prefill|decode] [--seq n]
+            [--sequential] [--force]
+            (SEAL_SWEEP_THREADS caps the worker pool; =1 runs inline;
+             --sample beats SEAL_NET_SAMPLE beats the default)
   perf      [--quick] [--compare-lockstep] [--out f] [--baseline f]
             [--bless-baseline] [--no-gate]
             (writes BENCH_perf.json; nonzero exit on >2x regression)
@@ -63,7 +71,7 @@ USAGE: seal <subcommand> [flags]
             [--rate req_per_ms] [--no-pallas]
   serve-bench [--quick] [--schemes s1,s2] [--workers 1,2,4]
             [--rates r1,r2] [--requests n] [--batch b] [--queue cap]
-            [--cost gemv_repeats] [--out f]
+            [--cost gemv_repeats] [--calibration cnn|transformer] [--out f]
             (synthetic backend; writes BENCH_serve.json)
   schemes   list every registered scheme with its doc string
   info
@@ -101,6 +109,22 @@ fn parse_scheme(args: &Args) -> Scheme {
     Scheme::parse(&s).unwrap_or_else(|| panic!("unknown scheme {s:?}"))
 }
 
+/// `--phase` (default prefill) + `--seq` (default zoo::DEFAULT_SEQ).
+/// `full` is rejected: it is a profile-accounting phase whose sampled
+/// fraction mixes tile and line units (run the phases separately).
+fn phase_and_seq(args: &Args) -> anyhow::Result<(Phase, usize)> {
+    let p = args.get_or("phase", "prefill");
+    let phase = Phase::parse(&p)
+        .ok_or_else(|| anyhow::anyhow!("unknown phase {p:?} (prefill|decode)"))?;
+    anyhow::ensure!(
+        phase != Phase::Full,
+        "--phase full is profile-accounting only; run prefill and decode separately"
+    );
+    let seq = args.get_u64("seq", zoo::DEFAULT_SEQ as u64) as usize;
+    anyhow::ensure!(seq >= 1, "--seq must be at least 1");
+    Ok((phase, seq))
+}
+
 fn simulate(args: &Args) -> anyhow::Result<()> {
     let engine_name = args.get_or("engine", "event");
     let engine = SimEngine::parse(&engine_name)
@@ -129,6 +153,18 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             let layer = zoo::Layer::Fc { din: 4096, dout: 4096 };
             let r = scheme.effective_ratio(ratio);
             layers::fc_workload(&layer, r, &cfg, sample * 16, 1)
+        }
+        "attn" => {
+            let (phase, seq) = phase_and_seq(args)?;
+            let layer = zoo::Layer::Attn { d_model: 768, heads: 12, seq };
+            let r = scheme.effective_ratio(ratio);
+            attention::attn_workload(&layer, phase, r, &cfg, sample, 1)
+        }
+        "ffn" => {
+            let (phase, seq) = phase_and_seq(args)?;
+            let layer = zoo::Layer::Ffn { d_model: 768, d_ff: 3072, seq };
+            let r = scheme.effective_ratio(ratio);
+            attention::ffn_workload(&layer, phase, r, &cfg, sample, 1)
         }
         w => anyhow::bail!("unknown workload {w:?}"),
     };
@@ -163,15 +199,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
 
 fn network(args: &Args) -> anyhow::Result<()> {
     let name = args.get_or("model", "vgg16");
-    let net = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+    let (phase, seq) = phase_and_seq(args)?;
+    let net =
+        zoo::by_name_seq(&name, seq).ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
     let ratio = args.get_f64("ratio", 0.5);
-    let sample = args.get_u64("sample", 720) as usize;
+    let sample = seal::sweep::resolve_sample(args.get("sample"), 720);
     let cfg = GpuConfig::default();
-    let rows = traffic::network::run_all_schemes(&net, ratio, &cfg, sample);
+    let rows = traffic::network::run_all_schemes_phased(&net, phase, ratio, &cfg, sample);
     let base_ipc = rows[0].1.ipc.max(1e-12);
     let base_lat = rows[0].1.latency_cycles.max(1e-12);
+    let title = if zoo::is_transformer(&name) {
+        let p = phase.name();
+        format!("{name} [{p} seq {seq}]: normalized IPC / latency (SE ratio {ratio})")
+    } else {
+        format!("{name}: normalized IPC / latency (SE ratio {ratio})")
+    };
     let mut t = Table::new(
-        &format!("{name}: normalized IPC / latency (SE ratio {ratio})"),
+        &title,
         &["IPC", "norm IPC", "norm latency", "enc accesses", "ctr accesses"],
     );
     for (scheme, run) in &rows {
@@ -187,6 +231,31 @@ fn network(args: &Args) -> anyhow::Result<()> {
         );
     }
     t.emit(&format!("network_{name}.csv"));
+    Ok(())
+}
+
+/// `seal networks` — the model zoo table, as markdown. README's
+/// "Networks" section is regenerated from this output.
+fn networks(_args: &Args) -> anyhow::Result<()> {
+    println!(
+        "| network | kind | layers | GMACs | params (M) | KV cache @s{} (MB) |",
+        zoo::DEFAULT_SEQ
+    );
+    println!("|---|---|---|---|---|---|");
+    for name in zoo::ALL_NAMES {
+        let net = zoo::by_name(name).expect("zoo network");
+        let gmacs = net.layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        let params = net.layers.iter().map(|l| l.footprint_bytes().1 / 4).sum::<u64>();
+        let kv = net.layers.iter().map(|l| l.kv_cache_bytes()).sum::<u64>();
+        let kind = if zoo::is_transformer(name) { "transformer" } else { "cnn" };
+        println!(
+            "| {name} | {kind} | {} | {:.2} | {:.1} | {:.2} |",
+            net.layers.len(),
+            gmacs,
+            params as f64 / 1e6,
+            kv as f64 / 1e6
+        );
+    }
     Ok(())
 }
 

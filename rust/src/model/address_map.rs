@@ -15,6 +15,36 @@ use std::sync::Arc;
 
 use crate::sim::encryption::EncMap;
 
+/// What a region holds, from the encryption policy's point of view
+/// (transformer workloads — DESIGN.md §9):
+///
+/// - `Weights` are the stealable IP the paper protects; SE row
+///   selection applies here.
+/// - `KvCache` is per-user runtime state with a write-once/read-many
+///   pattern (prefill writes, decode reads); always fully encrypted.
+/// - `Activations` are transient per-request tensors (feature maps,
+///   hidden states); they carry their producer's SE mask.
+///
+/// The class is policy metadata: the simulator consults only the
+/// per-line `encrypted()` oracle, so tagging regions never changes
+/// timing or the committed goldens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrClass {
+    Weights,
+    KvCache,
+    Activations,
+}
+
+impl AddrClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AddrClass::Weights => "weights",
+            AddrClass::KvCache => "kv_cache",
+            AddrClass::Activations => "activations",
+        }
+    }
+}
+
 /// One allocation.
 #[derive(Debug, Clone)]
 pub struct Region {
@@ -28,6 +58,8 @@ pub struct Region {
     pub stripe_enc: Vec<bool>,
     /// Uniform policy when `stripe_enc` is empty.
     pub uniform_enc: bool,
+    /// Address class (weights / KV cache / activations).
+    pub class: AddrClass,
 }
 
 impl Region {
@@ -65,14 +97,24 @@ impl Allocator {
         Allocator { next: 0, regions: Vec::new() }
     }
 
-    /// `malloc()`: plaintext allocation.
+    /// `malloc()`: plaintext allocation (activations by default).
     pub fn malloc(&mut self, name: &str, size: u64) -> u64 {
-        self.alloc(name, size, size.max(1), Vec::new(), false)
+        self.malloc_in(name, size, AddrClass::Activations)
     }
 
-    /// `emalloc()`: fully encrypted allocation.
+    /// [`Allocator::malloc`] with an explicit address class.
+    pub fn malloc_in(&mut self, name: &str, size: u64, class: AddrClass) -> u64 {
+        self.alloc(name, size, size.max(1), Vec::new(), false, class)
+    }
+
+    /// `emalloc()`: fully encrypted allocation (activations by default).
     pub fn emalloc(&mut self, name: &str, size: u64) -> u64 {
-        self.alloc(name, size, size.max(1), Vec::new(), true)
+        self.emalloc_in(name, size, AddrClass::Activations)
+    }
+
+    /// [`Allocator::emalloc`] with an explicit address class.
+    pub fn emalloc_in(&mut self, name: &str, size: u64, class: AddrClass) -> u64 {
+        self.alloc(name, size, size.max(1), Vec::new(), true, class)
     }
 
     /// SE allocation: encrypted stripes given by `mask` with pitch
@@ -83,8 +125,19 @@ impl Allocator {
         stripe_bytes: u64,
         mask: Vec<bool>,
     ) -> u64 {
+        self.alloc_striped_in(name, stripe_bytes, mask, AddrClass::Activations)
+    }
+
+    /// [`Allocator::alloc_striped`] with an explicit address class.
+    pub fn alloc_striped_in(
+        &mut self,
+        name: &str,
+        stripe_bytes: u64,
+        mask: Vec<bool>,
+        class: AddrClass,
+    ) -> u64 {
         let size = stripe_bytes * mask.len() as u64;
-        self.alloc(name, size, stripe_bytes, mask, false)
+        self.alloc(name, size, stripe_bytes, mask, false, class)
     }
 
     fn alloc(
@@ -94,6 +147,7 @@ impl Allocator {
         stripe_bytes: u64,
         stripe_enc: Vec<bool>,
         uniform_enc: bool,
+        class: AddrClass,
     ) -> u64 {
         let base = self.next;
         let size = crate::util::round_up(size.max(1), ALLOC_ALIGN);
@@ -105,6 +159,7 @@ impl Allocator {
             stripe_bytes,
             stripe_enc,
             uniform_enc,
+            class,
         });
         base
     }
@@ -138,6 +193,16 @@ impl AddressMap {
         }
         let enc: u64 = self.regions.iter().map(|r| r.encrypted_bytes()).sum();
         enc as f64 / total as f64
+    }
+
+    /// Address class of `addr`, or `None` outside every region.
+    pub fn class_of(&self, addr: u64) -> Option<AddrClass> {
+        self.find(addr).map(|r| r.class)
+    }
+
+    /// Total allocated bytes in one address class.
+    pub fn class_bytes(&self, class: AddrClass) -> u64 {
+        self.regions.iter().filter(|r| r.class == class).map(|r| r.size).sum()
     }
 
     pub fn into_shared(self) -> Arc<dyn EncMap> {
@@ -204,6 +269,26 @@ mod tests {
             assert!(n <= 1);
             assert_eq!(map.find(addr).is_some(), n == 1);
         }
+    }
+
+    #[test]
+    fn address_classes_partition_the_map() {
+        let mut a = Allocator::new();
+        let w = a.alloc_striped_in("w", 256, vec![true, false], AddrClass::Weights);
+        let kv = a.emalloc_in("kv", 1024, AddrClass::KvCache);
+        let x = a.malloc("x", 512); // defaults to activations
+        let map = a.finish();
+        assert_eq!(map.class_of(w), Some(AddrClass::Weights));
+        assert_eq!(map.class_of(kv + 1023), Some(AddrClass::KvCache));
+        assert_eq!(map.class_of(x + 128), Some(AddrClass::Activations));
+        assert_eq!(map.class_of(0xdead_0000), None);
+        assert_eq!(map.class_bytes(AddrClass::Weights), 512);
+        assert_eq!(map.class_bytes(AddrClass::KvCache), 1024);
+        assert_eq!(map.class_bytes(AddrClass::Activations), 512);
+        // Class is policy metadata only: the KV cache is encrypted
+        // because of its uniform_enc policy, not because of the tag.
+        assert!(map.encrypted(kv));
+        assert!(!map.encrypted(x));
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod importance;
 pub mod manifest;
 pub mod zoo;
 
-pub use address_map::{AddressMap, Allocator, Region};
+pub use address_map::{AddrClass, AddressMap, Allocator, Region};
 pub use importance::{build_mask, se_row_selection, RowSelection};
 pub use manifest::{Manifest, ModelInfo, ParamInfo};
 pub use zoo::{Layer, Network};

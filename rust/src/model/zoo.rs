@@ -1,5 +1,8 @@
 //! Full-size layer tables for the *performance* figures: VGG-16,
-//! ResNet-18, ResNet-34 at 224×224×3 (paper §4.1 benchmarks).
+//! ResNet-18, ResNet-34 at 224×224×3 (paper §4.1 benchmarks), plus the
+//! transformer family (BERT-tiny / GPT-2-small class — DESIGN.md §9)
+//! whose decode phase stresses counter-mode encryption through the
+//! KV cache.
 //!
 //! These drive `traffic::` trace generation. The *security* figures use
 //! the channel-scaled trainable minis exported from Python (see
@@ -7,11 +10,18 @@
 //! full-size shapes.
 
 /// One inference layer, with its input spatial geometry.
+///
+/// Transformer layers carry their sequence length: `Attn` is one
+/// multi-head self-attention sublayer (QKV projection + scores/context
+/// + output projection, with a K/V cache of `seq` tokens), `Ffn` the
+/// two-GEMM feed-forward sublayer.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Layer {
     Conv { cin: usize, cout: usize, k: usize, stride: usize, h: usize, w: usize },
     Pool { c: usize, k: usize, stride: usize, h: usize, w: usize },
     Fc { din: usize, dout: usize },
+    Attn { d_model: usize, heads: usize, seq: usize },
+    Ffn { d_model: usize, d_ff: usize, seq: usize },
 }
 
 impl Layer {
@@ -19,11 +29,12 @@ impl Layer {
         match *self {
             Layer::Conv { h, w, stride, .. } => (h.div_ceil(stride), w.div_ceil(stride)),
             Layer::Pool { h, w, stride, .. } => (h / stride, w / stride),
-            Layer::Fc { .. } => (1, 1),
+            Layer::Fc { .. } | Layer::Attn { .. } | Layer::Ffn { .. } => (1, 1),
         }
     }
 
-    /// Multiply-accumulate count (per image).
+    /// Multiply-accumulate count (per image; per full prefill forward
+    /// over `seq` tokens for transformer layers).
     pub fn macs(&self) -> u64 {
         match *self {
             Layer::Conv { cin, cout, k, .. } => {
@@ -35,10 +46,18 @@ impl Layer {
                 (ho * wo * c * k * k) as u64
             }
             Layer::Fc { din, dout } => (din * dout) as u64,
+            // QKV proj (3·s·d²) + scores (s²·d) + context (s²·d) +
+            // output proj (s·d²).
+            Layer::Attn { d_model, seq, .. } => {
+                (4 * seq * d_model * d_model + 2 * seq * seq * d_model) as u64
+            }
+            Layer::Ffn { d_model, d_ff, seq } => (2 * seq * d_model * d_ff) as u64,
         }
     }
 
-    /// Bytes of input FM + weights + output FM (f32).
+    /// Bytes of input FM + weights + output FM (f32). Transformer
+    /// layers report the hidden-state footprint over `seq` tokens; the
+    /// KV cache is accounted separately by [`Layer::kv_cache_bytes`].
     pub fn footprint_bytes(&self) -> (u64, u64, u64) {
         match *self {
             Layer::Conv { cin, cout, k, h, w, .. } => {
@@ -56,6 +75,26 @@ impl Layer {
             Layer::Fc { din, dout } => {
                 ((din * 4) as u64, (din * dout * 4) as u64, (dout * 4) as u64)
             }
+            // Weights: W_qkv (d×3d) + W_out (d×d).
+            Layer::Attn { d_model, seq, .. } => (
+                (seq * d_model * 4) as u64,
+                (4 * d_model * d_model * 4) as u64,
+                (seq * d_model * 4) as u64,
+            ),
+            Layer::Ffn { d_model, d_ff, seq } => (
+                (seq * d_model * 4) as u64,
+                (2 * d_model * d_ff * 4) as u64,
+                (seq * d_model * 4) as u64,
+            ),
+        }
+    }
+
+    /// K + V cache bytes for `seq` cached tokens (f32); zero for
+    /// non-attention layers.
+    pub fn kv_cache_bytes(&self) -> u64 {
+        match *self {
+            Layer::Attn { d_model, seq, .. } => (2 * seq * d_model * 4) as u64,
+            _ => 0,
         }
     }
 
@@ -64,6 +103,8 @@ impl Layer {
             Layer::Conv { cin, cout, k, h, .. } => format!("conv{k}x{k}_{cin}-{cout}@{h}"),
             Layer::Pool { c, h, .. } => format!("pool_{c}@{h}"),
             Layer::Fc { din, dout } => format!("fc_{din}-{dout}"),
+            Layer::Attn { d_model, heads, seq } => format!("attn_{d_model}x{heads}h@s{seq}"),
+            Layer::Ffn { d_model, d_ff, seq } => format!("ffn_{d_model}-{d_ff}@s{seq}"),
         }
     }
 }
@@ -127,11 +168,64 @@ pub fn resnet34() -> Network {
     resnet("resnet34", [3, 4, 6, 3])
 }
 
+/// Default sequence length for transformer networks built without an
+/// explicit `--seq` (128 keeps bert_tiny prefill within a CI-smoke
+/// budget while leaving decode's KV stream long enough to matter).
+pub const DEFAULT_SEQ: usize = 128;
+
+/// Decoder/encoder stack: `n_blocks` × (Attn + Ffn) + a final FC head
+/// (classifier for BERT-class models, LM head for GPT-class).
+fn transformer(
+    name: &str,
+    n_blocks: usize,
+    d_model: usize,
+    heads: usize,
+    d_ff: usize,
+    head_dout: usize,
+    seq: usize,
+) -> Network {
+    let mut layers = Vec::new();
+    for _ in 0..n_blocks {
+        layers.push(Layer::Attn { d_model, heads, seq });
+        layers.push(Layer::Ffn { d_model, d_ff, seq });
+    }
+    layers.push(Layer::Fc { din: d_model, dout: head_dout });
+    Network { name: name.into(), layers }
+}
+
+/// BERT-tiny class: 2 blocks, d=128, 2 heads, FFN 512, pooler head.
+pub fn bert_tiny(seq: usize) -> Network {
+    transformer("bert_tiny", 2, 128, 2, 512, 128, seq)
+}
+
+/// GPT-2-small class: 12 blocks, d=768, 12 heads, FFN 3072, LM head
+/// over the 50257-token vocabulary.
+pub fn gpt2_small(seq: usize) -> Network {
+    transformer("gpt2_small", 12, 768, 12, 3072, 50257, seq)
+}
+
+/// Every network the zoo can build by name (CNNs + transformers).
+pub const ALL_NAMES: [&str; 5] = ["vgg16", "resnet18", "resnet34", "bert_tiny", "gpt2_small"];
+
+/// Whether `name` builds a transformer network (prefill/decode phases
+/// and a `--seq` axis apply).
+pub fn is_transformer(name: &str) -> bool {
+    matches!(name, "bert_tiny" | "gpt2_small")
+}
+
 pub fn by_name(name: &str) -> Option<Network> {
+    by_name_seq(name, DEFAULT_SEQ)
+}
+
+/// [`by_name`] with an explicit sequence length for transformer
+/// networks (ignored by the CNNs, which have no sequence axis).
+pub fn by_name_seq(name: &str, seq: usize) -> Option<Network> {
     match name {
         "vgg16" => Some(vgg16()),
         "resnet18" => Some(resnet18()),
         "resnet34" => Some(resnet34()),
+        "bert_tiny" => Some(bert_tiny(seq)),
+        "gpt2_small" => Some(gpt2_small(seq)),
         _ => None,
     }
 }
@@ -195,6 +289,45 @@ mod tests {
         assert_eq!(a, 224 * 224 * 3 * 4);
         assert_eq!(c, 224 * 224 * 64 * 4);
         assert!((c as f64 / a as f64 - 64.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transformer_structure_and_accounting() {
+        let bert = bert_tiny(128);
+        let attns = bert.layers.iter().filter(|l| matches!(l, Layer::Attn { .. })).count();
+        let ffns = bert.layers.iter().filter(|l| matches!(l, Layer::Ffn { .. })).count();
+        let fcs = bert.layers.iter().filter(|l| matches!(l, Layer::Fc { .. })).count();
+        assert_eq!((attns, ffns, fcs), (2, 2, 1));
+
+        // GPT-2-small weight count (sans embeddings): 12 blocks of
+        // 4d² + 2·d·d_ff plus the 768×50257 LM head ≈ 123.5M params.
+        let gpt = gpt2_small(128);
+        let params: u64 = gpt.layers.iter().map(|l| l.footprint_bytes().1 / 4).sum();
+        assert!((123.0e6..124.0e6).contains(&(params as f64)), "params {params}");
+        // Prefill MACs at seq=128 ≈ 11.2 G (FFN-dominated: each block
+        // is 0.33 G attention + 0.60 G FFN).
+        let gmacs = gpt.layers.iter().map(|l| l.macs()).sum::<u64>() as f64 / 1e9;
+        assert!((10.9..11.5).contains(&gmacs), "gmacs {gmacs}");
+
+        // KV cache: 2·seq·d bytes·4 per attention layer, nothing else.
+        let attn = Layer::Attn { d_model: 768, heads: 12, seq: 128 };
+        assert_eq!(attn.kv_cache_bytes(), 2 * 128 * 768 * 4);
+        assert_eq!(Layer::Ffn { d_model: 768, d_ff: 3072, seq: 128 }.kv_cache_bytes(), 0);
+        assert_eq!(Layer::Fc { din: 8, dout: 8 }.kv_cache_bytes(), 0);
+
+        // Sequence length flows through by_name_seq; by_name defaults.
+        assert_eq!(
+            by_name_seq("bert_tiny", 64).unwrap().layers[0],
+            Layer::Attn { d_model: 128, heads: 2, seq: 64 }
+        );
+        assert_eq!(
+            by_name("bert_tiny").unwrap().layers[0],
+            Layer::Attn { d_model: 128, heads: 2, seq: DEFAULT_SEQ }
+        );
+        for n in ALL_NAMES {
+            assert!(by_name(n).is_some(), "{n} missing from by_name");
+        }
+        assert!(is_transformer("gpt2_small") && !is_transformer("vgg16"));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::model::zoo;
 use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine};
 use crate::stats::Table;
+use crate::traffic::attention::Phase;
 use crate::traffic::{self, gemm, layers, network};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -34,6 +35,10 @@ use crate::util::json::Json;
 pub const DEFAULT_BENCH_PATH: &str = "BENCH_perf.json";
 /// Committed baseline the CI `perf-smoke` job gates against.
 pub const DEFAULT_BASELINE_PATH: &str = "benches/baseline_perf.json";
+/// Committed full-mode baseline the nightly `perf-full` job gates
+/// against (quick and full rates are not comparable, so the nightly
+/// lane carries its own file).
+pub const DEFAULT_FULL_BASELINE_PATH: &str = "benches/baseline_perf_full.json";
 /// A case regresses when `cycles_per_sec < baseline / REGRESSION_FACTOR`.
 pub const REGRESSION_FACTOR: f64 = 2.0;
 
@@ -207,6 +212,49 @@ fn basket(quick: bool) -> Vec<PerfCase> {
                     for (_, s, _) in &run.per_layer {
                         cycles += s.cycles;
                         instrs += s.instrs;
+                    }
+                }
+                (cycles, instrs)
+            }),
+        });
+    }
+
+    {
+        // Transformer decode: GEMV weight streams + the KV-cache scan
+        // — the bandwidth-bound phase where GuardNN's fixed counters
+        // and Seculator's pregenerated keystream make opposite
+        // predictions vs SEAL. Quick stays on bert_tiny; the nightly
+        // full basket pays for a gpt2_small decode step too.
+        let nets: Vec<(&'static str, usize, usize)> = if quick {
+            vec![("bert_tiny", 64, 8)]
+        } else {
+            vec![("bert_tiny", 128, 24), ("gpt2_small", 128, 12)]
+        };
+        let cfg = cfg.clone();
+        cases.push(PerfCase {
+            name: "transformer_decode",
+            kind: "network_sweep",
+            run: Box::new(move |e| {
+                let cfg = cfg.clone().with_engine(e);
+                let mut cycles = 0u64;
+                let mut instrs = 0u64;
+                for &(name, seq, sample) in &nets {
+                    let net = zoo::by_name_seq(name, seq).expect("zoo transformer");
+                    for s in ["SEAL", "GuardNN", "Seculator"] {
+                        let scheme = Scheme::parse(s).expect("registered scheme");
+                        let run = network::run_network_phased(
+                            &net,
+                            Phase::Decode,
+                            scheme,
+                            0.5,
+                            &cfg,
+                            sample,
+                            0,
+                        );
+                        for (_, s, _) in &run.per_layer {
+                            cycles += s.cycles;
+                            instrs += s.instrs;
+                        }
                     }
                 }
                 (cycles, instrs)
@@ -565,6 +613,16 @@ mod tests {
         assert_eq!(parsed.get("missing"), None);
     }
 
+    /// Basket case names (shared by both committed baseline files).
+    const BASKET_NAMES: [&str; 6] = [
+        "conv0_seal",
+        "fig13_networks",
+        "matmul_direct",
+        "pool4_counter",
+        "registry_new_schemes",
+        "transformer_decode",
+    ];
+
     #[test]
     fn committed_baseline_parses_and_matches_basket_names() {
         // The checked-in CI baseline must stay loadable and must name
@@ -575,16 +633,32 @@ mod tests {
         assert_eq!(b.mode.as_deref(), Some("quick"));
         let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
         names.sort_unstable();
-        assert_eq!(
-            names,
-            [
-                "conv0_seal",
-                "fig13_networks",
-                "matmul_direct",
-                "pool4_counter",
-                "registry_new_schemes"
-            ]
-        );
+        assert_eq!(names, BASKET_NAMES);
+    }
+
+    #[test]
+    fn committed_full_baseline_parses_and_matches_basket_names() {
+        // The nightly perf-full lane's baseline: full mode, same case
+        // names (the basket keeps one name per case across modes).
+        let text =
+            std::fs::read_to_string(DEFAULT_FULL_BASELINE_PATH).expect("committed full baseline");
+        let b = parse_baseline(&text).expect("valid full baseline");
+        assert_eq!(b.mode.as_deref(), Some("full"));
+        let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        assert_eq!(names, BASKET_NAMES);
+    }
+
+    #[test]
+    fn basket_names_match_both_modes() {
+        // The declared basket (without timing it): names and kinds are
+        // mode-invariant, so the quick gate and the nightly full gate
+        // watch the same case set.
+        for quick in [true, false] {
+            let mut names: Vec<&str> = basket(quick).iter().map(|c| c.name).collect();
+            names.sort_unstable();
+            assert_eq!(names, BASKET_NAMES, "quick={quick}");
+        }
     }
 
     #[test]

@@ -22,18 +22,20 @@ pub mod spec;
 pub mod store;
 
 pub use runner::{run_cell, run_parallel, run_sequential, RunnerCfg};
-pub use spec::{CellKey, SweepSpec, SweepTarget, PAPER_NETS};
+pub use spec::{resolve_sample, CellKey, SweepSpec, SweepTarget, PAPER_NETS};
 pub use store::{CellRow, SimSummary, SweepResults};
 
 use crate::model::zoo;
 use crate::sim::{Scheme, SchemeRegistry};
 use crate::stats::Table;
+use crate::traffic::attention::Phase;
 use crate::util::cli::Args;
 
 /// `seal sweep` — run (or load) a whole-network scheme sweep.
 /// `--schemes all` iterates the *whole* registry (every registered
 /// scheme is listable); `--schemes paper` is the six compared
-/// configurations of the paper.
+/// configurations of the paper. Transformer networks take a `--phase
+/// prefill|decode` and a `--seq` length; CNNs ignore both.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
     let networks: Vec<String> = args
         .get_or("networks", &args.get_or("model", "vgg16"))
@@ -42,9 +44,25 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         .collect();
     for n in &networks {
         if zoo::by_name(n).is_none() {
-            anyhow::bail!("unknown network {n:?} (have: vgg16, resnet18, resnet34)");
+            anyhow::bail!("unknown network {n:?} (have: {})", zoo::ALL_NAMES.join(", "));
         }
     }
+    let phase_flag = args.get("phase");
+    let phase = match phase_flag {
+        None => Phase::Prefill,
+        Some(p) => Phase::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown phase {p:?} (prefill|decode)"))?,
+    };
+    anyhow::ensure!(
+        phase != Phase::Full,
+        "--phase full is profile-accounting only (its sampled fraction mixes tile and \
+         line units); sweep prefill and decode separately"
+    );
+    if phase_flag.is_some() && !networks.iter().any(|n| zoo::is_transformer(n)) {
+        println!("[sweep] note: --phase only affects transformer networks");
+    }
+    let seq = args.get_u64("seq", zoo::DEFAULT_SEQ as u64) as usize;
+    anyhow::ensure!(seq >= 1, "--seq must be at least 1");
     let schemes: Vec<String> = match args.get_or("schemes", "paper").as_str() {
         "all" => SchemeRegistry::all().iter().map(|s| s.name().to_string()).collect(),
         "paper" => SchemeRegistry::paper_six().iter().map(|s| s.name().to_string()).collect(),
@@ -69,11 +87,17 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         name: args.get_or("name", "cli"),
         targets: networks
             .iter()
-            .map(|n| SweepTarget::Network { name: n.clone() })
+            .map(|n| {
+                if zoo::is_transformer(n) {
+                    SweepTarget::TransformerNet { name: n.clone(), phase, seq }
+                } else {
+                    SweepTarget::Network { name: n.clone() }
+                }
+            })
             .collect(),
         schemes,
         ratios,
-        sample_tiles: args.get_u64("sample", 240) as usize,
+        sample_tiles: resolve_sample(args.get("sample"), 240),
         base_seed: args.get_u64("seed", 0),
     };
 
@@ -87,17 +111,18 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         store::load_or_run(&spec)?
     };
 
-    for net in &networks {
+    for target in &spec.targets {
+        let label = target.label();
         let mut t = Table::new(
-            &format!("sweep {net} (sample {})", spec.sample_tiles),
+            &format!("sweep {label} (sample {})", spec.sample_tiles),
             &["ratio", "IPC", "norm IPC", "norm latency", "enc accesses", "ctr accesses"],
         );
         let base = results
             .rows
             .iter()
-            .find(|r| r.target == *net && r.scheme == "Baseline")
+            .find(|r| r.target == label && r.scheme == "Baseline")
             .map(|r| (r.sim.ipc.max(1e-12), r.sim.cycles.max(1e-12)));
-        for row in results.rows.iter().filter(|r| r.target == *net) {
+        for row in results.rows.iter().filter(|r| r.target == label) {
             let (bi, bl) = base.unwrap_or((1.0, 1.0));
             t.row(
                 &row.scheme,
@@ -111,7 +136,10 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
                 ],
             );
         }
-        t.emit(&format!("sweep_{net}.csv"));
+        // The CSV is keyed on the full label (phase/seq included for
+        // transformer targets) so a prefill sweep and a decode sweep
+        // of the same network never clobber each other's figures.
+        t.emit(&format!("sweep_{}.csv", label.replace(':', "_")));
     }
     println!(
         "[sweep] {} cells ({}) -> {}",

@@ -98,6 +98,22 @@ pub fn run_cell(key: &CellKey, spec: &SweepSpec) -> CellRow {
                 sim: SimSummary::from_network(&run),
             }
         }
+        SweepTarget::TransformerNet { name, phase, seq } => {
+            let net = zoo::by_name_seq(name, *seq)
+                .unwrap_or_else(|| panic!("unknown network {name:?} in sweep"));
+            let scheme = scheme_of(key);
+            let run =
+                network::run_network_phased(&net, *phase, scheme, key.ratio, &cfg, sample, seed);
+            CellRow {
+                target: label,
+                scheme: key.scheme.clone(),
+                ratio: key.ratio,
+                seed,
+                kind: "network".to_string(),
+                sampled_fraction: 1.0,
+                sim: SimSummary::from_network(&run),
+            }
+        }
         SweepTarget::DramStream { lines } => {
             let mut ch = Channel::new(cfg.dram);
             let mut done = 0;

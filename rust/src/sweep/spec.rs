@@ -9,6 +9,7 @@
 //! invariant the paper's normalized-IPC comparisons rely on.
 
 use crate::sim::{Scheme, SchemeRegistry};
+use crate::traffic::attention::Phase;
 use crate::util::json::Json;
 
 /// FNV-1a 64-bit hash (spec fingerprinting for the results store).
@@ -34,6 +35,11 @@ pub enum SweepTarget {
     Matmul { m: usize, k: usize, n: usize },
     /// Whole-network inference over a `zoo` model.
     Network { name: String },
+    /// Whole-network transformer inference at one phase and sequence
+    /// length (`zoo::by_name_seq`). A separate variant so the CNN
+    /// `Network` JSON — and every historical spec hash, including the
+    /// committed golden's — stays byte-identical.
+    TransformerNet { name: String, phase: Phase, seq: usize },
     /// Microbench: stream `lines` reads through one GDDR5 channel
     /// (scheme and ratio ignored).
     DramStream { lines: u64 },
@@ -50,6 +56,9 @@ impl SweepTarget {
             SweepTarget::FcLayer { din, dout } => format!("fc_{din}x{dout}"),
             SweepTarget::Matmul { m, k, n } => format!("matmul_{m}x{k}x{n}"),
             SweepTarget::Network { name } => name.clone(),
+            SweepTarget::TransformerNet { name, phase, seq } => {
+                format!("{name}:{}:s{seq}", phase.name())
+            }
             SweepTarget::DramStream { lines } => format!("dram_stream_{lines}"),
             SweepTarget::AesStream { lines } => format!("aes_stream_{lines}"),
         }
@@ -91,6 +100,12 @@ impl SweepTarget {
             SweepTarget::Network { name } => {
                 Json::obj(vec![("kind", Json::str("network")), ("name", Json::str(name))])
             }
+            SweepTarget::TransformerNet { name, phase, seq } => Json::obj(vec![
+                ("kind", Json::str("transformer")),
+                ("name", Json::str(name)),
+                ("phase", Json::str(phase.name())),
+                ("seq", Json::num(*seq as f64)),
+            ]),
             SweepTarget::DramStream { lines } => {
                 pair("dram_stream", vec![("lines", *lines as f64)])
             }
@@ -214,17 +229,57 @@ impl SweepSpec {
         }
     }
 
+    /// The serving calibration grid for transformer workloads: one
+    /// bert_tiny *decode* step (the bandwidth-bound phase a serving
+    /// fleet pays per token) under `scheme` and Baseline. Same seeding
+    /// convention as [`SweepSpec::serve_calibration`].
+    pub fn serve_calibration_transformer(scheme: Scheme, se_ratio: f64) -> SweepSpec {
+        SweepSpec {
+            name: "serve_cal_tfm".to_string(),
+            targets: vec![SweepTarget::TransformerNet {
+                name: "bert_tiny".to_string(),
+                phase: Phase::Decode,
+                seq: crate::model::zoo::DEFAULT_SEQ,
+            }],
+            schemes: vec![scheme.name().to_string(), "Baseline".to_string()],
+            ratios: vec![se_ratio],
+            sample_tiles: 48,
+            base_seed: 6,
+        }
+    }
+
     /// The exact spec shared by the fig 13/14/15 benches: the paper's
     /// three networks, all six schemes, SE ratio 0.5, sample budget
-    /// from `SEAL_NET_SAMPLE` (default 240). Centralised here so the
+    /// from [`resolve_sample`] (default 240). Centralised here so the
     /// three benches cannot drift apart and stop sharing one store.
     pub fn paper_networks() -> SweepSpec {
-        let sample = std::env::var("SEAL_NET_SAMPLE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(240);
-        SweepSpec::networks_all_schemes(&PAPER_NETS, 0.5, sample)
+        SweepSpec::networks_all_schemes(&PAPER_NETS, 0.5, resolve_sample(None, 240))
     }
+}
+
+/// The one documented resolution order for the per-layer sample
+/// budget: explicit `--sample` flag > `SEAL_NET_SAMPLE` env > default.
+/// Every consumer (the `seal sweep`/`seal network` CLIs, the shared
+/// fig 13/14/15 spec, CI) funnels through this helper; the flag and
+/// env knobs must never be read independently again.
+pub fn resolve_sample(flag: Option<&str>, default: u64) -> usize {
+    resolve_sample_from(flag, std::env::var("SEAL_NET_SAMPLE").ok().as_deref(), default)
+}
+
+/// Pure form of [`resolve_sample`] (unit-testable without touching the
+/// process environment). An explicit flag must parse — it is a direct
+/// user input, so garbage is a hard error like `Args::get_u64` — while
+/// an unparsable env value falls through to the default (matching the
+/// historical `SEAL_NET_SAMPLE` behaviour).
+pub fn resolve_sample_from(flag: Option<&str>, env: Option<&str>, default: u64) -> usize {
+    if let Some(s) = flag {
+        let v: u64 = s
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("--sample expects an integer, got {s:?}"));
+        return v as usize;
+    }
+    env.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(default) as usize
 }
 
 /// The networks of the paper's whole-network figures.
@@ -326,6 +381,46 @@ mod tests {
             SweepSpec::serve_calibration(Scheme::SEAL, 0.25).hash(),
             SweepSpec::serve_calibration(Scheme::SEAL, 0.5).hash()
         );
+    }
+
+    #[test]
+    fn transformer_targets_have_phase_scoped_identity() {
+        let t = |phase, seq| SweepTarget::TransformerNet {
+            name: "bert_tiny".into(),
+            phase,
+            seq,
+        };
+        assert_eq!(t(Phase::Decode, 128).label(), "bert_tiny:decode:s128");
+        assert_eq!(t(Phase::Prefill, 64).label(), "bert_tiny:prefill:s64");
+        // Phase and seq are spec-hash-relevant: different phases must
+        // never share a results store row set.
+        let spec = |target| SweepSpec { targets: vec![target], ..demo_spec() };
+        assert_ne!(spec(t(Phase::Decode, 128)).hash(), spec(t(Phase::Prefill, 128)).hash());
+        assert_ne!(spec(t(Phase::Decode, 128)).hash(), spec(t(Phase::Decode, 64)).hash());
+        // The CNN Network variant's JSON is untouched by the new
+        // variant (golden spec bytes depend on it).
+        let net = SweepTarget::Network { name: "vgg16".into() };
+        assert_eq!(net.to_json().to_string(), "{\"kind\":\"network\",\"name\":\"vgg16\"}");
+        // Seeding follows the Network convention: target-only.
+        assert_eq!(t(Phase::Decode, 128).seed(7), 7);
+    }
+
+    #[test]
+    fn sample_resolution_flag_beats_env_beats_default() {
+        assert_eq!(resolve_sample_from(Some("96"), Some("48"), 240), 96);
+        assert_eq!(resolve_sample_from(Some(" 96 "), None, 240), 96);
+        assert_eq!(resolve_sample_from(None, Some("48"), 240), 48);
+        assert_eq!(resolve_sample_from(None, Some(" 48 "), 240), 48);
+        assert_eq!(resolve_sample_from(None, None, 240), 240);
+        // Unparsable env falls back to the default (historical
+        // SEAL_NET_SAMPLE behaviour).
+        assert_eq!(resolve_sample_from(None, Some("lots"), 240), 240);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_resolution_rejects_garbage_flag() {
+        resolve_sample_from(Some("many"), None, 240);
     }
 
     #[test]

@@ -46,24 +46,26 @@ pub trait TileAddressing {
     fn c_lines(&self, r0: usize, c0: usize, mix: GemmMix, out: &mut Vec<u64>);
 }
 
-/// The generic tile walk: build per-warp programs for a sampled subset
-/// of tiles.
-pub fn build_tiled(
-    name: &str,
+/// Append a sampled tile walk of an `m×n×k` GEMM onto `programs`,
+/// numbering work items from `item0` so several GEMM stages (e.g. the
+/// QKV/attention/FFN stages of a transformer layer) can share one
+/// program set round-robin. Returns `(tiles_walked, total_tiles)`.
+#[allow(clippy::too_many_arguments)]
+pub fn walk_tiled(
+    programs: &mut [Vec<Slot>],
+    item0: usize,
     m: usize,
     n: usize,
     k: usize,
     addr: &dyn TileAddressing,
     mix: GemmMix,
-    map: AddressMap,
     cfg: &GpuConfig,
     sample_tiles: usize,
-) -> Workload {
+) -> (usize, usize) {
     let mt = ceil_div(m as u64, mix.tm as u64) as usize;
     let nt = ceil_div(n as u64, mix.tn as u64) as usize;
     let nk = ceil_div(k as u64, mix.tk as u64) as usize;
     let total_tiles = mt * nt;
-    let n_warps = cfg.n_sms * cfg.warps_per_sm;
     let take = sample_tiles.min(total_tiles).max(1);
     // Stride through the tile grid so samples cover the whole matrix
     // (different rows AND columns — preserves B-tile reuse patterns).
@@ -72,12 +74,11 @@ pub fn build_tiled(
         .round()
         .max(1.0) as u32;
 
-    let mut programs: Vec<Vec<Slot>> = vec![Vec::new(); n_warps];
     let mut scratch = Vec::with_capacity(128);
     for i in 0..take {
         let tile = (i as f64 * step) as usize;
         let (tr, tc) = (tile / nt, tile % nt);
-        let prog = &mut programs[super::warp_slot(i, cfg)];
+        let prog = &mut programs[super::warp_slot(item0 + i, cfg)];
         for kc in 0..nk {
             scratch.clear();
             addr.a_lines(tr * mix.tm, kc * mix.tk, mix, &mut scratch);
@@ -93,6 +94,27 @@ pub fn build_tiled(
             prog.push(Slot::Store(l));
         }
     }
+    (take, total_tiles)
+}
+
+/// The generic tile walk: build per-warp programs for a sampled subset
+/// of tiles.
+#[allow(clippy::too_many_arguments)]
+pub fn build_tiled(
+    name: &str,
+    m: usize,
+    n: usize,
+    k: usize,
+    addr: &dyn TileAddressing,
+    mix: GemmMix,
+    map: AddressMap,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+) -> Workload {
+    let n_warps = cfg.n_sms * cfg.warps_per_sm;
+    let mut programs: Vec<Vec<Slot>> = vec![Vec::new(); n_warps];
+    let (take, total_tiles) =
+        walk_tiled(&mut programs, 0, m, n, k, addr, mix, cfg, sample_tiles);
     Workload {
         programs,
         map,

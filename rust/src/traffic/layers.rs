@@ -4,12 +4,13 @@
 //! (paper §3.1.2 Figure 5).
 
 use crate::model::zoo::Layer;
-use crate::model::{AddressMap, Allocator};
+use crate::model::{AddrClass, Allocator};
 use crate::sim::config::{GpuConfig, LINE};
 use crate::sim::core::Slot;
 use crate::util::ceil_div;
 use crate::util::rng::Rng;
 
+use super::attention::{self, Phase};
 use super::gemm::{build_tiled, GemmMix, TileAddressing};
 use super::Workload;
 
@@ -130,7 +131,7 @@ pub fn conv_workload(
 
     let mut alloc = Allocator::new();
     let in_base = alloc.alloc_striped("in_fm", in_stripe, row_mask.clone());
-    let w_base = alloc.alloc_striped("weights", w_stripe, row_mask);
+    let w_base = alloc.alloc_striped_in("weights", w_stripe, row_mask, AddrClass::Weights);
     let out_base = alloc.alloc_striped("out_fm", out_stripe, out_mask);
     let map = alloc.finish();
 
@@ -226,7 +227,7 @@ pub fn fc_workload(
         LINE,
         synthetic_row_mask(ceil_div((din * 4) as u64, LINE) as usize, ratio, seed ^ 7),
     );
-    let w_base = alloc.alloc_striped("weights", row_stripe, mask);
+    let w_base = alloc.alloc_striped_in("weights", row_stripe, mask, AddrClass::Weights);
     let y_base = alloc.emalloc("y", (dout * 4) as u64);
     let map = alloc.finish();
 
@@ -261,8 +262,25 @@ pub fn fc_workload(
 /// Build a workload for any layer kind with the paper's SE policy
 /// applied network-wide: `layer_idx` decides whether SE may apply
 /// (first two convs, last conv, last FC stay fully encrypted).
+/// Transformer layers are built at [`Phase::Prefill`]; use
+/// [`layer_workload_phased`] for decode.
 pub fn layer_workload(
     layer: &Layer,
+    se_ratio: Option<f64>, // None = full encryption (no SE)
+    cfg: &GpuConfig,
+    sample: usize,
+    seed: u64,
+) -> Workload {
+    layer_workload_phased(layer, Phase::Prefill, se_ratio, cfg, sample, seed)
+}
+
+/// [`layer_workload`] with an explicit transformer phase. CNN layers
+/// (and the FC head, whose per-token GEMV is phase-invariant) ignore
+/// the phase, so the CNN paths — and the committed goldens — are
+/// byte-identical to the historical `layer_workload`.
+pub fn layer_workload_phased(
+    layer: &Layer,
+    phase: Phase,
     se_ratio: Option<f64>, // None = full encryption (no SE)
     cfg: &GpuConfig,
     sample: usize,
@@ -273,6 +291,8 @@ pub fn layer_workload(
         Layer::Conv { .. } => conv_workload(layer, ratio, cfg, sample, seed),
         Layer::Pool { .. } => pool_workload(layer, ratio, cfg, sample * 64, seed),
         Layer::Fc { .. } => fc_workload(layer, ratio, cfg, sample * 16, seed),
+        Layer::Attn { .. } => attention::attn_workload(layer, phase, ratio, cfg, sample, seed),
+        Layer::Ffn { .. } => attention::ffn_workload(layer, phase, ratio, cfg, sample, seed),
     }
 }
 

@@ -1,6 +1,8 @@
 //! Workload trace generation: the memory-access streams of tiled
 //! CONV/POOL/FC kernels (the paper's PyTorch+cuDNN workloads, DESIGN.md
-//! §1) plus the raw GEMM microbenchmark of Fig 3.
+//! §1), the raw GEMM microbenchmark of Fig 3, and the transformer
+//! family (prefill/decode phases with an explicit KV-cache region —
+//! [`attention`], DESIGN.md §9).
 //!
 //! A workload compiles to one instruction stream per warp
 //! ([`crate::sim::core::Slot`] sequences) plus the SE address map the
@@ -9,9 +11,12 @@
 //! per-layer cycles are scaled back by the sampled fraction when
 //! whole-network latency is reported (DESIGN.md §5).
 
+pub mod attention;
 pub mod gemm;
 pub mod layers;
 pub mod network;
+
+pub use attention::{class_profile, ClassProfile, Phase};
 
 use crate::model::AddressMap;
 use crate::sim::core::{AccessStream, Slot};

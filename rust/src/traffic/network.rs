@@ -7,7 +7,8 @@
 use crate::model::zoo::{Layer, Network};
 use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimStats};
 
-use super::layers::layer_workload;
+use super::attention::Phase;
+use super::layers::layer_workload_phased;
 
 /// Combined whole-network result.
 #[derive(Debug, Clone, Default)]
@@ -26,7 +27,10 @@ pub struct NetworkRun {
 /// The paper's SE policy for a whole network (§3.4.1): the first two
 /// CONVs, the last CONV and the last FC are always fully encrypted; SE
 /// applies to interior layers. POOL layers between convs carry their
-/// producer's mask (interior => SE).
+/// producer's mask (interior => SE). For transformer networks (no
+/// convs) this reduces to: the classifier/LM head is always fully
+/// encrypted, interior Attn/Ffn blocks get SE — and the KV cache stays
+/// fully encrypted regardless (per-class policy, DESIGN.md §9).
 pub fn layer_se_ratio(net: &Network, idx: usize, ratio: f64) -> Option<f64> {
     let conv_ids: Vec<usize> = net
         .layers
@@ -80,6 +84,22 @@ pub fn run_network_seeded(
     sample_tiles: usize,
     base_seed: u64,
 ) -> NetworkRun {
+    run_network_phased(net, Phase::Prefill, scheme, se_ratio, cfg_base, sample_tiles, base_seed)
+}
+
+/// [`run_network_seeded`] with an explicit transformer phase: prefill
+/// runs the prompt GEMMs (KV cache written), decode one generated
+/// token (KV cache streamed). CNN layers ignore the phase, so
+/// `Phase::Prefill` reproduces the historical CNN paths byte for byte.
+pub fn run_network_phased(
+    net: &Network,
+    phase: Phase,
+    scheme: Scheme,
+    se_ratio: f64,
+    cfg_base: &GpuConfig,
+    sample_tiles: usize,
+    base_seed: u64,
+) -> NetworkRun {
     let mut out = NetworkRun::default();
     let mut total_instrs = 0.0;
     for (idx, layer) in net.layers.iter().enumerate() {
@@ -88,7 +108,14 @@ pub fn run_network_seeded(
         } else {
             None // full encryption
         };
-        let w = layer_workload(layer, ratio, cfg_base, sample_tiles, base_seed + idx as u64 + 1);
+        let w = layer_workload_phased(
+            layer,
+            phase,
+            ratio,
+            cfg_base,
+            sample_tiles,
+            base_seed + idx as u64 + 1,
+        );
         let cfg = cfg_base.clone().with_scheme(scheme);
         let stats = super::simulate(&w, cfg);
         let scale = 1.0 / w.sampled_fraction.max(1e-12);
@@ -112,9 +139,23 @@ pub fn run_all_schemes(
     cfg: &GpuConfig,
     sample_tiles: usize,
 ) -> Vec<(&'static str, NetworkRun)> {
+    run_all_schemes_phased(net, Phase::Prefill, se_ratio, cfg, sample_tiles)
+}
+
+/// [`run_all_schemes`] at an explicit transformer phase (the `seal
+/// network` path; CNN layers ignore the phase).
+pub fn run_all_schemes_phased(
+    net: &Network,
+    phase: Phase,
+    se_ratio: f64,
+    cfg: &GpuConfig,
+    sample_tiles: usize,
+) -> Vec<(&'static str, NetworkRun)> {
     SchemeRegistry::paper_six()
         .iter()
-        .map(|&scheme| (scheme.name(), run_network(net, scheme, se_ratio, cfg, sample_tiles)))
+        .map(|&scheme| {
+            (scheme.name(), run_network_phased(net, phase, scheme, se_ratio, cfg, sample_tiles, 0))
+        })
         .collect()
 }
 
@@ -161,6 +202,31 @@ mod tests {
         assert!(dir.latency_cycles > base.latency_cycles);
         assert!(dir.enc_accesses > 0.0);
         assert_eq!(base.enc_accesses, 0.0);
+    }
+
+    #[test]
+    fn transformer_se_policy_protects_head_only() {
+        let net = zoo::bert_tiny(32);
+        let last = net.layers.len() - 1;
+        // Interior Attn/Ffn blocks are SE-eligible; the head FC is
+        // always fully encrypted.
+        assert_eq!(layer_se_ratio(&net, 0, 0.5), Some(0.5));
+        assert_eq!(layer_se_ratio(&net, 1, 0.5), Some(0.5));
+        assert_eq!(layer_se_ratio(&net, last, 0.5), None);
+    }
+
+    #[test]
+    fn decode_phase_runs_and_differs_from_prefill() {
+        let net = zoo::bert_tiny(32);
+        let cfg = GpuConfig::default();
+        let pre = run_network_phased(&net, Phase::Prefill, Scheme::SEAL, 0.5, &cfg, 16, 0);
+        let dec = run_network_phased(&net, Phase::Decode, Scheme::SEAL, 0.5, &cfg, 16, 0);
+        assert!(!pre.per_layer.iter().any(|(_, s, _)| s.hit_max_cycles));
+        assert!(!dec.per_layer.iter().any(|(_, s, _)| s.hit_max_cycles));
+        assert!(dec.enc_accesses > 0.0);
+        assert_ne!(pre.latency_cycles, dec.latency_cycles);
+        // Prefill IPC beats the bandwidth-bound decode GEMV streams.
+        assert!(pre.ipc > dec.ipc, "prefill {} decode {}", pre.ipc, dec.ipc);
     }
 
     #[test]

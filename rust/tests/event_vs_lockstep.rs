@@ -14,7 +14,7 @@
 
 use seal::model::zoo;
 use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine, SimStats};
-use seal::traffic::{self, gemm, layers, network};
+use seal::traffic::{self, attention, gemm, layers, network, Phase};
 
 fn run(w: &traffic::Workload, scheme: Scheme, engine: SimEngine) -> SimStats {
     traffic::simulate(w, GpuConfig::default().with_scheme(scheme).with_engine(engine))
@@ -64,6 +64,65 @@ fn pool_golden_workload_identical() {
     let layer = zoo::fig11_pool_layers()[4];
     let w = layers::pool_workload(&layer, 0.5, &cfg, 48 * 64, 4);
     assert_engines_agree(&w, &all_registered());
+}
+
+/// Transformer layer workloads under **every registered scheme** and
+/// every phase: the KV-cache streams (uniformly encrypted, very
+/// different counter behaviour from SE-striped conv FMs) must be
+/// byte-identical between the two clock engines.
+#[test]
+fn transformer_layer_workloads_identical() {
+    let cfg = GpuConfig::default();
+    let attn = zoo::Layer::Attn { d_model: 128, heads: 2, seq: 48 };
+    let ffn = zoo::Layer::Ffn { d_model: 128, d_ff: 512, seq: 48 };
+    for phase in [Phase::Prefill, Phase::Decode] {
+        let wa = attention::attn_workload(&attn, phase, 0.5, &cfg, 24, 5);
+        let wf = attention::ffn_workload(&ffn, phase, 0.5, &cfg, 24, 6);
+        assert_engines_agree(&wa, &all_registered());
+        assert_engines_agree(&wf, &all_registered());
+    }
+}
+
+/// Whole-transformer differential: bert_tiny and gpt2_small × the
+/// whole registry × both phases through the sampled
+/// `run_network_phased` path — the acceptance bar for the transformer
+/// workload family (tight seq/sample budgets keep the suite fast).
+#[test]
+fn transformer_networks_identical_all_schemes() {
+    let cfg = GpuConfig::default();
+    let nets = [zoo::bert_tiny(32), zoo::gpt2_small(16)];
+    for net in &nets {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for scheme in all_registered() {
+                let run = |engine| {
+                    network::run_network_phased(
+                        net,
+                        phase,
+                        scheme,
+                        0.5,
+                        &cfg.clone().with_engine(engine),
+                        4,
+                        0,
+                    )
+                };
+                let ev = run(SimEngine::Event);
+                let ls = run(SimEngine::Lockstep);
+                let tag = format!("{}/{}/{}", net.name, phase.name(), scheme.name());
+                assert_eq!(ev.latency_cycles, ls.latency_cycles, "{tag}");
+                assert_eq!(ev.ipc, ls.ipc, "{tag}");
+                assert_eq!(ev.enc_accesses, ls.enc_accesses, "{tag}");
+                assert_eq!(ev.ctr_accesses, ls.ctr_accesses, "{tag}");
+                assert_eq!(ev.per_layer.len(), ls.per_layer.len(), "{tag}");
+                let zipped = ev.per_layer.iter().zip(ls.per_layer.iter());
+                for ((ne, se, ce), (nl, sl, cl)) in zipped {
+                    assert_eq!(ne, nl, "{tag}");
+                    assert_eq!(se, sl, "{tag}: layer {ne}");
+                    assert_eq!(ce, cl, "{tag}: layer {ne}");
+                    assert!(!se.hit_max_cycles, "{tag}: layer {ne} hit the cycle cap");
+                }
+            }
+        }
+    }
 }
 
 /// Whole-network differential: every per-layer `SimStats` and the

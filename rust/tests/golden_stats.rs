@@ -14,8 +14,10 @@
 
 use std::path::Path;
 
+use seal::model::zoo;
 use seal::sim::SchemeRegistry;
 use seal::sweep::{runner, store, RunnerCfg, SweepSpec, SweepTarget};
+use seal::traffic::Phase;
 
 const GOLDEN_PATH: &str = "rust/tests/golden/golden_stats.json";
 
@@ -137,4 +139,93 @@ fn network_sweep_parallel_identity() {
     let base = par.iter().find(|r| r.scheme == "Baseline").unwrap();
     assert!(seal.sim.cycles > base.sim.cycles, "encryption must cost latency");
     assert_eq!(seal.sim.ctr_accesses, 0.0);
+}
+
+#[test]
+fn transformer_sweep_parallel_identity_and_phase_shape() {
+    // The transformer network cells — both phases, CNN-paper schemes
+    // plus the registry-only GuardNN/Seculator — keep the same
+    // byte-identity contract as the CNN sweeps. This deliberately does
+    // NOT touch the committed CNN golden file: transformer coverage
+    // gets its own spec (`golden_tfm`) whose store never collides with
+    // the pinned `golden` spec hash.
+    let spec = SweepSpec {
+        name: "golden_tfm".to_string(),
+        targets: vec![
+            SweepTarget::TransformerNet {
+                name: "bert_tiny".to_string(),
+                phase: Phase::Prefill,
+                seq: 48,
+            },
+            SweepTarget::TransformerNet {
+                name: "bert_tiny".to_string(),
+                phase: Phase::Decode,
+                seq: 48,
+            },
+            SweepTarget::TransformerNet {
+                name: "gpt2_small".to_string(),
+                phase: Phase::Decode,
+                seq: 16,
+            },
+        ],
+        schemes: vec![
+            "Baseline".to_string(),
+            "Counter".to_string(),
+            "SEAL".to_string(),
+            "GuardNN".to_string(),
+            "Seculator".to_string(),
+        ],
+        ratios: vec![0.5],
+        sample_tiles: 8,
+        base_seed: 0,
+    };
+    let seq = runner::run_sequential(&spec);
+    let par = runner::run_parallel(&spec, &RunnerCfg { threads: 4 });
+    assert_eq!(
+        store::document(&spec, &seq),
+        store::document(&spec, &par),
+        "transformer sweep diverged between parallel and sequential"
+    );
+
+    let get = |target: &str, scheme: &str| {
+        par.iter()
+            .find(|r| r.target == target && r.scheme == scheme)
+            .unwrap_or_else(|| panic!("missing row {target}/{scheme}"))
+    };
+    for t in ["bert_tiny:prefill:s48", "bert_tiny:decode:s48", "gpt2_small:decode:s16"] {
+        // Baseline pays no encryption; every real scheme does.
+        assert_eq!(get(t, "Baseline").sim.enc_accesses, 0.0, "{t}");
+        for s in ["Counter", "SEAL", "GuardNN", "Seculator"] {
+            let row = get(t, s);
+            assert!(row.sim.enc_accesses > 0.0, "{t}/{s}");
+            assert!(row.sim.cycles >= get(t, "Baseline").sim.cycles, "{t}/{s}");
+            assert!(!row.sim.hit_max_cycles, "{t}/{s} hit max_cycles");
+        }
+        // SEAL (colocated counters), GuardNN (fixed on-chip counters)
+        // and Seculator (pregenerated keystream) never emit counter
+        // traffic; Counter mode must.
+        for s in ["SEAL", "GuardNN", "Seculator"] {
+            assert_eq!(get(t, s).sim.ctr_accesses, 0.0, "{t}/{s}");
+        }
+        assert!(get(t, "Counter").sim.ctr_accesses > 0.0, "{t}");
+    }
+    // Prefill is GEMM-shaped, decode GEMV-shaped: at equal budgets the
+    // decode phase must land at lower IPC on the same model/scheme.
+    assert!(
+        get("bert_tiny:prefill:s48", "Baseline").sim.ipc
+            > get("bert_tiny:decode:s48", "Baseline").sim.ipc,
+        "prefill must out-IPC decode"
+    );
+    // And the committed CNN golden spec bytes must be unaffected by
+    // the transformer family existing at all: pin the canonical spec
+    // JSON (the store-hash input) to its historical bytes.
+    assert_eq!(
+        golden_spec().to_json().to_string(),
+        "{\"base_seed\":\"0\",\"name\":\"golden\",\"ratios\":[0.5],\"sample_tiles\":48,\
+         \"schemes\":[\"Baseline\",\"Direct\",\"Counter\",\"Direct+SE\",\"Counter+SE\",\
+         \"SEAL\"],\"targets\":[{\"k\":256,\"kind\":\"matmul\",\"m\":256,\"n\":256},\
+         {\"index\":0,\"kind\":\"conv\"},{\"index\":4,\"kind\":\"pool\"}]}",
+        "CNN golden spec bytes drifted — the committed golden store would be orphaned"
+    );
+    let _ = zoo::by_name("bert_tiny").expect("zoo knows the new nets");
 }
