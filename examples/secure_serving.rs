@@ -33,6 +33,9 @@ fn main() -> anyhow::Result<()> {
             scheme,
             se_ratio: 0.5,
             arrival_per_ms: 0.4,
+            seed: None,
+            events: None,
+            replay: None,
             use_pallas: true,
         })?;
         report.print();

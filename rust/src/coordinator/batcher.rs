@@ -58,10 +58,20 @@ impl<T> Batcher<T> {
     /// fills up to `batch_max` for at most `batch_timeout`. Returns
     /// `None` once the queue is closed and fully drained.
     pub fn next_batch(&mut self) -> Option<Vec<T>> {
+        self.next_batch_with(|_| {})
+    }
+
+    /// [`Batcher::next_batch`] with a per-item hook that runs at the
+    /// moment each item is popped off the queue — *before* any batch
+    /// fill-up waiting attributed to later items. The telemetry layer
+    /// uses it to stamp the per-request dequeue time, which is the
+    /// boundary of the queued-vs-service latency split.
+    pub fn next_batch_with(&mut self, mut on_pop: impl FnMut(&mut T)) -> Option<Vec<T>> {
         let mut batch = Vec::with_capacity(self.batch_max);
         loop {
             match self.queue.pop_timeout(self.poll) {
-                Pop::Item(item) => {
+                Pop::Item(mut item) => {
+                    on_pop(&mut item);
                     batch.push(item);
                     break;
                 }
@@ -76,7 +86,10 @@ impl<T> Batcher<T> {
                 break;
             }
             match self.queue.pop_timeout(deadline - now) {
-                Pop::Item(item) => batch.push(item),
+                Pop::Item(mut item) => {
+                    on_pop(&mut item);
+                    batch.push(item);
+                }
                 // Closed: serve what we already hold; the *next*
                 // next_batch call reports the shutdown.
                 Pop::Timeout | Pop::Closed => break,
@@ -166,6 +179,20 @@ mod tests {
             assert_eq!(b.next_batch(), Some(vec![42]));
             assert_eq!(b.next_batch(), None);
         });
+    }
+
+    #[test]
+    fn on_pop_hook_sees_every_item_exactly_once_in_fifo_order() {
+        let q = queue_of(0..7, 8);
+        q.close();
+        let mut b = Batcher::new(q, 3, Duration::from_millis(1));
+        let mut hooked = Vec::new();
+        let mut batched = Vec::new();
+        while let Some(batch) = b.next_batch_with(|item| hooked.push(*item)) {
+            batched.extend(batch);
+        }
+        assert_eq!(hooked, (0..7).collect::<Vec<_>>());
+        assert_eq!(hooked, batched, "hook order must match batch order");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `seal serve-bench` — the serving engine's own benchmark: sweep
 //! schemes × worker counts × arrival rates over the synthetic backend
 //! and emit machine-readable `BENCH_serve.json` (schema
-//! `seal-serve/v1`, documented in README) for the CI serve-smoke job.
+//! `seal-serve/v2`, documented in README) for the CI serve-smoke job.
 //!
 //! Each grid cell runs the full coordinator path — Poisson producer →
 //! bounded queue → N workers × dynamic batcher → synthetic classifier
@@ -26,8 +26,11 @@ use super::server::{
 
 /// Default output path (repo root — the BENCH_* trajectory location).
 pub const DEFAULT_BENCH_PATH: &str = "BENCH_serve.json";
-/// Document schema tag.
-pub const SERVE_BENCH_SCHEMA: &str = "seal-serve/v1";
+/// Document schema tag. v2 (PR 6) splits rejection accounting
+/// (`rejected_shed`/`rejected_closed`) and latency accounting
+/// (`*_queued_us` unscaled vs `*_service_us` slowdown-scaled) per
+/// cell; every v1 field is still present with unchanged semantics.
+pub const SERVE_BENCH_SCHEMA: &str = "seal-serve/v2";
 /// A worker step counts as monotone when its throughput is at least
 /// this fraction of the previous step's (wall-clock measurements on
 /// shared runners jitter by a few percent).
@@ -55,6 +58,9 @@ pub struct BenchOptions {
     pub calibration: CalWorkload,
     /// Skip cycle-sim calibration and use this factor (tests).
     pub slowdown_override: Option<f64>,
+    /// Arrival seed forwarded to every cell (`--seed`); `None` keeps
+    /// the historical per-spec default.
+    pub seed: Option<u64>,
 }
 
 impl BenchOptions {
@@ -73,6 +79,7 @@ impl BenchOptions {
             se_ratio: 0.5,
             calibration: CalWorkload::Cnn,
             slowdown_override: None,
+            seed: None,
         }
     }
 
@@ -100,6 +107,7 @@ impl BenchOptions {
             se_ratio: 0.5,
             calibration: CalWorkload::Cnn,
             slowdown_override: None,
+            seed: None,
         }
     }
 }
@@ -169,6 +177,9 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
                     se_ratio: opts.se_ratio,
                     arrival_per_ms: rate,
                     slowdown,
+                    seed: opts.seed,
+                    events: None,
+                    replay: None,
                 }
             };
             let mut tps = Vec::with_capacity(workers.len());
@@ -198,7 +209,7 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
     })
 }
 
-/// Serialize the BENCH document (`seal-serve/v1` — schema in README).
+/// Serialize the BENCH document (`seal-serve/v2` — schema in README).
 pub fn document(r: &BenchReport) -> String {
     let cells = r.cells.iter().map(|c| {
         let rep = &c.report;
@@ -210,12 +221,20 @@ pub fn document(r: &BenchReport) -> String {
             ("queue_cap", Json::num(rep.queue_cap as f64)),
             ("served", Json::num(rep.served as f64)),
             ("rejected", Json::num(rep.rejected as f64)),
+            ("rejected_shed", Json::num(rep.rejected_shed as f64)),
+            ("rejected_closed", Json::num(rep.rejected_closed as f64)),
             ("batches", Json::num(rep.n_batches as f64)),
             ("throughput_rps", Json::num(rep.throughput_rps)),
             ("mean_latency_us", Json::num(rep.latency_us.mean())),
             ("p50_latency_us", Json::num(rep.latency_us.quantile(0.5) as f64)),
             ("p99_latency_us", Json::num(rep.latency_us.quantile(0.99) as f64)),
             ("max_latency_us", Json::num(rep.latency_us.max as f64)),
+            ("mean_queued_us", Json::num(rep.queued_us.mean())),
+            ("p50_queued_us", Json::num(rep.queued_us.quantile(0.5) as f64)),
+            ("p99_queued_us", Json::num(rep.queued_us.quantile(0.99) as f64)),
+            ("mean_service_us", Json::num(rep.service_us.mean())),
+            ("p50_service_us", Json::num(rep.service_us.quantile(0.5) as f64)),
+            ("p99_service_us", Json::num(rep.service_us.quantile(0.99) as f64)),
             ("slowdown", Json::num(rep.slowdown)),
             ("sample_accuracy", Json::num(rep.sample_accuracy)),
         ])
@@ -258,7 +277,10 @@ pub fn document(r: &BenchReport) -> String {
 pub fn print_table(r: &BenchReport) {
     let mut t = Table::new(
         "§Serve: coordinator throughput/latency grid",
-        &["workers", "rate/ms", "req/s", "p50 us", "p99 us", "rejected", "accuracy"],
+        &[
+            "workers", "rate/ms", "req/s", "p50 us", "p99 us", "p99 queue us", "p99 svc us",
+            "rejected", "accuracy",
+        ],
     );
     for c in &r.cells {
         let rep = &c.report;
@@ -270,6 +292,8 @@ pub fn print_table(r: &BenchReport) {
                 rep.throughput_rps,
                 rep.latency_us.quantile(0.5) as f64,
                 rep.latency_us.quantile(0.99) as f64,
+                rep.queued_us.quantile(0.99) as f64,
+                rep.service_us.quantile(0.99) as f64,
                 rep.rejected as f64,
                 rep.sample_accuracy,
             ],
@@ -309,6 +333,9 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         opts.calibration = CalWorkload::parse(c)
             .ok_or_else(|| anyhow::anyhow!("bad --calibration {c:?} (cnn|transformer)"))?;
     }
+    if args.get("seed").is_some() {
+        opts.seed = Some(args.get_u64("seed", 7));
+    }
 
     let report = run(&opts)?;
     let out = args.get_or("out", DEFAULT_BENCH_PATH);
@@ -345,6 +372,7 @@ mod tests {
             se_ratio: 0.5,
             calibration: CalWorkload::Cnn,
             slowdown_override: Some(1.0),
+            seed: None,
         }
     }
 
@@ -377,10 +405,23 @@ mod tests {
         let cells = j.req("cells").as_arr().unwrap();
         assert_eq!(cells.len(), 3);
         for c in cells {
-            // Rejections are part of the contract: every cell reports them.
+            // Rejections are part of the contract: every cell reports
+            // them, split by cause since v2.
             assert!(c.req("rejected").as_f64().is_some());
+            assert_eq!(
+                c.req("rejected").as_f64(),
+                Some(
+                    c.req("rejected_shed").as_f64().unwrap()
+                        + c.req("rejected_closed").as_f64().unwrap()
+                ),
+                "shed + closed must sum to rejected"
+            );
             assert!(c.req("throughput_rps").as_f64().is_some());
             assert!(c.req("p99_latency_us").as_f64().is_some());
+            // v2: the queued/service latency split per cell.
+            assert!(c.req("p99_queued_us").as_f64().is_some());
+            assert!(c.req("p99_service_us").as_f64().is_some());
+            assert!(c.req("mean_service_us").as_f64().is_some());
         }
         let scaling = j.req("scaling").as_arr().unwrap();
         assert_eq!(scaling[0].req("workers").as_arr().unwrap().len(), 2);

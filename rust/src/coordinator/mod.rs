@@ -2,19 +2,28 @@
 //!
 //! A coordinator owns a **bounded** admission queue ([`queue`]) with
 //! selectable overflow behaviour — backpressure or counted load
-//! shedding — and fans requests out to N worker threads. Each worker
-//! owns its own inference backend ([`backend`]: a per-worker PJRT
-//! runtime + executable, or the synthetic classifier) built from its
-//! own decrypted on-chip view of the sealed model
-//! ([`secure_store`]), and drains the queue through a per-worker
-//! dynamic batcher ([`batcher`]). Per-request latency combines the
-//! real execution time with the secure-memory slowdown the cycle
-//! simulator measured for the chosen scheme (memoized per
+//! shedding (split by cause: shed vs closed) — and fans requests out
+//! to N worker threads. Each worker owns its own inference backend
+//! ([`backend`]: a per-worker PJRT runtime + executable, or the
+//! synthetic classifier) built from its own decrypted on-chip view of
+//! the sealed model ([`secure_store`]), and drains the queue through a
+//! per-worker dynamic batcher ([`batcher`]). Per-request latency is
+//! split at the dequeue timestamp: queue wait is real wall time, and
+//! only the service span is scaled by the secure-memory slowdown the
+//! cycle simulator measured for the chosen scheme (memoized per
 //! scheme × SE ratio through the sweep store — `server::scheme_slowdown`).
 //!
-//! `seal serve` drives the PJRT path; `seal serve-bench` ([`bench`])
-//! sweeps schemes × workers × arrival rates over the synthetic backend
-//! and emits `BENCH_serve.json` for CI.
+//! [`telemetry`] adds the opt-in structured observability layer
+//! (DESIGN.md §10): `--events out.jsonl` streams one typed JSONL line
+//! per lifecycle transition (schema `seal-events/v1`), and `--replay
+//! trace.jsonl` drives the producer deterministically from a recorded
+//! or hand-synthesized arrival schedule instead of the Poisson
+//! process.
+//!
+//! `seal serve` drives the PJRT path (`--synthetic` swaps in the
+//! artifact-free backend); `seal serve-bench` ([`bench`]) sweeps
+//! schemes × workers × arrival rates over the synthetic backend and
+//! emits `BENCH_serve.json` for CI.
 
 pub mod backend;
 pub mod batcher;
@@ -22,39 +31,73 @@ pub mod bench;
 pub mod queue;
 pub mod secure_store;
 pub mod server;
+pub mod telemetry;
 
 pub use backend::{InferenceBackend, PjrtBackend, SynthSpec, SyntheticBackend};
 pub use batcher::Batcher;
-pub use queue::{BoundedQueue, Pop};
+pub use queue::{BoundedQueue, Pop, PushError};
 pub use secure_store::SecureModelStore;
 pub use server::{
     poisson_gap_ms, run_engine, scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic,
-    Admission, CalWorkload, EngineCfg, EngineStats, ServeCfg, ServeReport, SynthServeCfg,
+    Admission, ArrivalPlan, CalWorkload, EngineCfg, EngineStats, ServeCfg, ServeReport,
+    SynthServeCfg,
 };
+pub use telemetry::{Event, EventSink, ParsedEvent, RejectReason, SharedBuf, Trace};
 
 use crate::util::cli::Args;
 
-/// `seal serve` CLI entry point.
+/// `seal serve` CLI entry point. `--synthetic` serves the
+/// artifact-free backend (the CI record/replay path); otherwise the
+/// PJRT artifact path is driven.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
     let admission_name = args.get_or("admission", "block");
     let admission = Admission::parse(&admission_name)
         .ok_or_else(|| anyhow::anyhow!("bad --admission {admission_name:?} (block|shed)"))?;
     let batch = args.get_u64("batch", 8).max(1) as usize;
-    let cfg = ServeCfg {
-        model: args.get_or("model", "vgg16m"),
-        artifacts: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
-        n_requests: args.get_u64("requests", 64) as usize,
-        batch_max: batch,
-        n_workers: args.get_u64("workers", 2).max(1) as usize,
-        queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
-        admission,
-        scheme: crate::sim::Scheme::parse(&args.get_or("scheme", "seal"))
-            .ok_or_else(|| anyhow::anyhow!("bad scheme"))?,
-        se_ratio: args.get_f64("ratio", 0.5),
-        arrival_per_ms: args.get_f64("rate", 2.0),
-        use_pallas: !args.has("no-pallas"),
+    let scheme = crate::sim::Scheme::parse(&args.get_or("scheme", "seal"))
+        .ok_or_else(|| anyhow::anyhow!("bad scheme"))?;
+    let seed = args.get("seed").map(|_| args.get_u64("seed", 7));
+    let events = args.get("events").map(std::path::PathBuf::from);
+    let replay = args.get("replay").map(std::path::PathBuf::from);
+
+    let report = if args.has("synthetic") {
+        let spec = SynthSpec {
+            cost_repeats: args.get_u64("cost", 1).max(1) as usize,
+            ..SynthSpec::default()
+        };
+        server::serve_synthetic(&SynthServeCfg {
+            spec,
+            n_requests: args.get_u64("requests", 64) as usize,
+            batch_max: batch,
+            n_workers: args.get_u64("workers", 2).max(1) as usize,
+            queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
+            admission,
+            scheme,
+            se_ratio: args.get_f64("ratio", 0.5),
+            arrival_per_ms: args.get_f64("rate", 2.0),
+            slowdown: args.get_f64("slowdown", 0.0),
+            seed,
+            events,
+            replay,
+        })?
+    } else {
+        server::serve(ServeCfg {
+            model: args.get_or("model", "vgg16m"),
+            artifacts: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
+            n_requests: args.get_u64("requests", 64) as usize,
+            batch_max: batch,
+            n_workers: args.get_u64("workers", 2).max(1) as usize,
+            queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
+            admission,
+            scheme,
+            se_ratio: args.get_f64("ratio", 0.5),
+            arrival_per_ms: args.get_f64("rate", 2.0),
+            seed,
+            events,
+            replay,
+            use_pallas: !args.has("no-pallas"),
+        })?
     };
-    let report = server::serve(cfg)?;
     report.print();
     Ok(())
 }

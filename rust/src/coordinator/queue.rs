@@ -4,7 +4,9 @@
 //! (DESIGN.md §8): its capacity bounds coordinator memory no matter how
 //! fast requests arrive. Producers choose between two admission modes —
 //! [`BoundedQueue::try_push`] load-sheds when the queue is full (the
-//! caller owns rejection accounting; nothing is dropped silently) and
+//! caller owns rejection accounting; nothing is dropped silently, and
+//! the returned [`PushError`] says *why* — full vs closed — so
+//! shutdown refusals are never miscounted as load shedding) and
 //! [`BoundedQueue::push_blocking`] applies backpressure. Consumers
 //! (the per-worker [`super::batcher::Batcher`]s) use
 //! [`BoundedQueue::pop_timeout`]; after [`BoundedQueue::close`] they
@@ -24,6 +26,31 @@ pub enum Pop<T> {
     Timeout,
     /// The queue is closed and fully drained.
     Closed,
+}
+
+/// Why an admission attempt was refused — the item always comes back
+/// to the caller, *with* the reason. A `Full` refusal is genuine load
+/// (a shed candidate); a `Closed` refusal is a shutdown artifact
+/// (e.g. every worker died) and must not pollute shed statistics.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity (and still open).
+    Full(T),
+    /// Queue closed: admission is permanently refused.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the refused item.
+    pub fn into_item(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
+    }
 }
 
 #[derive(Debug)]
@@ -71,13 +98,18 @@ impl<T> BoundedQueue<T> {
         self.state.lock().unwrap().closed
     }
 
-    /// Load-shedding admission: `Err(item)` hands the item back when
-    /// the queue is full or closed, so the caller can account for the
-    /// rejection (it is never dropped silently).
-    pub fn try_push(&self, item: T) -> Result<(), T> {
+    /// Load-shedding admission: the item comes back in a
+    /// [`PushError`] naming *why* it was refused (full vs closed), so
+    /// the caller can account for the rejection correctly (it is never
+    /// dropped silently, and a shutdown refusal is never miscounted as
+    /// load shedding).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
         let mut st = self.state.lock().unwrap();
-        if st.closed || st.q.len() >= self.cap {
-            return Err(item);
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.q.len() >= self.cap {
+            return Err(PushError::Full(item));
         }
         st.q.push_back(item);
         drop(st);
@@ -86,14 +118,15 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Backpressure admission: block until a slot frees up.
-    /// `Err(item)` only when the queue is (or becomes) closed.
-    pub fn push_blocking(&self, item: T) -> Result<(), T> {
+    /// Fails (always [`PushError::Closed`]) only when the queue is (or
+    /// becomes) closed while waiting.
+    pub fn push_blocking(&self, item: T) -> Result<(), PushError<T>> {
         let mut st = self.state.lock().unwrap();
         while !st.closed && st.q.len() >= self.cap {
             st = self.not_full.wait(st).unwrap();
         }
         if st.closed {
-            return Err(item);
+            return Err(PushError::Closed(item));
         }
         st.q.push_back(item);
         drop(st);
@@ -144,8 +177,8 @@ mod tests {
         for i in 0..3 {
             assert!(q.try_push(i).is_ok());
         }
-        // Full: the item comes back to the caller.
-        assert_eq!(q.try_push(99), Err(99));
+        // Full: the item comes back to the caller, tagged Full.
+        assert_eq!(q.try_push(99), Err(PushError::Full(99)));
         assert_eq!(q.len(), 3);
         for want in 0..3 {
             assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(want));
@@ -158,7 +191,23 @@ mod tests {
         let q = BoundedQueue::new(0);
         assert_eq!(q.capacity(), 1);
         assert!(q.try_push(1).is_ok());
-        assert_eq!(q.try_push(2), Err(2));
+        assert_eq!(q.try_push(2), Err(PushError::Full(2)));
+    }
+
+    #[test]
+    fn refusal_reason_distinguishes_full_from_closed() {
+        // The shed/closed split the rejection accounting depends on: a
+        // full-but-open queue refuses with Full; after close() the same
+        // push refuses with Closed — and the item survives both.
+        let q = BoundedQueue::new(1);
+        q.try_push(0).unwrap();
+        let err = q.try_push(1).unwrap_err();
+        assert!(!err.is_closed());
+        assert_eq!(err.into_item(), 1);
+        q.close();
+        let err = q.try_push(1).unwrap_err();
+        assert!(err.is_closed());
+        assert_eq!(err.into_item(), 1);
     }
 
     #[test]
@@ -167,9 +216,9 @@ mod tests {
         q.try_push(1).unwrap();
         q.try_push(2).unwrap();
         q.close();
-        // Post-close admission is refused in both modes.
-        assert_eq!(q.try_push(3), Err(3));
-        assert_eq!(q.push_blocking(4), Err(4));
+        // Post-close admission is refused (as Closed) in both modes.
+        assert_eq!(q.try_push(3), Err(PushError::Closed(3)));
+        assert_eq!(q.push_blocking(4), Err(PushError::Closed(4)));
         // But the tail is still served, in order.
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(1));
         assert_eq!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(2));
@@ -213,7 +262,7 @@ mod tests {
             s.spawn(|| {
                 // No consumer exists, so the slot never frees: the
                 // producer stays parked until close() hands the item back.
-                assert_eq!(q.push_blocking(1), Err(1));
+                assert_eq!(q.push_blocking(1), Err(PushError::Closed(1)));
             });
             std::thread::sleep(Duration::from_millis(20));
             q.close();

@@ -2,26 +2,39 @@
 //! queue → N workers, each with its own dynamic batcher and its own
 //! decrypted on-chip view of the sealed model (DESIGN.md §8).
 //!
-//! Request path: a Poisson request generator admits into a bounded
-//! [`BoundedQueue`] — [`Admission::Shed`] load-sheds when the queue is
-//! full (rejections are *counted* in [`ServeReport::rejected`], never
-//! silently dropped), [`Admission::Block`] applies backpressure to the
-//! producer. Worker threads drain the queue through per-worker
-//! [`Batcher`]s and execute batches on their own [`InferenceBackend`]
-//! (a per-worker PJRT runtime + executable in `seal serve`; the
-//! pure-Rust synthetic classifier in `seal serve-bench` and tests).
+//! Request path: a request producer (Poisson by default, or a
+//! deterministic recorded/synthesized schedule via
+//! [`ArrivalPlan::Trace`] — `seal serve --replay`) admits into a
+//! bounded [`BoundedQueue`] — [`Admission::Shed`] load-sheds when the
+//! queue is full, [`Admission::Block`] applies backpressure to the
+//! producer. Rejections are *counted*, never silently dropped, and
+//! split by cause: [`ServeReport::rejected_shed`] (queue full — real
+//! load) vs [`ServeReport::rejected_closed`] (queue closed on a
+//! shutdown path — e.g. every worker died). Worker threads drain the
+//! queue through per-worker [`Batcher`]s and execute batches on their
+//! own [`InferenceBackend`] (a per-worker PJRT runtime + executable in
+//! `seal serve`; the pure-Rust synthetic classifier in
+//! `seal serve-bench` and tests).
 //!
-//! Reported per-request latency = queueing + batching + real execution,
-//! multiplied by the *memory-scheme slowdown factor* the cycle
-//! simulator measured for this model class (the extra time the edge
-//! accelerator would spend behind its AES engines). The factor is
-//! memoized per (scheme, SE ratio): in-process via a map, across
-//! processes via the sweep results store
+//! Per-request latency is split at the dequeue timestamp (DESIGN.md
+//! §10): **queued** (arrival → dequeue) is real wall time the memory
+//! scheme never caused and is reported unscaled; **service** (dequeue
+//! → completion) is multiplied by the *memory-scheme slowdown factor*
+//! the cycle simulator measured for this model class (the extra time
+//! the edge accelerator would spend behind its AES engines). The
+//! factor is memoized per (scheme, SE ratio): in-process via a map,
+//! across processes via the sweep results store
 //! (`SweepSpec::serve_calibration` → `results/sweep_serve_cal_*.json`),
 //! so the simulator runs at most once per key instead of once per
 //! invocation.
+//!
+//! With `--events` set, every lifecycle transition is emitted as one
+//! JSONL line through [`super::telemetry::EventSink`] (schema
+//! `seal-events/v1`); off by default, so goldens and BENCH documents
+//! are untouched and the hot path pays nothing.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -36,6 +49,7 @@ use super::backend::{InferenceBackend, PjrtBackend, SyntheticBackend, SynthSpec}
 use super::batcher::Batcher;
 use super::queue::BoundedQueue;
 use super::secure_store::SecureModelStore;
+use super::telemetry::{self, Event, EventSink, RejectReason};
 
 /// What the coordinator does when the admission queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +93,15 @@ pub struct ServeCfg {
     pub se_ratio: f64,
     /// Mean request arrivals per millisecond (Poisson).
     pub arrival_per_ms: f64,
+    /// Arrival seed (`--seed`); `None` keeps the historical default 7,
+    /// so existing runs reproduce byte-for-byte.
+    pub seed: Option<u64>,
+    /// Opt-in JSONL event stream destination (`--events`).
+    pub events: Option<std::path::PathBuf>,
+    /// Replay trace: drive arrivals from this recorded/synthesized
+    /// JSONL schedule instead of the Poisson process (`--replay`).
+    /// The trace's arrival count overrides `n_requests`.
+    pub replay: Option<std::path::PathBuf>,
     /// Serve through the Pallas-kernel predict artifact when available.
     pub use_pallas: bool,
 }
@@ -98,6 +121,12 @@ pub struct SynthServeCfg {
     /// `> 0.0` skips calibration and uses this factor directly;
     /// `0.0` calibrates through [`scheme_slowdown`].
     pub slowdown: f64,
+    /// Arrival seed; `None` keeps the historical `spec.seed ^ 0xa771`.
+    pub seed: Option<u64>,
+    /// Opt-in JSONL event stream destination.
+    pub events: Option<std::path::PathBuf>,
+    /// Replay trace overriding the Poisson arrivals (and `n_requests`).
+    pub replay: Option<std::path::PathBuf>,
 }
 
 #[derive(Debug)]
@@ -108,11 +137,23 @@ pub struct ServeReport {
     pub admission: Admission,
     /// Requests actually served (admitted and executed).
     pub served: usize,
-    /// Requests refused at admission — accounted, never silently lost.
+    /// Requests refused at admission — accounted, never silently lost
+    /// (`rejected_shed + rejected_closed`).
     pub rejected: usize,
+    /// Refused because the queue was full (genuine load shedding).
+    pub rejected_shed: usize,
+    /// Refused because the queue was closed (shutdown path — e.g.
+    /// every worker died); split out so shed stats stay honest.
+    pub rejected_closed: usize,
     pub n_batches: usize,
     pub per_worker_served: Vec<usize>,
+    /// End-to-end latency: queue wait + slowdown-scaled service.
     pub latency_us: Histogram,
+    /// Arrival → dequeue, real wall time (never scheme-scaled: the
+    /// memory scheme did not cause queueing delay).
+    pub queued_us: Histogram,
+    /// Dequeue → completion, scaled by the memory-scheme slowdown.
+    pub service_us: Histogram,
     pub throughput_rps: f64,
     pub slowdown: f64,
     pub sample_accuracy: f64,
@@ -130,13 +171,27 @@ impl ServeReport {
             self.admission.name()
         );
         println!("  served          : {} ({} batches)", self.served, self.n_batches);
-        println!("  rejected        : {}", self.rejected);
+        println!(
+            "  rejected        : {} ({} shed, {} closed)",
+            self.rejected, self.rejected_shed, self.rejected_closed
+        );
         println!("  per-worker      : {:?}", self.per_worker_served);
         println!("  mean latency    : {:.1} us", self.latency_us.mean());
         println!(
             "  p50/p99 latency : {} / {} us",
             self.latency_us.quantile(0.5),
             self.latency_us.quantile(0.99)
+        );
+        println!(
+            "  queue wait      : mean {:.1} us, p99 {} us (unscaled)",
+            self.queued_us.mean(),
+            self.queued_us.quantile(0.99)
+        );
+        println!(
+            "  service         : mean {:.1} us, p99 {} us (x{:.3} slowdown applied)",
+            self.service_us.mean(),
+            self.service_us.quantile(0.99),
+            self.slowdown
         );
         println!("  throughput      : {:.1} req/s", self.throughput_rps);
         println!("  memory slowdown : {:.3}x (cycle-sim, scheme vs baseline)", self.slowdown);
@@ -249,37 +304,128 @@ pub fn poisson_gap_ms(u: f64, arrival_per_ms: f64) -> f64 {
     -(1.0 - u).ln() / arrival_per_ms.max(1e-3)
 }
 
+/// Where request arrivals come from.
+#[derive(Debug, Clone)]
+pub enum ArrivalPlan {
+    /// Memoryless arrivals: mean `per_ms` requests per millisecond.
+    Poisson { per_ms: f64, seed: u64 },
+    /// Deterministic schedule: sleep `gaps_us[i]` before request `i`.
+    /// Extracted from a recorded or hand-synthesized trace
+    /// (`telemetry::gaps_from_times`) — bursty/diurnal shapes a
+    /// Poisson process cannot produce.
+    Trace { gaps_us: Vec<u64> },
+}
+
 // -- the engine --------------------------------------------------------------
 
 /// Backend-agnostic engine knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EngineCfg {
     pub n_workers: usize,
     pub queue_cap: usize,
     pub admission: Admission,
     pub batch_max: usize,
     pub batch_timeout: Duration,
-    pub arrival_per_ms: f64,
-    pub arrival_seed: u64,
+    pub arrival: ArrivalPlan,
     pub slowdown: f64,
+    /// Opt-in structured event stream; `None` (the default) costs the
+    /// request path nothing.
+    pub events: Option<Arc<EventSink>>,
 }
 
 /// Aggregated engine outcome.
 #[derive(Debug)]
 pub struct EngineStats {
     pub served: usize,
-    pub rejected: usize,
+    pub rejected_shed: usize,
+    pub rejected_closed: usize,
     pub batches: usize,
     pub correct: usize,
     pub latency_us: Histogram,
+    pub queued_us: Histogram,
+    pub service_us: Histogram,
     pub per_worker_served: Vec<usize>,
     pub elapsed_s: f64,
 }
 
+impl EngineStats {
+    /// Total refused admissions (shed + closed).
+    pub fn rejected(&self) -> usize {
+        self.rejected_shed + self.rejected_closed
+    }
+}
+
 struct Request {
+    id: u64,
     image: Vec<f32>,
     label: i32,
     arrived: Instant,
+    /// Stamped by the batcher's pop hook; the queued/service boundary.
+    dequeued: Option<Instant>,
+}
+
+/// Counted producer outcome (the admission side of the ledger).
+#[derive(Debug, Default, PartialEq, Eq)]
+struct ProducerStats {
+    admitted: usize,
+    rejected_shed: usize,
+    rejected_closed: usize,
+}
+
+/// Drive `inputs` into the queue on the `plan` schedule, then close
+/// it. Every refusal is split by cause: a full queue under `Shed` is
+/// load shedding; a *closed* queue (every worker died) is a shutdown
+/// artifact and is counted separately — the old conflation polluted
+/// shed statistics on worker-death paths.
+fn produce_requests(
+    queue: &BoundedQueue<Request>,
+    admission: Admission,
+    plan: &ArrivalPlan,
+    inputs: Vec<(Vec<f32>, i32)>,
+    events: Option<&EventSink>,
+) -> ProducerStats {
+    let mut stats = ProducerStats::default();
+    let mut rng = match plan {
+        ArrivalPlan::Poisson { seed, .. } => Rng::seeded(*seed),
+        ArrivalPlan::Trace { .. } => Rng::seeded(0),
+    };
+    for (i, (image, label)) in inputs.into_iter().enumerate() {
+        let gap = match plan {
+            ArrivalPlan::Poisson { per_ms, .. } => {
+                Duration::from_secs_f64(poisson_gap_ms(rng.f64(), *per_ms) / 1e3)
+            }
+            ArrivalPlan::Trace { gaps_us } => {
+                Duration::from_micros(gaps_us.get(i).copied().unwrap_or(0))
+            }
+        };
+        std::thread::sleep(gap);
+        let id = i as u64;
+        let req = Request { id, image, label, arrived: Instant::now(), dequeued: None };
+        let outcome = match admission {
+            Admission::Shed => queue.try_push(req),
+            Admission::Block => queue.push_blocking(req),
+        };
+        match outcome {
+            Ok(()) => {
+                stats.admitted += 1;
+                if let Some(sink) = events {
+                    sink.emit(&Event::Admitted { req: id, t_us: sink.now_us() });
+                }
+            }
+            Err(e) => {
+                let reason = if e.is_closed() { RejectReason::Closed } else { RejectReason::Shed };
+                match reason {
+                    RejectReason::Shed => stats.rejected_shed += 1,
+                    RejectReason::Closed => stats.rejected_closed += 1,
+                }
+                if let Some(sink) = events {
+                    sink.emit(&Event::Rejected { req: id, reason, t_us: sink.now_us() });
+                }
+            }
+        }
+    }
+    queue.close();
+    stats
 }
 
 #[derive(Default)]
@@ -288,6 +434,8 @@ struct WorkerStats {
     batches: usize,
     correct: usize,
     latency: Histogram,
+    queued: Histogram,
+    service: Histogram,
 }
 
 fn worker_loop<B: InferenceBackend>(
@@ -296,18 +444,52 @@ fn worker_loop<B: InferenceBackend>(
     batch_max: usize,
     batch_timeout: Duration,
     slowdown: f64,
+    events: Option<&EventSink>,
     make_backend: &(impl Fn(usize) -> crate::Result<B> + Sync),
 ) -> crate::Result<WorkerStats> {
     let mut backend = make_backend(idx)?;
     let mut batcher = Batcher::new(queue, batch_max, batch_timeout);
     let mut stats = WorkerStats::default();
-    while let Some(batch) = batcher.next_batch() {
+    loop {
+        let batch = batcher.next_batch_with(|r: &mut Request| {
+            r.dequeued = Some(Instant::now());
+            if let Some(sink) = events {
+                sink.emit(&Event::Dequeued { req: r.id, worker: idx, t_us: sink.now_us() });
+            }
+        });
+        let Some(batch) = batch else { break };
+        if let Some(sink) = events {
+            sink.emit(&Event::BatchFormed {
+                worker: idx,
+                first_req: batch.first().map(|r| r.id).unwrap_or(0),
+                size: batch.len(),
+                t_us: sink.now_us(),
+            });
+        }
         let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
         let preds = backend.infer(&images)?;
         let done = Instant::now();
         for (r, &p) in batch.iter().zip(&preds) {
-            let raw = done.duration_since(r.arrived).as_secs_f64();
-            stats.latency.record((raw * slowdown * 1e6) as u64);
+            // The latency split: queue wait is wall time the memory
+            // scheme never caused (unscaled); only the service span
+            // scales by the scheme slowdown. The old accounting
+            // multiplied the whole arrival→completion span, inflating
+            // queueing delay under every non-baseline scheme.
+            let deq = r.dequeued.unwrap_or(done);
+            let queued_us = deq.duration_since(r.arrived).as_secs_f64() * 1e6;
+            let service_us = done.duration_since(deq).as_secs_f64() * slowdown * 1e6;
+            stats.queued.record(queued_us as u64);
+            stats.service.record(service_us as u64);
+            stats.latency.record((queued_us + service_us) as u64);
+            if let Some(sink) = events {
+                sink.emit(&Event::Completed {
+                    req: r.id,
+                    worker: idx,
+                    queued_us: queued_us as u64,
+                    service_us: service_us as u64,
+                    t_us: sink.now_us(),
+                });
+            }
             if p == r.label as usize {
                 stats.correct += 1;
             }
@@ -337,34 +519,17 @@ where
 {
     let n_workers = ecfg.n_workers.max(1);
     let queue = Arc::new(BoundedQueue::new(ecfg.queue_cap.max(1)));
-    let rejected = AtomicUsize::new(0);
     let live_workers = AtomicUsize::new(n_workers);
     let t_start = Instant::now();
 
-    let worker_results: Vec<crate::Result<WorkerStats>> = std::thread::scope(|s| {
-        // Producer: Poisson arrivals into the bounded queue.
+    let (producer_stats, worker_results) = std::thread::scope(|s| {
+        // Producer: scheduled arrivals into the bounded queue.
         let admission = ecfg.admission;
-        let arrival = ecfg.arrival_per_ms;
-        let seed = ecfg.arrival_seed;
+        let plan = ecfg.arrival.clone();
         let producer_queue = queue.clone();
-        let rejected_ref = &rejected;
-        s.spawn(move || {
-            let mut rng = Rng::seeded(seed);
-            for (image, label) in inputs {
-                let gap_ms = poisson_gap_ms(rng.f64(), arrival);
-                std::thread::sleep(Duration::from_secs_f64(gap_ms / 1e3));
-                let req = Request { image, label, arrived: Instant::now() };
-                let refused = match admission {
-                    Admission::Shed => producer_queue.try_push(req).is_err(),
-                    Admission::Block => producer_queue.push_blocking(req).is_err(),
-                };
-                if refused {
-                    // Queue full (shed) or closed because every worker
-                    // died: count the rejection, never drop it silently.
-                    rejected_ref.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            producer_queue.close();
+        let producer_events = ecfg.events.clone();
+        let producer = s.spawn(move || {
+            produce_requests(&producer_queue, admission, &plan, inputs, producer_events.as_deref())
         });
 
         let mut handles = Vec::with_capacity(n_workers);
@@ -372,6 +537,7 @@ where
             let worker_queue = queue.clone();
             let make_backend = &make_backend;
             let live = &live_workers;
+            let worker_events = ecfg.events.clone();
             let (batch_max, batch_timeout, slowdown) =
                 (ecfg.batch_max, ecfg.batch_timeout, ecfg.slowdown);
             handles.push(s.spawn(move || {
@@ -381,6 +547,7 @@ where
                     batch_max,
                     batch_timeout,
                     slowdown,
+                    worker_events.as_deref(),
                     make_backend,
                 );
                 if live.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -395,15 +562,19 @@ where
         for h in handles {
             results.push(h.join().expect("serve worker panicked"));
         }
-        results
+        let pstats = producer.join().expect("serve producer panicked");
+        (pstats, results)
     });
 
     let mut agg = EngineStats {
         served: 0,
-        rejected: rejected.load(Ordering::Relaxed),
+        rejected_shed: producer_stats.rejected_shed,
+        rejected_closed: producer_stats.rejected_closed,
         batches: 0,
         correct: 0,
         latency_us: Histogram::default(),
+        queued_us: Histogram::default(),
+        service_us: Histogram::default(),
         per_worker_served: Vec::with_capacity(n_workers),
         elapsed_s: 0.0,
     };
@@ -415,6 +586,8 @@ where
                 agg.batches += w.batches;
                 agg.correct += w.correct;
                 agg.latency_us.merge(&w.latency);
+                agg.queued_us.merge(&w.queued);
+                agg.service_us.merge(&w.service);
                 agg.per_worker_served.push(w.served);
             }
             Err(e) => {
@@ -445,19 +618,75 @@ fn report_from(
         queue_cap: ecfg.queue_cap.max(1),
         admission: ecfg.admission,
         served: stats.served,
-        rejected: stats.rejected,
+        rejected: stats.rejected(),
+        rejected_shed: stats.rejected_shed,
+        rejected_closed: stats.rejected_closed,
         n_batches: stats.batches,
         per_worker_served: stats.per_worker_served,
         throughput_rps: stats.served as f64 / stats.elapsed_s.max(1e-9),
         slowdown: ecfg.slowdown,
         sample_accuracy: stats.correct as f64 / stats.served.max(1) as f64,
         latency_us: stats.latency_us,
+        queued_us: stats.queued_us,
+        service_us: stats.service_us,
         encrypted_lines,
         total_lines,
     }
 }
 
 // -- entry points ------------------------------------------------------------
+
+/// Resolve the arrival plan. A `--replay` trace overrides the Poisson
+/// process, and its arrival count overrides `n_requests`, so the
+/// replayed run makes exactly the recorded arrival attempts. The trace
+/// is read tolerantly: skipped lines are counted and warned about,
+/// never fatal (an all-garbage trace fails only because it contains
+/// zero arrivals).
+fn arrival_plan(
+    replay: Option<&Path>,
+    per_ms: f64,
+    seed: u64,
+    n_requests: usize,
+) -> crate::Result<(ArrivalPlan, usize)> {
+    match replay {
+        None => Ok((ArrivalPlan::Poisson { per_ms, seed }, n_requests)),
+        Some(path) => {
+            let trace = telemetry::read_events_path(path)
+                .map_err(|e| anyhow::anyhow!("replay {}: {e}", path.display()))?;
+            if trace.skipped() > 0 {
+                eprintln!(
+                    "[serve] warn: replay trace {}: skipped {}/{} lines ({} malformed, {} unknown)",
+                    path.display(),
+                    trace.skipped(),
+                    trace.lines,
+                    trace.malformed,
+                    trace.unknown
+                );
+            }
+            let times = telemetry::arrival_times_us(&trace);
+            anyhow::ensure!(
+                !times.is_empty(),
+                "replay trace {} contains no arrival events",
+                path.display()
+            );
+            let gaps = telemetry::gaps_from_times(&times);
+            let n = gaps.len();
+            Ok((ArrivalPlan::Trace { gaps_us: gaps }, n))
+        }
+    }
+}
+
+/// Open the opt-in event sink (`--events`); `None` stays free.
+fn open_sink(path: Option<&Path>, scheme: &str) -> crate::Result<Option<Arc<EventSink>>> {
+    match path {
+        None => Ok(None),
+        Some(p) => {
+            let sink = EventSink::to_path(p, scheme)
+                .map_err(|e| anyhow::anyhow!("events {}: {e}", p.display()))?;
+            Ok(Some(Arc::new(sink)))
+        }
+    }
+}
 
 /// Serve through real PJRT artifacts: every worker stands up its own
 /// runtime, loads the predict executable, and decrypts its own on-chip
@@ -468,11 +697,20 @@ pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
     let info = man.model(&cfg.model)?.clone();
     let slowdown = scheme_slowdown(cfg.scheme, cfg.se_ratio);
 
-    // Request sample: Poisson arrivals over the test split.
+    // Arrival schedule: Poisson (historical seed 7 unless --seed), or
+    // a replayed trace whose length overrides --requests.
+    let (arrival, n_requests) = arrival_plan(
+        cfg.replay.as_deref(),
+        cfg.arrival_per_ms,
+        cfg.seed.unwrap_or(7),
+        cfg.n_requests,
+    )?;
+
+    // Request sample over the test split.
     let img = data.image_len();
     let inputs: Vec<(Vec<f32>, i32)> = {
         let mut rng = Rng::seeded(man.seed ^ 0x5e7e);
-        (0..cfg.n_requests)
+        (0..n_requests)
             .map(|_| {
                 let i = rng.below(data.y_test.len() as u64) as usize;
                 (data.x_test[i * img..(i + 1) * img].to_vec(), data.y_test[i])
@@ -503,9 +741,9 @@ pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
         admission: cfg.admission,
         batch_max: cfg.batch_max.min(batch_cap).max(1),
         batch_timeout: Duration::from_millis(2),
-        arrival_per_ms: cfg.arrival_per_ms,
-        arrival_seed: 7,
+        arrival,
         slowdown,
+        events: open_sink(cfg.events.as_deref(), cfg.scheme.name())?,
     };
     let stats = run_engine(&ecfg, inputs, |_worker| {
         let (hw, ch, ncls) = (data.hw, data.channels, data.n_classes);
@@ -515,14 +753,21 @@ pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
 }
 
 /// Serve the synthetic (artifact-free) workload: the substrate of
-/// `seal serve-bench`, CI serve-smoke, and the coordinator tests.
+/// `seal serve-bench`, `seal serve --synthetic`, CI serve-smoke, and
+/// the coordinator tests.
 pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
     let spec = cfg.spec;
     let info = spec.model_info();
     let theta = spec.theta();
     let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
     let reference = SyntheticBackend::from_theta(&theta, &spec);
-    let inputs = spec.requests(cfg.n_requests, &reference);
+    let (arrival, n_requests) = arrival_plan(
+        cfg.replay.as_deref(),
+        cfg.arrival_per_ms,
+        cfg.seed.unwrap_or(spec.seed ^ 0xa771),
+        cfg.n_requests,
+    )?;
+    let inputs = spec.requests(n_requests, &reference);
     let slowdown =
         if cfg.slowdown > 0.0 { cfg.slowdown } else { scheme_slowdown(cfg.scheme, cfg.se_ratio) };
 
@@ -532,9 +777,9 @@ pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
         admission: cfg.admission,
         batch_max: cfg.batch_max.max(1),
         batch_timeout: Duration::from_millis(2),
-        arrival_per_ms: cfg.arrival_per_ms,
-        arrival_seed: spec.seed ^ 0xa771,
+        arrival,
         slowdown,
+        events: open_sink(cfg.events.as_deref(), cfg.scheme.name())?,
     };
     let encrypted_lines = sealed.encrypted_lines();
     let total_lines = sealed.n_lines();
@@ -548,6 +793,25 @@ pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::telemetry::SharedBuf;
+
+    fn synth_cfg() -> SynthServeCfg {
+        SynthServeCfg {
+            spec: SynthSpec::default(),
+            n_requests: 24,
+            batch_max: 4,
+            n_workers: 2,
+            queue_cap: 4,
+            admission: Admission::Block,
+            scheme: Scheme::BASELINE,
+            se_ratio: 0.5,
+            arrival_per_ms: 1000.0,
+            slowdown: 1.0,
+            seed: None,
+            events: None,
+            replay: None,
+        }
+    }
 
     #[test]
     fn poisson_gap_is_finite_even_at_the_u64_boundary() {
@@ -618,26 +882,161 @@ mod tests {
 
     #[test]
     fn engine_serves_everything_under_backpressure() {
-        let spec = SynthSpec::default();
-        let report = serve_synthetic(&SynthServeCfg {
-            spec,
-            n_requests: 24,
-            batch_max: 4,
-            n_workers: 2,
-            queue_cap: 4,
-            admission: Admission::Block,
-            scheme: Scheme::BASELINE,
-            se_ratio: 0.5,
-            arrival_per_ms: 1000.0,
-            slowdown: 1.0,
-        })
-        .unwrap();
+        let report = serve_synthetic(&synth_cfg()).unwrap();
         assert_eq!(report.served, 24);
         assert_eq!(report.rejected, 0);
         assert_eq!(report.latency_us.n, 24);
+        assert_eq!(report.queued_us.n, 24, "every served request has a queued sample");
+        assert_eq!(report.service_us.n, 24, "every served request has a service sample");
         assert_eq!(report.per_worker_served.iter().sum::<usize>(), 24);
         assert_eq!(report.sample_accuracy, 1.0, "seal->decrypt->infer path must be exact");
         assert!(report.n_batches >= 24usize.div_ceil(4));
         assert!(report.latency_us.quantile(0.99) <= report.latency_us.max);
+    }
+
+    #[test]
+    fn slowdown_scales_service_but_never_queue_wait() {
+        // The latency-accounting bugfix: with an artificial 1000x
+        // slowdown the *service* histogram inflates, but queue wait is
+        // wall time the scheme never caused — its histogram must stay
+        // in the same range as an unscaled run, and total latency must
+        // equal queued + service per construction.
+        let report = serve_synthetic(&SynthServeCfg {
+            slowdown: 1000.0,
+            n_requests: 12,
+            n_workers: 1,
+            ..synth_cfg()
+        })
+        .unwrap();
+        assert_eq!(report.served, 12);
+        // Service mean under 1000x must dwarf queue-wait scaling: the
+        // mean latency must be driven by service, and max latency must
+        // never exceed queued.max + service.max.
+        assert!(report.latency_us.max <= report.queued_us.max + report.service_us.max + 1);
+        assert!(
+            report.service_us.mean() >= 1000.0,
+            "1000x slowdown must show in service: {}",
+            report.service_us.mean()
+        );
+    }
+
+    #[test]
+    fn closed_rejections_are_not_shed_rejections() {
+        // The failing-backend path: every worker dies, the last one
+        // closes the queue, and the producer's remaining requests are
+        // refused by a *closed* queue — they must land in
+        // rejected_closed, not pollute the shed statistics.
+        let queue = BoundedQueue::new(4);
+        queue.close();
+        let inputs = vec![(vec![0.0f32; 4], 0i32); 5];
+        let stats = produce_requests(
+            &queue,
+            Admission::Shed,
+            &ArrivalPlan::Trace { gaps_us: vec![0; 5] },
+            inputs,
+            None,
+        );
+        assert_eq!(stats.admitted, 0);
+        assert_eq!(stats.rejected_shed, 0, "closed refusals must not count as shed");
+        assert_eq!(stats.rejected_closed, 5);
+
+        // A full-but-open queue sheds (and the split stays clean).
+        let queue = BoundedQueue::new(1);
+        assert!(queue
+            .try_push(Request {
+                id: 99,
+                image: Vec::new(),
+                label: 0,
+                arrived: Instant::now(),
+                dequeued: None,
+            })
+            .is_ok());
+        let inputs = vec![(vec![0.0f32; 4], 0i32); 3];
+        let stats = produce_requests(
+            &queue,
+            Admission::Shed,
+            &ArrivalPlan::Trace { gaps_us: vec![0; 3] },
+            inputs,
+            None,
+        );
+        assert_eq!(stats.admitted, 0);
+        assert_eq!(stats.rejected_shed, 3);
+        assert_eq!(stats.rejected_closed, 0);
+    }
+
+    #[test]
+    fn events_stream_records_the_full_request_lifecycle() {
+        let buf = SharedBuf::default();
+        let spec = SynthSpec::default();
+        let theta = spec.theta();
+        let reference = SyntheticBackend::from_theta(&theta, &spec);
+        let inputs = spec.requests(6, &reference);
+        let ecfg = EngineCfg {
+            n_workers: 1,
+            queue_cap: 8,
+            admission: Admission::Block,
+            batch_max: 4,
+            batch_timeout: Duration::from_millis(1),
+            arrival: ArrivalPlan::Trace { gaps_us: vec![0; 6] },
+            slowdown: 1.0,
+            events: Some(Arc::new(EventSink::to_writer(Box::new(buf.clone()), "Baseline"))),
+        };
+        let stats =
+            run_engine(&ecfg, inputs, |_| Ok(SyntheticBackend::from_theta(&theta, &spec))).unwrap();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.rejected(), 0);
+
+        let trace = telemetry::read_events(buf.take_string().as_bytes());
+        assert_eq!(trace.skipped(), 0, "the engine must emit only well-formed lines");
+        let mut admitted = 0;
+        let mut dequeued = 0;
+        let mut batches = 0;
+        let mut completed = 0;
+        for p in &trace.events {
+            assert_eq!(p.scheme, "Baseline");
+            match p.event {
+                Event::Admitted { .. } => admitted += 1,
+                Event::Dequeued { .. } => dequeued += 1,
+                Event::BatchFormed { .. } => batches += 1,
+                Event::Completed { queued_us, service_us, .. } => {
+                    completed += 1;
+                    // The split is the whole point: both components are
+                    // reported, and each is bounded by the run.
+                    assert!(queued_us < 10_000_000, "queued_us {queued_us}");
+                    assert!(service_us < 10_000_000, "service_us {service_us}");
+                }
+                Event::Rejected { .. } => panic!("no rejections under backpressure"),
+            }
+        }
+        assert_eq!(admitted, 6);
+        assert_eq!(dequeued, 6);
+        assert_eq!(completed, 6);
+        assert_eq!(batches, stats.batches);
+    }
+
+    #[test]
+    fn trace_arrivals_drive_the_engine_deterministically_in_count() {
+        // A hand-synthesized bursty plan: the engine must generate
+        // exactly one request per gap (the trace length, not
+        // n_requests, is authoritative at the serve_* layer; here we
+        // hand the plan straight to the engine).
+        let spec = SynthSpec::default();
+        let theta = spec.theta();
+        let reference = SyntheticBackend::from_theta(&theta, &spec);
+        let inputs = spec.requests(9, &reference);
+        let ecfg = EngineCfg {
+            n_workers: 2,
+            queue_cap: 8,
+            admission: Admission::Block,
+            batch_max: 4,
+            batch_timeout: Duration::from_millis(1),
+            arrival: ArrivalPlan::Trace { gaps_us: vec![0, 0, 0, 5_000, 0, 0, 5_000, 0, 0] },
+            slowdown: 1.0,
+            events: None,
+        };
+        let stats =
+            run_engine(&ecfg, inputs, |_| Ok(SyntheticBackend::from_theta(&theta, &spec))).unwrap();
+        assert_eq!(stats.served, 9);
+        assert_eq!(stats.rejected(), 0);
     }
 }

@@ -1,0 +1,472 @@
+//! Structured JSONL serving telemetry: typed per-request events, a
+//! line-buffered writer, and a *tolerant* offline reader + trace
+//! replay extraction (DESIGN.md §10).
+//!
+//! The serving engine historically emitted one end-of-run summary —
+//! invisible at p99.9 and useless for tail forensics. This module adds
+//! an opt-in live event stream (`seal serve --events out.jsonl`): one
+//! JSON object per line, schema [`EVENTS_SCHEMA`], covering the whole
+//! request lifecycle — [`Event::Admitted`] / [`Event::Rejected`] at
+//! the admission queue, [`Event::Dequeued`] + [`Event::BatchFormed`]
+//! at the worker, [`Event::Completed`] with the queued/service split.
+//! Every event carries the request id, the worker (where one exists),
+//! the scheme, and a monotonic microsecond timestamp measured from
+//! engine start.
+//!
+//! The offline reader follows the tolerant-parser contract (SNIPPETS.md
+//! snippet 2): line-oriented over `BufRead`, CRLF-tolerant, and it
+//! **never aborts on content** — malformed JSON, missing fields, and
+//! unknown `type`s are counted ([`Trace::malformed`] /
+//! [`Trace::unknown`]) and skipped, so a truncated tail (the normal
+//! result of a crash mid-write) costs exactly one counted line.
+//! [`arrival_times_us`] + [`gaps_from_times`] turn any trace —
+//! recorded or hand-synthesized ([`synth_arrival_trace`]) — into the
+//! deterministic arrival schedule `seal serve --replay` drives.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{self, BufRead, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-line schema tag (documented in README).
+pub const EVENTS_SCHEMA: &str = "seal-events/v1";
+
+/// Why an admission attempt was refused (the shed/closed split:
+/// rejections by a *closed* queue are a shutdown artifact, not a load
+/// signal, and must not pollute shed statistics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Queue at capacity under `Admission::Shed` — genuine load.
+    Shed,
+    /// Queue closed (e.g. every worker died) — a shutdown path.
+    Closed,
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::Shed => "shed",
+            RejectReason::Closed => "closed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RejectReason> {
+        match s {
+            "shed" => Some(RejectReason::Shed),
+            "closed" => Some(RejectReason::Closed),
+            _ => None,
+        }
+    }
+}
+
+/// One serving-engine lifecycle event. Timestamps (`t_us`) are
+/// monotonic microseconds since engine start; `req` is the producer's
+/// sequential request id; `worker` identifies the draining worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// The request entered the admission queue.
+    Admitted { req: u64, t_us: u64 },
+    /// The request was refused at admission (shed or closed).
+    Rejected { req: u64, reason: RejectReason, t_us: u64 },
+    /// A worker popped the request off the queue (the queued→service
+    /// boundary the latency split is measured at).
+    Dequeued { req: u64, worker: usize, t_us: u64 },
+    /// A worker finished forming a batch (head request + size).
+    BatchFormed { worker: usize, first_req: u64, size: usize, t_us: u64 },
+    /// The request finished executing; carries the latency split —
+    /// `queued_us` is real wall time (never scheme-scaled),
+    /// `service_us` is scaled by the memory-scheme slowdown.
+    Completed { req: u64, worker: usize, queued_us: u64, service_us: u64, t_us: u64 },
+}
+
+impl Event {
+    /// Monotonic microseconds since engine start.
+    pub fn t_us(&self) -> u64 {
+        match self {
+            Event::Admitted { t_us, .. }
+            | Event::Rejected { t_us, .. }
+            | Event::Dequeued { t_us, .. }
+            | Event::BatchFormed { t_us, .. }
+            | Event::Completed { t_us, .. } => *t_us,
+        }
+    }
+
+    /// The wire `type` tag.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Event::Admitted { .. } => "admitted",
+            Event::Rejected { .. } => "rejected",
+            Event::Dequeued { .. } => "dequeued",
+            Event::BatchFormed { .. } => "batch_formed",
+            Event::Completed { .. } => "completed",
+        }
+    }
+
+    /// Serialize as one scheme-stamped JSON object (one JSONL line,
+    /// sans newline).
+    pub fn to_json(&self, scheme: &str) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("type", Json::str(self.type_name())),
+            ("scheme", Json::str(scheme)),
+            ("t_us", Json::num(self.t_us() as f64)),
+        ];
+        match self {
+            Event::Admitted { req, .. } => pairs.push(("req", Json::num(*req as f64))),
+            Event::Rejected { req, reason, .. } => {
+                pairs.push(("req", Json::num(*req as f64)));
+                pairs.push(("reason", Json::str(reason.name())));
+            }
+            Event::Dequeued { req, worker, .. } => {
+                pairs.push(("req", Json::num(*req as f64)));
+                pairs.push(("worker", Json::num(*worker as f64)));
+            }
+            Event::BatchFormed { worker, first_req, size, .. } => {
+                pairs.push(("worker", Json::num(*worker as f64)));
+                pairs.push(("first_req", Json::num(*first_req as f64)));
+                pairs.push(("size", Json::num(*size as f64)));
+            }
+            Event::Completed { req, worker, queued_us, service_us, .. } => {
+                pairs.push(("req", Json::num(*req as f64)));
+                pairs.push(("worker", Json::num(*worker as f64)));
+                pairs.push(("queued_us", Json::num(*queued_us as f64)));
+                pairs.push(("service_us", Json::num(*service_us as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One parsed trace line: the event plus the scheme it was stamped with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEvent {
+    pub scheme: String,
+    pub event: Event,
+}
+
+/// Parse one already-trimmed JSONL line. `Ok(None)` means the line was
+/// a structurally valid object of an *unknown* type (forward compat:
+/// counted, skipped, never fatal); `Err(())` means malformed.
+fn parse_line(line: &str) -> Result<Option<ParsedEvent>, ()> {
+    let j = Json::parse(line).map_err(|_| ())?;
+    let ty = j.get("type").and_then(Json::as_str).ok_or(())?;
+    let t_us = j.get("t_us").and_then(Json::as_u64).ok_or(())?;
+    let scheme = j.get("scheme").and_then(Json::as_str).unwrap_or("?").to_string();
+    let req = |k: &str| j.get(k).and_then(Json::as_u64).ok_or(());
+    let event = match ty {
+        "admitted" => Event::Admitted { req: req("req")?, t_us },
+        "rejected" => {
+            let r = j.get("reason").and_then(Json::as_str).ok_or(())?;
+            Event::Rejected { req: req("req")?, reason: RejectReason::parse(r).ok_or(())?, t_us }
+        }
+        "dequeued" => Event::Dequeued { req: req("req")?, worker: req("worker")? as usize, t_us },
+        "batch_formed" => Event::BatchFormed {
+            worker: req("worker")? as usize,
+            first_req: req("first_req")?,
+            size: req("size")? as usize,
+            t_us,
+        },
+        "completed" => Event::Completed {
+            req: req("req")?,
+            worker: req("worker")? as usize,
+            queued_us: req("queued_us")?,
+            service_us: req("service_us")?,
+            t_us,
+        },
+        _ => return Ok(None),
+    };
+    Ok(Some(ParsedEvent { scheme, event }))
+}
+
+/// A tolerantly read trace: every parseable event, plus the accounting
+/// of what was skipped (counted, reported, never fatal).
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<ParsedEvent>,
+    /// Non-empty lines seen (parsed + skipped).
+    pub lines: usize,
+    /// Invalid JSON, missing/ill-typed fields, or a truncated tail.
+    pub malformed: usize,
+    /// Structurally valid objects with an unrecognized `type`.
+    pub unknown: usize,
+}
+
+impl Trace {
+    pub fn skipped(&self) -> usize {
+        self.malformed + self.unknown
+    }
+}
+
+/// Read a JSONL event stream tolerantly: CRLF-insensitive, blank lines
+/// ignored, malformed/unknown lines counted and skipped. Content can
+/// never make this abort — only the underlying reader erroring stops
+/// it early (counted as one malformed line).
+pub fn read_events(r: impl BufRead) -> Trace {
+    let mut trace = Trace::default();
+    for line in r.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => {
+                // Unreadable (e.g. invalid UTF-8): count and stop —
+                // line framing cannot be trusted past this point.
+                trace.lines += 1;
+                trace.malformed += 1;
+                break;
+            }
+        };
+        let line = line.trim_end_matches('\r');
+        if line.trim().is_empty() {
+            continue;
+        }
+        trace.lines += 1;
+        match parse_line(line) {
+            Ok(Some(ev)) => trace.events.push(ev),
+            Ok(None) => trace.unknown += 1,
+            Err(()) => trace.malformed += 1,
+        }
+    }
+    trace
+}
+
+/// [`read_events`] over a file path (`io::Error` only for the open —
+/// content problems are counted in the returned [`Trace`]).
+pub fn read_events_path(path: &Path) -> io::Result<Trace> {
+    let f = File::open(path)?;
+    Ok(read_events(io::BufReader::new(f)))
+}
+
+/// The arrival-*attempt* schedule of a trace: the timestamp of every
+/// `Admitted` and `Rejected` event (both are arrivals — a shed request
+/// arrived too), sorted ascending.
+pub fn arrival_times_us(trace: &Trace) -> Vec<u64> {
+    let mut ts: Vec<u64> = trace
+        .events
+        .iter()
+        .filter_map(|p| match p.event {
+            Event::Admitted { t_us, .. } | Event::Rejected { t_us, .. } => Some(t_us),
+            _ => None,
+        })
+        .collect();
+    ts.sort_unstable();
+    ts
+}
+
+/// Inter-arrival gaps from an ascending timestamp schedule:
+/// `gaps[0]` is the delay from engine start to the first arrival,
+/// `gaps[i]` the wait between arrivals `i-1` and `i`.
+pub fn gaps_from_times(times: &[u64]) -> Vec<u64> {
+    let mut prev = 0u64;
+    times
+        .iter()
+        .map(|&t| {
+            let g = t.saturating_sub(prev);
+            prev = t;
+            g
+        })
+        .collect()
+}
+
+/// Hand-synthesize an arrival-only trace (one `Admitted` line per
+/// timestamp): bursty/diurnal schedules for `--replay` without a prior
+/// recording.
+pub fn synth_arrival_trace(times_us: &[u64], scheme: &str) -> String {
+    let mut out = String::new();
+    for (i, &t) in times_us.iter().enumerate() {
+        let ev = Event::Admitted { req: i as u64, t_us: t };
+        out.push_str(&ev.to_json(scheme).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+// -- the writer --------------------------------------------------------------
+
+/// Opt-in, line-buffered JSONL event writer. `emit` serializes one
+/// complete line and flushes it, so a crash mid-run truncates at most
+/// the line being written — exactly the failure the tolerant reader
+/// absorbs as one counted malformed line. Shared across the producer
+/// and every worker thread behind a mutex; when serving runs without
+/// `--events` no sink exists and the engine pays nothing.
+pub struct EventSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    scheme: String,
+    t0: Instant,
+}
+
+impl fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EventSink").field("scheme", &self.scheme).finish_non_exhaustive()
+    }
+}
+
+impl EventSink {
+    /// Write events to `path` (created/truncated).
+    pub fn to_path(path: &Path, scheme: &str) -> io::Result<EventSink> {
+        let f = File::create(path)?;
+        Ok(EventSink::to_writer(Box::new(f), scheme))
+    }
+
+    /// Write events to an arbitrary sink (tests use [`SharedBuf`]).
+    pub fn to_writer(w: Box<dyn Write + Send>, scheme: &str) -> EventSink {
+        EventSink { out: Mutex::new(w), scheme: scheme.to_string(), t0: Instant::now() }
+    }
+
+    /// Monotonic microseconds since this sink (= the engine run) began.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Emit one event as one complete, immediately flushed JSONL line.
+    /// Write failures are deliberately swallowed: telemetry must never
+    /// take the serving path down.
+    pub fn emit(&self, ev: &Event) {
+        let mut line = ev.to_json(&self.scheme).to_string();
+        line.push('\n');
+        let mut out = self.out.lock().unwrap();
+        let _ = out.write_all(line.as_bytes());
+        let _ = out.flush();
+    }
+}
+
+/// A clonable in-memory `Write` target for capturing an event stream
+/// in tests (each clone appends to the same buffer).
+#[derive(Debug, Clone, Default)]
+pub struct SharedBuf(pub Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// Snapshot the captured bytes as UTF-8 text.
+    pub fn take_string(&self) -> String {
+        String::from_utf8_lossy(&self.0.lock().unwrap()).into_owned()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<Event> {
+        vec![
+            Event::Admitted { req: 0, t_us: 10 },
+            Event::Rejected { req: 1, reason: RejectReason::Shed, t_us: 20 },
+            Event::Rejected { req: 2, reason: RejectReason::Closed, t_us: 30 },
+            Event::Dequeued { req: 0, worker: 3, t_us: 40 },
+            Event::BatchFormed { worker: 3, first_req: 0, size: 4, t_us: 41 },
+            Event::Completed { req: 0, worker: 3, queued_us: 30, service_us: 9, t_us: 50 },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips_through_jsonl() {
+        let events = all_variants();
+        let mut text = String::new();
+        for e in &events {
+            text.push_str(&e.to_json("SEAL").to_string());
+            text.push('\n');
+        }
+        let trace = read_events(text.as_bytes());
+        assert_eq!(trace.lines, events.len());
+        assert_eq!(trace.skipped(), 0);
+        assert_eq!(trace.events.len(), events.len());
+        for (parsed, want) in trace.events.iter().zip(&events) {
+            assert_eq!(parsed.scheme, "SEAL");
+            assert_eq!(&parsed.event, want);
+        }
+    }
+
+    #[test]
+    fn reject_reason_roundtrip() {
+        for r in [RejectReason::Shed, RejectReason::Closed] {
+            assert_eq!(RejectReason::parse(r.name()), Some(r));
+        }
+        assert_eq!(RejectReason::parse("dropped"), None);
+    }
+
+    #[test]
+    fn reader_tolerates_malformed_unknown_and_truncated_lines() {
+        let good = Event::Admitted { req: 0, t_us: 5 }.to_json("SEAL").to_string();
+        let crlf = Event::Completed { req: 0, worker: 0, queued_us: 1, service_us: 2, t_us: 9 }
+            .to_json("SEAL")
+            .to_string();
+        let text = format!(
+            "{good}\n\
+             {{oops not json\n\
+             {{\"type\":\"frobnicate\",\"t_us\":7,\"scheme\":\"SEAL\"}}\n\
+             {{\"type\":\"admitted\",\"t_us\":\"not a number\"}}\n\
+             \n\
+             {crlf}\r\n\
+             {{\"type\":\"admitted\",\"req\":9"
+        );
+        let trace = read_events(text.as_bytes());
+        // good + crlf parse; bad json, missing-field, truncated tail are
+        // malformed; frobnicate is unknown; the blank line is free.
+        assert_eq!(trace.events.len(), 2);
+        assert_eq!(trace.malformed, 3);
+        assert_eq!(trace.unknown, 1);
+        assert_eq!(trace.lines, 6);
+        assert_eq!(trace.skipped(), 4);
+        assert_eq!(trace.events[0].event, Event::Admitted { req: 0, t_us: 5 });
+    }
+
+    #[test]
+    fn arrival_extraction_covers_admitted_and_rejected_sorted() {
+        let mut text = String::new();
+        // Deliberately out of order; Dequeued/Completed are not arrivals.
+        for e in [
+            Event::Rejected { req: 2, reason: RejectReason::Shed, t_us: 300 },
+            Event::Admitted { req: 0, t_us: 100 },
+            Event::Dequeued { req: 0, worker: 0, t_us: 150 },
+            Event::Admitted { req: 1, t_us: 250 },
+            Event::Completed { req: 0, worker: 0, queued_us: 50, service_us: 10, t_us: 160 },
+        ] {
+            text.push_str(&e.to_json("x").to_string());
+            text.push('\n');
+        }
+        let trace = read_events(text.as_bytes());
+        let times = arrival_times_us(&trace);
+        assert_eq!(times, vec![100, 250, 300]);
+        assert_eq!(gaps_from_times(&times), vec![100, 150, 50]);
+    }
+
+    #[test]
+    fn gaps_are_saturating_on_equal_timestamps() {
+        assert_eq!(gaps_from_times(&[5, 5, 7]), vec![5, 0, 2]);
+        assert_eq!(gaps_from_times(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn synth_trace_parses_back_to_its_schedule() {
+        let times = [0u64, 10, 10, 30_000];
+        let text = synth_arrival_trace(&times, "hand");
+        let trace = read_events(text.as_bytes());
+        assert_eq!(trace.skipped(), 0);
+        assert_eq!(trace.events.len(), 4);
+        assert_eq!(arrival_times_us(&trace), times.to_vec());
+        assert!(trace.events.iter().all(|p| p.scheme == "hand"));
+    }
+
+    #[test]
+    fn sink_stamps_scheme_and_monotonic_micros() {
+        let buf = SharedBuf::default();
+        let sink = EventSink::to_writer(Box::new(buf.clone()), "GuardNN");
+        sink.emit(&Event::Admitted { req: 7, t_us: sink.now_us() });
+        sink.emit(&Event::Admitted { req: 8, t_us: sink.now_us() });
+        let trace = read_events(buf.take_string().as_bytes());
+        assert_eq!(trace.events.len(), 2);
+        assert!(trace.events.iter().all(|p| p.scheme == "GuardNN"));
+        assert!(trace.events[0].event.t_us() <= trace.events[1].event.t_us());
+    }
+}

@@ -68,10 +68,16 @@ USAGE: seal <subcommand> [flags]
   security  train-victim|extract|attack --model <m> [--ratio r] ...
   serve     --model <m> [--requests n] [--batch b] [--scheme s]
             [--workers n] [--queue cap] [--admission block|shed]
-            [--rate req_per_ms] [--no-pallas]
+            [--rate req_per_ms] [--seed s] [--events out.jsonl]
+            [--replay trace.jsonl] [--no-pallas]
+            [--synthetic [--cost gemv_repeats] [--slowdown f]]
+            (--events streams seal-events/v1 JSONL; --replay drives
+             arrivals from a recorded trace; --synthetic needs no
+             artifacts)
   serve-bench [--quick] [--schemes s1,s2] [--workers 1,2,4]
             [--rates r1,r2] [--requests n] [--batch b] [--queue cap]
-            [--cost gemv_repeats] [--calibration cnn|transformer] [--out f]
+            [--cost gemv_repeats] [--calibration cnn|transformer]
+            [--seed s] [--out f]
             (synthetic backend; writes BENCH_serve.json)
   schemes   list every registered scheme with its doc string
   info

@@ -5,11 +5,15 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Latency/throughput histogram with power-of-two-ish buckets.
+///
+/// `sum` is deliberately `u128`: samples are full-range `u64` values,
+/// so a `u64` running sum wraps after as few as two near-`u64::MAX`
+/// records (a panic in debug builds, silently wrong means in release).
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {
     counts: BTreeMap<u64, u64>,
     pub n: u64,
-    pub sum: u64,
+    pub sum: u128,
     pub max: u64,
 }
 
@@ -18,7 +22,7 @@ impl Histogram {
         let bucket = if v == 0 { 0 } else { 1u64 << (63 - v.leading_zeros()) };
         *self.counts.entry(bucket).or_insert(0) += 1;
         self.n += 1;
-        self.sum += v;
+        self.sum += v as u128;
         self.max = self.max.max(v);
     }
 
@@ -150,6 +154,28 @@ mod tests {
         assert!((h.mean() - 22.0).abs() < 1e-9);
         assert!(h.quantile(0.5) >= 2);
         assert!(h.quantile(1.0) >= 100);
+    }
+
+    #[test]
+    fn sum_survives_near_max_values_without_wrapping() {
+        // Regression: `sum` was u64, so two near-`u64::MAX` records
+        // wrapped it (debug panic; silently wrong mean in release).
+        // The seeded property test below records full-range draws, so
+        // this was a live failure mode, not a theoretical one.
+        let mut h = Histogram::default();
+        h.record(u64::MAX - 1);
+        h.record(u64::MAX - 1);
+        assert_eq!(h.n, 2);
+        assert_eq!(h.sum, (u64::MAX as u128 - 1) * 2);
+        let rel_err = (h.mean() - (u64::MAX - 1) as f64).abs() / u64::MAX as f64;
+        assert!(rel_err < 1e-9, "mean drifted: {}", h.mean());
+        // Merging keeps the wide sum too.
+        let mut other = Histogram::default();
+        other.record(u64::MAX);
+        h.merge(&other);
+        assert_eq!(h.n, 3);
+        assert!(h.sum > u64::MAX as u128);
+        assert_eq!(h.max, u64::MAX);
     }
 
     #[test]

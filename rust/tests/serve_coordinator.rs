@@ -1,14 +1,15 @@
 //! Integration suite for the multi-worker serving coordinator:
-//! bounded admission (backpressure + counted load shedding), worker
-//! scaling accounting, deadlock-free shutdown on backend failure, and
-//! the `seal serve-bench` document contract. Everything runs on the
-//! synthetic backend — no artifacts, no PJRT.
+//! bounded admission (backpressure + counted load shedding, split by
+//! cause), worker scaling accounting, deadlock-free shutdown on
+//! backend failure, record→replay determinism over the JSONL
+//! telemetry stream, and the `seal serve-bench` document contract.
+//! Everything runs on the synthetic backend — no artifacts, no PJRT.
 
 use std::time::Duration;
 
 use seal::coordinator::{
-    bench, run_engine, serve_synthetic, Admission, EngineCfg, SynthServeCfg, SynthSpec,
-    SyntheticBackend,
+    bench, run_engine, serve_synthetic, telemetry, Admission, ArrivalPlan, CalWorkload, EngineCfg,
+    Event, SynthServeCfg, SynthSpec, SyntheticBackend,
 };
 use seal::sim::Scheme;
 use seal::util::json::Json;
@@ -25,7 +26,16 @@ fn base_cfg() -> SynthServeCfg {
         se_ratio: 0.5,
         arrival_per_ms: 1000.0,
         slowdown: 1.0,
+        seed: None,
+        events: None,
+        replay: None,
     }
+}
+
+/// A per-test temp path that never collides across parallel test
+/// binaries (pid + name).
+fn temp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("seal_{}_{}.jsonl", name, std::process::id()))
 }
 
 #[test]
@@ -33,7 +43,11 @@ fn backpressure_serves_every_request_exactly_once() {
     let report = serve_synthetic(&base_cfg()).unwrap();
     assert_eq!(report.served, 48);
     assert_eq!(report.rejected, 0, "backpressure must not shed");
+    assert_eq!(report.rejected_shed, 0);
+    assert_eq!(report.rejected_closed, 0);
     assert_eq!(report.latency_us.n, 48, "one latency sample per served request");
+    assert_eq!(report.queued_us.n, 48, "one queue-wait sample per served request");
+    assert_eq!(report.service_us.n, 48, "one service sample per served request");
     assert_eq!(report.per_worker_served.len(), 3);
     assert_eq!(report.per_worker_served.iter().sum::<usize>(), 48);
     // Ground-truth labels come from the same sealed model the workers
@@ -69,6 +83,11 @@ fn overload_sheds_with_full_accounting() {
         32,
         "served + rejected must account for every generated request"
     );
+    assert_eq!(
+        report.rejected,
+        report.rejected_shed + report.rejected_closed,
+        "the shed/closed split must sum to the rejection total"
+    );
     assert_eq!(report.latency_us.n as usize, report.served);
 }
 
@@ -83,9 +102,9 @@ fn worker_backend_failure_errors_instead_of_hanging() {
         admission: Admission::Block,
         batch_max: 4,
         batch_timeout: Duration::from_millis(1),
-        arrival_per_ms: 1000.0,
-        arrival_seed: 1,
+        arrival: ArrivalPlan::Poisson { per_ms: 1000.0, seed: 1 },
         slowdown: 1.0,
+        events: None,
     };
     let inputs = vec![(vec![0.0f32; SynthSpec::default().img_len()], 0i32); 8];
     let result = run_engine::<SyntheticBackend, _>(&ecfg, inputs, |_w| {
@@ -105,6 +124,71 @@ fn single_worker_degenerate_engine_works() {
 }
 
 #[test]
+fn record_then_replay_reproduces_counts_exactly() {
+    // The headline acceptance criterion: record a run with --events,
+    // replay its arrival trace with --replay, and get identical
+    // admitted/served/rejected counts. Exact equality is guaranteed
+    // under Block admission (shed counts are timing-dependent).
+    let events_path = temp_path("events_rt");
+    let recorded = serve_synthetic(&SynthServeCfg {
+        n_requests: 24,
+        events: Some(events_path.clone()),
+        ..base_cfg()
+    })
+    .unwrap();
+    assert_eq!(recorded.served, 24);
+    assert_eq!(recorded.rejected, 0);
+
+    // The recorded stream itself must be fully well-formed and carry
+    // the complete lifecycle for every request.
+    let trace = telemetry::read_events_path(&events_path).unwrap();
+    assert_eq!(trace.skipped(), 0, "the sink must emit only parseable lines");
+    let count = |f: fn(&Event) -> bool| trace.events.iter().filter(|p| f(&p.event)).count();
+    assert_eq!(count(|e| matches!(e, Event::Admitted { .. })), 24);
+    assert_eq!(count(|e| matches!(e, Event::Dequeued { .. })), 24);
+    assert_eq!(count(|e| matches!(e, Event::Completed { .. })), 24);
+    assert_eq!(count(|e| matches!(e, Event::Rejected { .. })), 0);
+
+    let replayed = serve_synthetic(&SynthServeCfg {
+        // n_requests deliberately wrong: the trace length must win.
+        n_requests: 7,
+        replay: Some(events_path.clone()),
+        ..base_cfg()
+    })
+    .unwrap();
+    assert_eq!(replayed.served, recorded.served);
+    assert_eq!(replayed.rejected, recorded.rejected);
+    assert_eq!(replayed.rejected_shed, recorded.rejected_shed);
+    assert_eq!(replayed.rejected_closed, recorded.rejected_closed);
+    let _ = std::fs::remove_file(&events_path);
+}
+
+#[test]
+fn synthesized_bursty_trace_drives_replay() {
+    // No prior recording: hand-synthesize a bursty arrival schedule
+    // (3 bursts of 4 back-to-back requests, 30 ms apart) — a shape a
+    // Poisson process cannot produce — and replay it.
+    let mut times = Vec::new();
+    for burst in 0..3u64 {
+        for _ in 0..4 {
+            times.push(burst * 30_000);
+        }
+    }
+    let trace_path = temp_path("bursty_trace");
+    std::fs::write(&trace_path, telemetry::synth_arrival_trace(&times, "hand")).unwrap();
+
+    let report = serve_synthetic(&SynthServeCfg {
+        n_requests: 1, // overridden by the 12-arrival trace
+        replay: Some(trace_path.clone()),
+        ..base_cfg()
+    })
+    .unwrap();
+    assert_eq!(report.served, 12, "one request per synthesized arrival");
+    assert_eq!(report.rejected, 0);
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+#[test]
 fn serve_bench_document_contract() {
     // Baseline-only grid skips cycle-sim calibration, so this stays
     // milliseconds-fast while exercising the whole bench path.
@@ -119,7 +203,9 @@ fn serve_bench_document_contract() {
         shed_queue_cap: 1,
         cost_repeats: 1,
         se_ratio: 0.5,
+        calibration: CalWorkload::Cnn,
         slowdown_override: Some(1.0),
+        seed: None,
     };
     let report = bench::run(&opts).unwrap();
     let doc = bench::document(&report);
@@ -133,6 +219,12 @@ fn serve_bench_document_contract() {
         let served = c.req("served").as_f64().unwrap();
         let rejected = c.req("rejected").as_f64().unwrap();
         assert_eq!(served + rejected, 16.0, "admission accounting must balance");
+        // v2 contract: the rejection-cause and latency splits.
+        let shed = c.req("rejected_shed").as_f64().unwrap();
+        let closed = c.req("rejected_closed").as_f64().unwrap();
+        assert_eq!(shed + closed, rejected, "shed + closed must sum to rejected");
+        assert!(c.req("p99_queued_us").as_f64().is_some());
+        assert!(c.req("p99_service_us").as_f64().is_some());
     }
     // The scaling summary carries the worker axis and the verdict.
     let scaling = j.req("scaling").as_arr().unwrap();
