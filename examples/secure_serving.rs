@@ -7,7 +7,7 @@
 //!
 //!     cargo run --release --example secure_serving [n_requests]
 
-use seal::coordinator::server::{serve, Admission, ServeCfg};
+use seal::coordinator::server::{Admission, ServeConfig};
 use seal::sim::Scheme;
 use seal::stats::Table;
 
@@ -22,22 +22,17 @@ fn main() -> anyhow::Result<()> {
         ("Direct", Scheme::DIRECT),
         ("SEAL", Scheme::SEAL),
     ] {
-        let report = serve(ServeCfg {
-            model: "vgg16m".into(),
-            artifacts: "artifacts".into(),
-            n_requests: n,
-            batch_max: 8,
-            n_workers: 2,
-            queue_cap: 32,
-            admission: Admission::Block,
-            scheme,
-            se_ratio: 0.5,
-            arrival_per_ms: 0.4,
-            seed: None,
-            events: None,
-            replay: None,
-            use_pallas: true,
-        })?;
+        let outcome = ServeConfig::pjrt("vgg16m", "artifacts")
+            .requests(n)
+            .batch_max(8)
+            .workers(2)
+            .queue_cap(32)
+            .admission(Admission::Block)
+            .scheme(scheme)
+            .se_ratio(0.5)
+            .rate(0.4)
+            .run()?;
+        let report = outcome.whole_request().expect("whole-request mode");
         report.print();
         t.row(
             name,

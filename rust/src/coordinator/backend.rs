@@ -88,6 +88,15 @@ impl SynthSpec {
         (0..self.theta_len()).map(|_| rng.normal() as f32).collect()
     }
 
+    /// Deterministic decode-step input for one live session
+    /// (continuous-batching mode): a session re-feeds its own image
+    /// every decode step, so the per-step GEMV work is stable per
+    /// session and the whole run reproduces from the seed.
+    pub fn session_image(&self, salt: u64) -> Vec<f32> {
+        let mut rng = Rng::seeded(self.seed ^ 0x5e55 ^ salt.wrapping_mul(0x9e37_79b9));
+        (0..self.img_len()).map(|_| rng.f32()).collect()
+    }
+
     /// `n` request images with ground-truth labels from `reference` —
     /// the serving engine's measured accuracy must come out at exactly
     /// 1.0, which pins the whole seal → decrypt → infer path.

@@ -1,18 +1,26 @@
 //! `seal serve-bench` — the serving engine's own benchmark: sweep
-//! schemes × worker counts × arrival rates over the synthetic backend
-//! and emit machine-readable `BENCH_serve.json` (schema
-//! `seal-serve/v2`, documented in README) for the CI serve-smoke job.
+//! schemes × worker counts × arrival rates over the synthetic backend,
+//! plus a many-session continuous-decode grid (sessions × decode steps
+//! × schemes over a paged encrypted KV cache), and emit
+//! machine-readable `BENCH_serve.json` (schema `seal-serve/v3`,
+//! documented in README) for the CI serve-smoke job.
 //!
-//! Each grid cell runs the full coordinator path — Poisson producer →
-//! bounded queue → N workers × dynamic batcher → synthetic classifier
-//! over the sealed model's decrypted view — under backpressure
-//! admission, so throughput reflects end-to-end service capacity. A
-//! per-(scheme, rate) *scaling* summary records throughput across the
-//! worker axis and whether it is monotonically non-decreasing (within
-//! [`MONOTONIC_TOLERANCE`] to absorb shared-runner timing noise). One
-//! extra *shed* cell per (scheme, rate) drives a deliberately tiny
-//! queue to demonstrate load shedding: its rejected count is reported,
-//! never silently dropped.
+//! Each whole-request grid cell runs the full coordinator path —
+//! Poisson producer → bounded queue → N workers × dynamic batcher →
+//! synthetic classifier over the sealed model's decrypted view — under
+//! backpressure admission, so throughput reflects end-to-end service
+//! capacity. A per-(scheme, rate) *scaling* summary records throughput
+//! across the worker axis and whether it is monotonically
+//! non-decreasing (within [`MONOTONIC_TOLERANCE`] to absorb
+//! shared-runner timing noise). One extra *shed* cell per (scheme,
+//! rate) drives a deliberately tiny queue to demonstrate load
+//! shedding: its rejected count is reported, never silently dropped.
+//!
+//! Each decode grid cell runs [`super::session::run_continuous`] with
+//! a KV pool deliberately smaller than aggregate demand, so eviction
+//! traffic is live and the per-scheme re-encryption price of paging
+//! (counter-block lifecycle included) shows up as distinct
+//! `kv_evict_cycles` per scheme family.
 
 use crate::sim::Scheme;
 use crate::stats::Table;
@@ -21,16 +29,20 @@ use crate::util::json::Json;
 
 use super::backend::SynthSpec;
 use super::server::{
-    scheme_slowdown_for, serve_synthetic, Admission, CalWorkload, ServeReport, SynthServeCfg,
+    Admission, CalWorkload, Calibration, ServeConfig, ServeMode, ServeOutcome, ServeReport,
 };
+use super::session::ContinuousReport;
 
 /// Default output path (repo root — the BENCH_* trajectory location).
 pub const DEFAULT_BENCH_PATH: &str = "BENCH_serve.json";
-/// Document schema tag. v2 (PR 6) splits rejection accounting
-/// (`rejected_shed`/`rejected_closed`) and latency accounting
-/// (`*_queued_us` unscaled vs `*_service_us` slowdown-scaled) per
-/// cell; every v1 field is still present with unchanged semantics.
-pub const SERVE_BENCH_SCHEMA: &str = "seal-serve/v2";
+/// Document schema tag. v3 (PR 7) adds the continuous-decode grid
+/// (`decode_grid` array + KV-pool fields under `engine`) and a
+/// `p999_latency_us` tail column per whole-request cell; every v2
+/// field is still present with unchanged semantics. v2 (PR 6) split
+/// rejection accounting (`rejected_shed`/`rejected_closed`) and
+/// latency accounting (`*_queued_us` unscaled vs `*_service_us`
+/// slowdown-scaled) per cell.
+pub const SERVE_BENCH_SCHEMA: &str = "seal-serve/v3";
 /// A worker step counts as monotone when its throughput is at least
 /// this fraction of the previous step's (wall-clock measurements on
 /// shared runners jitter by a few percent).
@@ -61,6 +73,22 @@ pub struct BenchOptions {
     /// Arrival seed forwarded to every cell (`--seed`); `None` keeps
     /// the historical per-spec default.
     pub seed: Option<u64>,
+    /// Continuous-decode grid: live-session axis (`--sessions`).
+    /// Empty (with an empty scheme axis) skips the decode grid.
+    pub decode_sessions: Vec<usize>,
+    /// Continuous-decode grid: decode-steps-per-session axis
+    /// (`--steps`).
+    pub decode_steps: Vec<usize>,
+    /// Schemes for the decode grid (`--decode-schemes`); empty skips
+    /// the grid entirely.
+    pub decode_schemes: Vec<Scheme>,
+    /// Prefill KV length per session before the first decode step.
+    pub decode_prompt: usize,
+    /// Physical KV pool, in blocks — sized *below* aggregate demand so
+    /// eviction traffic (the per-scheme paging price) is live.
+    pub kv_capacity_blocks: usize,
+    /// Tokens per KV block.
+    pub block_tokens: usize,
 }
 
 impl BenchOptions {
@@ -80,6 +108,19 @@ impl BenchOptions {
             calibration: CalWorkload::Cnn,
             slowdown_override: None,
             seed: None,
+            // One decode cell per scheme family with a pool ~4x under
+            // demand: 8 sessions x (8 prompt + 16 steps) / 4-token
+            // blocks = 48 blocks wanted vs 12 resident.
+            decode_sessions: vec![8],
+            decode_steps: vec![16],
+            decode_schemes: vec![
+                Scheme::SEAL,
+                Scheme::parse("guardnn").expect("registered scheme"),
+                Scheme::parse("seculator").expect("registered scheme"),
+            ],
+            decode_prompt: 8,
+            kv_capacity_blocks: 12,
+            block_tokens: 4,
         }
     }
 
@@ -108,16 +149,36 @@ impl BenchOptions {
             calibration: CalWorkload::Cnn,
             slowdown_override: None,
             seed: None,
+            decode_sessions: vec![8, 32],
+            decode_steps: vec![16, 64],
+            decode_schemes: vec![
+                Scheme::COUNTER,
+                Scheme::SEAL,
+                Scheme::parse("guardnn").expect("registered scheme"),
+                Scheme::parse("seculator").expect("registered scheme"),
+            ],
+            decode_prompt: 8,
+            kv_capacity_blocks: 12,
+            block_tokens: 4,
         }
     }
 }
 
-/// One measured grid cell: the arrival rate (the only coordinate the
-/// report does not already carry) plus the full serving report.
+/// One measured whole-request grid cell: the arrival rate (the only
+/// coordinate the report does not already carry) plus the full
+/// serving report.
 #[derive(Debug)]
 pub struct BenchCell {
     pub rate_per_ms: f64,
     pub report: ServeReport,
+}
+
+/// One measured continuous-decode grid cell.
+#[derive(Debug)]
+pub struct DecodeCell {
+    pub sessions: usize,
+    pub steps_per_session: usize,
+    pub report: ContinuousReport,
 }
 
 /// Throughput across the worker axis for one (scheme, rate).
@@ -136,6 +197,8 @@ pub struct BenchReport {
     pub opts: BenchOptions,
     pub cells: Vec<BenchCell>,
     pub scaling: Vec<ScalingRow>,
+    /// Continuous-decode grid (empty when `decode_schemes` is empty).
+    pub decode: Vec<DecodeCell>,
 }
 
 impl BenchReport {
@@ -145,10 +208,26 @@ impl BenchReport {
     }
 }
 
-/// Run the grid. Worker counts are swept under backpressure admission
+fn run_whole_cell(cfg: &ServeConfig) -> anyhow::Result<ServeReport> {
+    match cfg.run()? {
+        ServeOutcome::WholeRequest(r) => Ok(r),
+        ServeOutcome::Continuous(_) => unreachable!("whole-request bench cell"),
+    }
+}
+
+fn run_decode_cell(cfg: &ServeConfig) -> anyhow::Result<ContinuousReport> {
+    match cfg.run()? {
+        ServeOutcome::Continuous(r) => Ok(r),
+        ServeOutcome::WholeRequest(_) => unreachable!("continuous bench cell"),
+    }
+}
+
+/// Run the grids. Worker counts are swept under backpressure admission
 /// (all requests served, so throughput compares like for like); each
 /// (scheme, rate) then runs one single-worker shed cell against
-/// `shed_queue_cap` to exercise rejection accounting.
+/// `shed_queue_cap` to exercise rejection accounting. The decode grid
+/// then sweeps sessions × steps × decode schemes through the
+/// continuous engine over an undersized KV pool.
 pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
     let mut workers = opts.workers.clone();
     workers.sort_unstable();
@@ -158,33 +237,31 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
     anyhow::ensure!(!opts.rates_per_ms.is_empty(), "serve-bench: empty rate axis");
 
     let spec = SynthSpec { cost_repeats: opts.cost_repeats, ..SynthSpec::default() };
+    let cal = Calibration::new(opts.calibration);
     let mut cells = Vec::new();
     let mut scaling = Vec::new();
     for &scheme in &opts.schemes {
-        let slowdown = opts
-            .slowdown_override
-            .unwrap_or_else(|| scheme_slowdown_for(scheme, opts.se_ratio, opts.calibration));
+        let slowdown =
+            opts.slowdown_override.unwrap_or_else(|| cal.slowdown(scheme, opts.se_ratio));
         for &rate in &opts.rates_per_ms {
             let cell_cfg = |n_workers: usize, queue_cap: usize, admission: Admission| {
-                SynthServeCfg {
-                    spec,
-                    n_requests: opts.n_requests,
-                    batch_max: opts.batch_max,
-                    n_workers,
-                    queue_cap,
-                    admission,
-                    scheme,
-                    se_ratio: opts.se_ratio,
-                    arrival_per_ms: rate,
-                    slowdown,
-                    seed: opts.seed,
-                    events: None,
-                    replay: None,
-                }
+                let mut cfg = ServeConfig::synthetic()
+                    .spec(spec)
+                    .requests(opts.n_requests)
+                    .batch_max(opts.batch_max)
+                    .workers(n_workers)
+                    .queue_cap(queue_cap)
+                    .admission(admission)
+                    .scheme(scheme)
+                    .se_ratio(opts.se_ratio)
+                    .rate(rate)
+                    .slowdown(slowdown);
+                cfg.seed = opts.seed;
+                cfg
             };
             let mut tps = Vec::with_capacity(workers.len());
             for &w in &workers {
-                let report = serve_synthetic(&cell_cfg(w, opts.queue_cap, Admission::Block))?;
+                let report = run_whole_cell(&cell_cfg(w, opts.queue_cap, Admission::Block))?;
                 tps.push(report.throughput_rps);
                 cells.push(BenchCell { rate_per_ms: rate, report });
             }
@@ -197,19 +274,50 @@ pub fn run(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
                 monotonic,
             });
             // Load-shedding demo: one worker behind a tiny queue.
-            let shed = serve_synthetic(&cell_cfg(1, opts.shed_queue_cap, Admission::Shed))?;
+            let shed = run_whole_cell(&cell_cfg(1, opts.shed_queue_cap, Admission::Shed))?;
             cells.push(BenchCell { rate_per_ms: rate, report: shed });
         }
     }
+
+    // The continuous-decode grid: deliberately undersized KV pool so
+    // eviction traffic (and its scheme-specific re-encryption price)
+    // is live in every cell.
+    let mut decode = Vec::new();
+    for &scheme in &opts.decode_schemes {
+        let slowdown =
+            opts.slowdown_override.unwrap_or_else(|| cal.slowdown(scheme, opts.se_ratio));
+        for &sessions in &opts.decode_sessions {
+            for &steps in &opts.decode_steps {
+                let mut cfg = ServeConfig::synthetic()
+                    .spec(spec)
+                    .batch_max(opts.batch_max)
+                    .scheme(scheme)
+                    .se_ratio(opts.se_ratio)
+                    .slowdown(slowdown)
+                    .mode(ServeMode::Continuous {
+                        sessions,
+                        steps_per_session: steps,
+                        prompt_tokens: opts.decode_prompt,
+                        kv_capacity_blocks: opts.kv_capacity_blocks,
+                        block_tokens: opts.block_tokens,
+                    });
+                cfg.seed = opts.seed;
+                let report = run_decode_cell(&cfg)?;
+                decode.push(DecodeCell { sessions, steps_per_session: steps, report });
+            }
+        }
+    }
+
     Ok(BenchReport {
         mode: if opts.quick { "quick" } else { "full" },
         opts: opts.clone(),
         cells,
         scaling,
+        decode,
     })
 }
 
-/// Serialize the BENCH document (`seal-serve/v2` — schema in README).
+/// Serialize the BENCH document (`seal-serve/v3` — schema in README).
 pub fn document(r: &BenchReport) -> String {
     let cells = r.cells.iter().map(|c| {
         let rep = &c.report;
@@ -217,7 +325,7 @@ pub fn document(r: &BenchReport) -> String {
             ("scheme", Json::str(rep.scheme)),
             ("workers", Json::num(rep.n_workers as f64)),
             ("arrival_per_ms", Json::num(c.rate_per_ms)),
-            ("admission", Json::str(rep.admission.name())),
+            ("admission", Json::str(&rep.admission.to_string())),
             ("queue_cap", Json::num(rep.queue_cap as f64)),
             ("served", Json::num(rep.served as f64)),
             ("rejected", Json::num(rep.rejected as f64)),
@@ -228,6 +336,7 @@ pub fn document(r: &BenchReport) -> String {
             ("mean_latency_us", Json::num(rep.latency_us.mean())),
             ("p50_latency_us", Json::num(rep.latency_us.quantile(0.5) as f64)),
             ("p99_latency_us", Json::num(rep.latency_us.quantile(0.99) as f64)),
+            ("p999_latency_us", Json::num(rep.latency_us.quantile(0.999) as f64)),
             ("max_latency_us", Json::num(rep.latency_us.max as f64)),
             ("mean_queued_us", Json::num(rep.queued_us.mean())),
             ("p50_queued_us", Json::num(rep.queued_us.quantile(0.5) as f64)),
@@ -248,6 +357,27 @@ pub fn document(r: &BenchReport) -> String {
             ("monotonic", Json::Bool(s.monotonic)),
         ])
     });
+    let decode = r.decode.iter().map(|c| {
+        let rep = &c.report;
+        Json::obj(vec![
+            ("scheme", Json::str(rep.scheme)),
+            ("sessions", Json::num(c.sessions as f64)),
+            ("steps_per_session", Json::num(c.steps_per_session as f64)),
+            ("steps", Json::num(rep.steps as f64)),
+            ("rounds", Json::num(rep.rounds as f64)),
+            ("throughput_sps", Json::num(rep.throughput_sps)),
+            ("mean_step_us", Json::num(rep.step_latency_us.mean())),
+            ("p50_step_us", Json::num(rep.step_latency_us.quantile(0.5) as f64)),
+            ("p99_step_us", Json::num(rep.step_latency_us.quantile(0.99) as f64)),
+            ("p999_step_us", Json::num(rep.step_latency_us.quantile(0.999) as f64)),
+            ("kv_allocs", Json::num(rep.pager.allocs as f64)),
+            ("kv_faults", Json::num(rep.pager.faults as f64)),
+            ("kv_evictions", Json::num(rep.pager.evictions as f64)),
+            ("kv_evict_cycles", Json::num(rep.pager.evict_cycles as f64)),
+            ("kv_counter_resets", Json::num(rep.pager.counter_resets as f64)),
+            ("slowdown", Json::num(rep.slowdown)),
+        ])
+    });
     Json::obj(vec![
         ("schema", Json::str(SERVE_BENCH_SCHEMA)),
         ("mode", Json::str(r.mode)),
@@ -262,12 +392,16 @@ pub fn document(r: &BenchReport) -> String {
                 ("shed_queue_cap", Json::num(r.opts.shed_queue_cap as f64)),
                 ("cost_repeats", Json::num(r.opts.cost_repeats as f64)),
                 ("se_ratio", Json::num(r.opts.se_ratio)),
-                ("calibration", Json::str(r.opts.calibration.name())),
+                ("calibration", Json::str(&r.opts.calibration.to_string())),
                 ("monotonic_tolerance", Json::num(MONOTONIC_TOLERANCE)),
+                ("kv_capacity_blocks", Json::num(r.opts.kv_capacity_blocks as f64)),
+                ("block_tokens", Json::num(r.opts.block_tokens as f64)),
+                ("decode_prompt", Json::num(r.opts.decode_prompt as f64)),
             ]),
         ),
         ("cells", Json::arr(cells)),
         ("scaling", Json::arr(scaling)),
+        ("decode_grid", Json::arr(decode)),
         ("all_monotonic", Json::Bool(r.all_monotonic())),
     ])
     .to_string()
@@ -285,7 +419,7 @@ pub fn print_table(r: &BenchReport) {
     for c in &r.cells {
         let rep = &c.report;
         t.row(
-            &format!("{}/{}", rep.scheme, rep.admission.name()),
+            &format!("{}/{}", rep.scheme, rep.admission),
             vec![
                 rep.n_workers as f64,
                 c.rate_per_ms,
@@ -300,6 +434,34 @@ pub fn print_table(r: &BenchReport) {
         );
     }
     t.emit("serve_bench.csv");
+
+    if !r.decode.is_empty() {
+        let mut d = Table::new(
+            "§Serve: continuous decode grid (paged encrypted KV)",
+            &[
+                "sessions", "steps", "steps/s", "p50 us", "p99 us", "p99.9 us", "evictions",
+                "evict cyc", "ctr resets",
+            ],
+        );
+        for c in &r.decode {
+            let rep = &c.report;
+            d.row(
+                rep.scheme,
+                vec![
+                    c.sessions as f64,
+                    c.steps_per_session as f64,
+                    rep.throughput_sps,
+                    rep.step_latency_us.quantile(0.5) as f64,
+                    rep.step_latency_us.quantile(0.99) as f64,
+                    rep.step_latency_us.quantile(0.999) as f64,
+                    rep.pager.evictions as f64,
+                    rep.pager.evict_cycles as f64,
+                    rep.pager.counter_resets as f64,
+                ],
+            );
+        }
+        d.emit("serve_decode.csv");
+    }
 }
 
 /// `seal serve-bench` CLI entry point.
@@ -316,6 +478,16 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         }
         opts.schemes = schemes;
     }
+    if let Some(list) = args.get("decode-schemes") {
+        let mut schemes = Vec::new();
+        for s in list.split(',').filter(|s| !s.trim().is_empty()) {
+            match Scheme::parse(s) {
+                Some(scheme) => schemes.push(scheme),
+                None => anyhow::bail!("unknown decode scheme {s:?}"),
+            }
+        }
+        opts.decode_schemes = schemes;
+    }
     let workers = args.get_list_u64("workers", &[]);
     if !workers.is_empty() {
         opts.workers = workers.iter().map(|&w| w.max(1) as usize).collect();
@@ -324,14 +496,25 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
     if !rates.is_empty() {
         opts.rates_per_ms = rates;
     }
+    let sessions = args.get_list_u64("sessions", &[]);
+    if !sessions.is_empty() {
+        opts.decode_sessions = sessions.iter().map(|&s| s.max(1) as usize).collect();
+    }
+    let steps = args.get_list_u64("steps", &[]);
+    if !steps.is_empty() {
+        opts.decode_steps = steps.iter().map(|&s| s.max(1) as usize).collect();
+    }
     opts.n_requests = args.get_u64("requests", opts.n_requests as u64) as usize;
     opts.batch_max = args.get_u64("batch", opts.batch_max as u64).max(1) as usize;
     opts.queue_cap = args.get_u64("queue", opts.queue_cap as u64).max(1) as usize;
     opts.cost_repeats = args.get_u64("cost", opts.cost_repeats as u64) as usize;
     opts.se_ratio = args.get_f64("ratio", opts.se_ratio);
+    opts.kv_capacity_blocks =
+        args.get_u64("kv-capacity", opts.kv_capacity_blocks as u64).max(1) as usize;
+    opts.block_tokens = args.get_u64("block-tokens", opts.block_tokens as u64).max(1) as usize;
+    opts.decode_prompt = args.get_u64("prompt", opts.decode_prompt as u64).max(1) as usize;
     if let Some(c) = args.get("calibration") {
-        opts.calibration = CalWorkload::parse(c)
-            .ok_or_else(|| anyhow::anyhow!("bad --calibration {c:?} (cnn|transformer)"))?;
+        opts.calibration = c.parse()?;
     }
     if args.get("seed").is_some() {
         opts.seed = Some(args.get_u64("seed", 7));
@@ -358,6 +541,8 @@ mod tests {
     use super::*;
 
     /// Baseline-only grid: no cycle-sim calibration, milliseconds-fast.
+    /// The decode grid is off (empty scheme axis) so whole-request
+    /// shape assertions stay exact.
     fn tiny_opts() -> BenchOptions {
         BenchOptions {
             quick: true,
@@ -373,6 +558,12 @@ mod tests {
             calibration: CalWorkload::Cnn,
             slowdown_override: Some(1.0),
             seed: None,
+            decode_sessions: vec![4],
+            decode_steps: vec![8],
+            decode_schemes: Vec::new(),
+            decode_prompt: 4,
+            kv_capacity_blocks: 4,
+            block_tokens: 4,
         }
     }
 
@@ -383,6 +574,7 @@ mod tests {
         assert_eq!(r.cells.len(), 3);
         assert_eq!(r.scaling.len(), 1);
         assert_eq!(r.scaling[0].workers, vec![1, 2], "axis must be sorted");
+        assert!(r.decode.is_empty(), "empty decode scheme axis skips the grid");
         // Backpressure cells serve everything.
         for c in &r.cells[..2] {
             assert_eq!(c.report.served, 12);
@@ -395,8 +587,43 @@ mod tests {
     }
 
     #[test]
+    fn decode_grid_prices_evictions_per_scheme() {
+        // The tentpole acceptance cell: same paging pattern, three
+        // scheme families, three *different* eviction bills — and the
+        // counter-lifecycle split shows (SEAL resets colocated counter
+        // state on page reuse; GuardNN/Seculator never touch DRAM
+        // counters).
+        let mut opts = tiny_opts();
+        opts.decode_schemes = vec![
+            Scheme::SEAL,
+            Scheme::parse("guardnn").unwrap(),
+            Scheme::parse("seculator").unwrap(),
+        ];
+        let r = run(&opts).unwrap();
+        assert_eq!(r.decode.len(), 3);
+        let by_scheme = |name: &str| {
+            &r.decode.iter().find(|c| c.report.scheme == name).expect("decode cell").report
+        };
+        let seal = by_scheme("SEAL");
+        let guardnn = by_scheme("GuardNN");
+        let seculator = by_scheme("Seculator");
+        // Identical paging pattern (scheme never steers the pager)...
+        assert_eq!(seal.pager.evictions, guardnn.pager.evictions);
+        assert_eq!(seal.pager.evictions, seculator.pager.evictions);
+        assert!(seal.pager.evictions > 0, "undersized pool must evict");
+        // ...with a strictly scheme-ordered price.
+        assert!(seal.pager.evict_cycles > guardnn.pager.evict_cycles);
+        assert!(guardnn.pager.evict_cycles > seculator.pager.evict_cycles);
+        assert!(seculator.pager.evict_cycles > 0);
+        assert!(seal.pager.counter_resets > 0, "SEAL colocates counters with data");
+        assert_eq!(guardnn.pager.counter_resets + seculator.pager.counter_resets, 0);
+    }
+
+    #[test]
     fn document_schema_fields_roundtrip() {
-        let r = run(&tiny_opts()).unwrap();
+        let mut opts = tiny_opts();
+        opts.decode_schemes = vec![Scheme::SEAL];
+        let r = run(&opts).unwrap();
         let doc = document(&r);
         let j = Json::parse(&doc).expect("valid json");
         assert_eq!(j.req("schema").as_str(), Some(SERVE_BENCH_SCHEMA));
@@ -418,6 +645,8 @@ mod tests {
             );
             assert!(c.req("throughput_rps").as_f64().is_some());
             assert!(c.req("p99_latency_us").as_f64().is_some());
+            // v3: the extreme-tail column per whole-request cell.
+            assert!(c.req("p999_latency_us").as_f64().is_some());
             // v2: the queued/service latency split per cell.
             assert!(c.req("p99_queued_us").as_f64().is_some());
             assert!(c.req("p99_service_us").as_f64().is_some());
@@ -426,5 +655,16 @@ mod tests {
         let scaling = j.req("scaling").as_arr().unwrap();
         assert_eq!(scaling[0].req("workers").as_arr().unwrap().len(), 2);
         assert!(scaling[0].req("monotonic").as_bool().is_some());
+        // v3: the decode grid with paging ledger + p99.9 per cell.
+        let decode = j.req("decode_grid").as_arr().unwrap();
+        assert_eq!(decode.len(), 1);
+        let d = &decode[0];
+        assert_eq!(d.req("scheme").as_str(), Some("SEAL"));
+        assert!(d.req("p999_step_us").as_f64().is_some());
+        assert!(d.req("kv_evict_cycles").as_f64().unwrap() > 0.0);
+        assert!(d.req("kv_counter_resets").as_f64().is_some());
+        let engine = j.req("engine");
+        assert!(engine.req("kv_capacity_blocks").as_f64().is_some());
+        assert!(engine.req("block_tokens").as_f64().is_some());
     }
 }

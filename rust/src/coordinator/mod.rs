@@ -1,4 +1,4 @@
-//! Edge-serving coordinator: the L3 request path (DESIGN.md §8).
+//! Edge-serving coordinator: the L3 request path (DESIGN.md §8, §11).
 //!
 //! A coordinator owns a **bounded** admission queue ([`queue`]) with
 //! selectable overflow behaviour — backpressure or counted load
@@ -11,7 +11,14 @@
 //! split at the dequeue timestamp: queue wait is real wall time, and
 //! only the service span is scaled by the secure-memory slowdown the
 //! cycle simulator measured for the chosen scheme (memoized per
-//! scheme × SE ratio through the sweep store — `server::scheme_slowdown`).
+//! scheme × SE ratio through the sweep store — [`server::Calibration`]).
+//!
+//! Everything is configured through one type: [`server::ServeConfig`]
+//! selects backend ([`server::ServeBackend`]) × mode
+//! ([`server::ServeMode`]). Whole-request mode is the path above;
+//! continuous mode ([`session`], DESIGN.md §11) interleaves decode
+//! *steps* from many live sessions, each holding paged
+//! always-encrypted KV state in a [`crate::model::KvPager`].
 //!
 //! [`telemetry`] adds the opt-in structured observability layer
 //! (DESIGN.md §10): `--events out.jsonl` streams one typed JSONL line
@@ -21,9 +28,10 @@
 //! process.
 //!
 //! `seal serve` drives the PJRT path (`--synthetic` swaps in the
-//! artifact-free backend); `seal serve-bench` ([`bench`]) sweeps
-//! schemes × workers × arrival rates over the synthetic backend and
-//! emits `BENCH_serve.json` for CI.
+//! artifact-free backend; `--mode continuous` the decode-session
+//! path); `seal serve-bench` ([`bench`]) sweeps schemes × workers ×
+//! arrival rates plus a many-session decode grid over the synthetic
+//! backend and emits `BENCH_serve.json` for CI.
 
 pub mod backend;
 pub mod batcher;
@@ -31,6 +39,7 @@ pub mod bench;
 pub mod queue;
 pub mod secure_store;
 pub mod server;
+pub mod session;
 pub mod telemetry;
 
 pub use backend::{InferenceBackend, PjrtBackend, SynthSpec, SyntheticBackend};
@@ -38,67 +47,78 @@ pub use batcher::Batcher;
 pub use queue::{BoundedQueue, Pop, PushError};
 pub use secure_store::SecureModelStore;
 pub use server::{
-    poisson_gap_ms, run_engine, scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic,
-    Admission, ArrivalPlan, CalWorkload, EngineCfg, EngineStats, ServeCfg, ServeReport,
-    SynthServeCfg,
+    poisson_gap_ms, run_engine, Admission, ArrivalPlan, CalWorkload, Calibration, EngineCfg,
+    EngineStats, ServeBackend, ServeConfig, ServeMode, ServeOutcome, ServeReport,
 };
+#[allow(deprecated)]
+pub use server::{scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic, ServeCfg, SynthServeCfg};
+pub use session::{run_continuous, ContinuousCfg, ContinuousReport, DecodeSession};
 pub use telemetry::{Event, EventSink, ParsedEvent, RejectReason, SharedBuf, Trace};
 
 use crate::util::cli::Args;
 
-/// `seal serve` CLI entry point. `--synthetic` serves the
-/// artifact-free backend (the CI record/replay path); otherwise the
-/// PJRT artifact path is driven.
+/// `seal serve` CLI entry point: parse flags into one [`ServeConfig`].
+/// `--synthetic` serves the artifact-free backend (the CI
+/// record/replay path); `--mode continuous` switches to step-level
+/// decode batching with a paged encrypted KV cache.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
-    let admission_name = args.get_or("admission", "block");
-    let admission = Admission::parse(&admission_name)
-        .ok_or_else(|| anyhow::anyhow!("bad --admission {admission_name:?} (block|shed)"))?;
+    let admission: Admission = args.get_or("admission", "block").parse()?;
     let batch = args.get_u64("batch", 8).max(1) as usize;
     let scheme = crate::sim::Scheme::parse(&args.get_or("scheme", "seal"))
         .ok_or_else(|| anyhow::anyhow!("bad scheme"))?;
-    let seed = args.get("seed").map(|_| args.get_u64("seed", 7));
-    let events = args.get("events").map(std::path::PathBuf::from);
-    let replay = args.get("replay").map(std::path::PathBuf::from);
+    let calibration: CalWorkload = args.get_or("calibration", "cnn").parse()?;
 
-    let report = if args.has("synthetic") {
-        let spec = SynthSpec {
+    let mut cfg = if args.has("synthetic") {
+        ServeConfig::synthetic().spec(SynthSpec {
             cost_repeats: args.get_u64("cost", 1).max(1) as usize,
             ..SynthSpec::default()
-        };
-        server::serve_synthetic(&SynthServeCfg {
-            spec,
-            n_requests: args.get_u64("requests", 64) as usize,
-            batch_max: batch,
-            n_workers: args.get_u64("workers", 2).max(1) as usize,
-            queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
-            admission,
-            scheme,
-            se_ratio: args.get_f64("ratio", 0.5),
-            arrival_per_ms: args.get_f64("rate", 2.0),
-            slowdown: args.get_f64("slowdown", 0.0),
-            seed,
-            events,
-            replay,
-        })?
+        })
     } else {
-        server::serve(ServeCfg {
-            model: args.get_or("model", "vgg16m"),
-            artifacts: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
-            n_requests: args.get_u64("requests", 64) as usize,
-            batch_max: batch,
-            n_workers: args.get_u64("workers", 2).max(1) as usize,
-            queue_cap: args.get_u64("queue", 4 * batch as u64).max(1) as usize,
-            admission,
-            scheme,
-            se_ratio: args.get_f64("ratio", 0.5),
-            arrival_per_ms: args.get_f64("rate", 2.0),
-            seed,
-            events,
-            replay,
-            use_pallas: !args.has("no-pallas"),
-        })?
+        ServeConfig::pjrt(
+            args.get_or("model", "vgg16m"),
+            std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
+        )
+        .use_pallas(!args.has("no-pallas"))
     };
-    report.print();
+    cfg = cfg
+        .requests(args.get_u64("requests", 64) as usize)
+        .batch_max(batch)
+        .workers(args.get_u64("workers", 2).max(1) as usize)
+        .queue_cap(args.get_u64("queue", 4 * batch as u64).max(1) as usize)
+        .admission(admission)
+        .scheme(scheme)
+        .se_ratio(args.get_f64("ratio", 0.5))
+        .rate(args.get_f64("rate", 2.0))
+        .slowdown(args.get_f64("slowdown", 0.0))
+        .calibration(calibration);
+    if args.get("seed").is_some() {
+        cfg = cfg.seed(args.get_u64("seed", 7));
+    }
+    if let Some(p) = args.get("events") {
+        cfg = cfg.events(std::path::PathBuf::from(p));
+    }
+    if let Some(p) = args.get("replay") {
+        cfg = cfg.replay(std::path::PathBuf::from(p));
+    }
+
+    match args.get_or("mode", "whole").as_str() {
+        "whole" | "whole_request" => {}
+        "continuous" => {
+            let kv = crate::model::KvPagerCfg::default();
+            cfg = cfg.mode(ServeMode::Continuous {
+                sessions: args.get_u64("sessions", 32).max(1) as usize,
+                steps_per_session: args.get_u64("steps", 64).max(1) as usize,
+                prompt_tokens: args.get_u64("prompt", 16).max(1) as usize,
+                kv_capacity_blocks: args
+                    .get_u64("kv-capacity", kv.capacity_blocks as u64)
+                    .max(1) as usize,
+                block_tokens: args.get_u64("block-tokens", kv.block_tokens as u64).max(1) as usize,
+            });
+        }
+        other => anyhow::bail!("bad --mode {other:?} (whole|continuous)"),
+    }
+
+    cfg.run()?.print();
     Ok(())
 }
 

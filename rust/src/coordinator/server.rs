@@ -1,8 +1,19 @@
-//! Multi-worker serving engine: coordinator → **bounded** admission
-//! queue → N workers, each with its own dynamic batcher and its own
-//! decrypted on-chip view of the sealed model (DESIGN.md §8).
+//! Multi-worker serving engine behind the unified serving-session API
+//! ([`ServeConfig`], DESIGN.md §8/§11).
 //!
-//! Request path: a request producer (Poisson by default, or a
+//! One config type drives every serve shape: backend
+//! ([`ServeBackend::Pjrt`] — per-worker PJRT runtimes over real
+//! artifacts — or [`ServeBackend::Synthetic`], the artifact-free
+//! classifier) × mode ([`ServeMode::WholeRequest`] — the classic
+//! request path below — or [`ServeMode::Continuous`], step-level
+//! decode batching over many live sessions with a paged encrypted KV
+//! cache, implemented in [`super::session`]). Build with
+//! [`ServeConfig::synthetic`] / [`ServeConfig::pjrt`], chain setters,
+//! call [`ServeConfig::run`]. The pre-PR-7 `ServeCfg`/`SynthServeCfg`
+//! pair and the `scheme_slowdown*` free functions survive one release
+//! as deprecated shims over this API.
+//!
+//! Whole-request path: a request producer (Poisson by default, or a
 //! deterministic recorded/synthesized schedule via
 //! [`ArrivalPlan::Trace`] — `seal serve --replay`) admits into a
 //! bounded [`BoundedQueue`] — [`Admission::Shed`] load-sheds when the
@@ -12,21 +23,18 @@
 //! load) vs [`ServeReport::rejected_closed`] (queue closed on a
 //! shutdown path — e.g. every worker died). Worker threads drain the
 //! queue through per-worker [`Batcher`]s and execute batches on their
-//! own [`InferenceBackend`] (a per-worker PJRT runtime + executable in
-//! `seal serve`; the pure-Rust synthetic classifier in
-//! `seal serve-bench` and tests).
+//! own [`InferenceBackend`].
 //!
 //! Per-request latency is split at the dequeue timestamp (DESIGN.md
 //! §10): **queued** (arrival → dequeue) is real wall time the memory
 //! scheme never caused and is reported unscaled; **service** (dequeue
 //! → completion) is multiplied by the *memory-scheme slowdown factor*
-//! the cycle simulator measured for this model class (the extra time
-//! the edge accelerator would spend behind its AES engines). The
-//! factor is memoized per (scheme, SE ratio): in-process via a map,
-//! across processes via the sweep results store
-//! (`SweepSpec::serve_calibration` → `results/sweep_serve_cal_*.json`),
-//! so the simulator runs at most once per key instead of once per
-//! invocation.
+//! the cycle simulator measured for this model class. The factor is
+//! owned by [`Calibration`]: memoized per (scheme, effective SE ratio,
+//! workload) in-process, persisted across processes via the sweep
+//! results store (`SweepSpec::serve_calibration*` →
+//! `results/sweep_serve_cal_*.json`), so the simulator runs at most
+//! once per key instead of once per invocation.
 //!
 //! With `--events` set, every lifecycle transition is emitted as one
 //! JSONL line through [`super::telemetry::EventSink`] (schema
@@ -34,11 +42,12 @@
 //! are untouched and the hot path pays nothing.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::model::kv_pager::KvPagerCfg;
 use crate::model::manifest::{Dataset, Manifest};
 use crate::sim::Scheme;
 use crate::stats::Histogram;
@@ -49,6 +58,7 @@ use super::backend::{InferenceBackend, PjrtBackend, SyntheticBackend, SynthSpec}
 use super::batcher::Batcher;
 use super::queue::BoundedQueue;
 use super::secure_store::SecureModelStore;
+use super::session::{self, ContinuousReport};
 use super::telemetry::{self, Event, EventSink, RejectReason};
 
 /// What the coordinator does when the admission queue is full.
@@ -60,28 +70,69 @@ pub enum Admission {
     Shed,
 }
 
-impl Admission {
-    pub fn parse(s: &str) -> Option<Admission> {
-        match s {
-            "block" => Some(Admission::Block),
-            "shed" => Some(Admission::Shed),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
+impl std::fmt::Display for Admission {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
             Admission::Block => "block",
             Admission::Shed => "shed",
+        })
+    }
+}
+
+impl std::str::FromStr for Admission {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Admission> {
+        match s {
+            "block" => Ok(Admission::Block),
+            "shed" => Ok(Admission::Shed),
+            _ => anyhow::bail!("bad admission policy {s:?} (block|shed)"),
         }
     }
 }
 
-/// `seal serve` configuration (the PJRT/artifact path).
+// -- the unified serving-session config --------------------------------------
+
+/// Which inference backend serves the requests.
 #[derive(Debug, Clone)]
-pub struct ServeCfg {
-    pub model: String,
-    pub artifacts: std::path::PathBuf,
+pub enum ServeBackend {
+    /// Real artifacts: every worker stands up its own PJRT runtime and
+    /// decrypts its own on-chip view of the sealed model.
+    Pjrt { model: String, artifacts: PathBuf, use_pallas: bool },
+    /// The artifact-free synthetic classifier (`seal serve-bench`, CI
+    /// serve-smoke, tests).
+    Synthetic { spec: SynthSpec },
+}
+
+/// Which execution mode the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// The classic path: batch whole requests, drain to completion.
+    WholeRequest,
+    /// Continuous batching: interleave decode *steps* from many live
+    /// sessions, each with paged always-encrypted KV state
+    /// (`--mode continuous`; [`super::session::run_continuous`]).
+    Continuous {
+        /// Concurrent decode sessions (`--sessions`).
+        sessions: usize,
+        /// Decode steps per session (`--steps`).
+        steps_per_session: usize,
+        /// Prefill KV length before the first decode step (`--prompt`).
+        prompt_tokens: usize,
+        /// Physical KV pool size in blocks (`--kv-capacity`).
+        kv_capacity_blocks: usize,
+        /// Tokens per KV block (`--block-tokens`).
+        block_tokens: usize,
+    },
+}
+
+/// The unified serving-session configuration: one builder for every
+/// backend × mode combination. Construct via [`ServeConfig::synthetic`]
+/// or [`ServeConfig::pjrt`], chain the setters, then [`ServeConfig::run`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub backend: ServeBackend,
+    pub mode: ServeMode,
     pub n_requests: usize,
     pub batch_max: usize,
     /// Worker threads, each owning its own runtime + decrypted view.
@@ -93,20 +144,291 @@ pub struct ServeCfg {
     pub se_ratio: f64,
     /// Mean request arrivals per millisecond (Poisson).
     pub arrival_per_ms: f64,
-    /// Arrival seed (`--seed`); `None` keeps the historical default 7,
-    /// so existing runs reproduce byte-for-byte.
+    /// `Some(f > 0)` skips cycle-sim calibration and uses `f` directly
+    /// (tests, pre-calibrated bench cells).
+    pub slowdown_override: Option<f64>,
+    /// Which cycle-sim workload calibrates the slowdown factor when no
+    /// override is set.
+    pub calibration: CalWorkload,
+    /// Arrival seed (`--seed`); `None` keeps the historical per-path
+    /// defaults, so existing runs reproduce byte-for-byte.
     pub seed: Option<u64>,
     /// Opt-in JSONL event stream destination (`--events`).
-    pub events: Option<std::path::PathBuf>,
+    pub events: Option<PathBuf>,
     /// Replay trace: drive arrivals from this recorded/synthesized
     /// JSONL schedule instead of the Poisson process (`--replay`).
     /// The trace's arrival count overrides `n_requests`.
-    pub replay: Option<std::path::PathBuf>,
-    /// Serve through the Pallas-kernel predict artifact when available.
+    pub replay: Option<PathBuf>,
+}
+
+/// What [`ServeConfig::run`] produced, by mode.
+#[derive(Debug)]
+pub enum ServeOutcome {
+    WholeRequest(ServeReport),
+    Continuous(ContinuousReport),
+}
+
+impl ServeOutcome {
+    pub fn print(&self) {
+        match self {
+            ServeOutcome::WholeRequest(r) => r.print(),
+            ServeOutcome::Continuous(r) => r.print(),
+        }
+    }
+
+    pub fn whole_request(&self) -> Option<&ServeReport> {
+        match self {
+            ServeOutcome::WholeRequest(r) => Some(r),
+            ServeOutcome::Continuous(_) => None,
+        }
+    }
+
+    pub fn continuous(&self) -> Option<&ContinuousReport> {
+        match self {
+            ServeOutcome::Continuous(r) => Some(r),
+            ServeOutcome::WholeRequest(_) => None,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn base(backend: ServeBackend) -> ServeConfig {
+        ServeConfig {
+            backend,
+            mode: ServeMode::WholeRequest,
+            n_requests: 64,
+            batch_max: 8,
+            n_workers: 2,
+            queue_cap: 32,
+            admission: Admission::Block,
+            scheme: Scheme::SEAL,
+            se_ratio: 0.5,
+            arrival_per_ms: 2.0,
+            slowdown_override: None,
+            calibration: CalWorkload::Cnn,
+            seed: None,
+            events: None,
+            replay: None,
+        }
+    }
+
+    /// Serve the artifact-free synthetic workload (default spec;
+    /// override with [`ServeConfig::spec`]).
+    pub fn synthetic() -> ServeConfig {
+        ServeConfig::base(ServeBackend::Synthetic { spec: SynthSpec::default() })
+    }
+
+    /// Serve through real PJRT artifacts (Pallas predict preferred
+    /// when present; [`ServeConfig::use_pallas`] opts out).
+    pub fn pjrt(model: impl Into<String>, artifacts: impl Into<PathBuf>) -> ServeConfig {
+        ServeConfig::base(ServeBackend::Pjrt {
+            model: model.into(),
+            artifacts: artifacts.into(),
+            use_pallas: true,
+        })
+    }
+
+    /// Replace the synthetic workload spec (switches the backend to
+    /// synthetic if it was not already).
+    pub fn spec(mut self, spec: SynthSpec) -> Self {
+        self.backend = ServeBackend::Synthetic { spec };
+        self
+    }
+
+    /// Prefer/avoid the Pallas predict artifact (PJRT backend only).
+    pub fn use_pallas(mut self, yes: bool) -> Self {
+        if let ServeBackend::Pjrt { use_pallas, .. } = &mut self.backend {
+            *use_pallas = yes;
+        }
+        self
+    }
+
+    pub fn mode(mut self, mode: ServeMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Continuous-batching decode mode with the default KV geometry
+    /// (prompt 16, pool [`KvPagerCfg::default`]); use
+    /// [`ServeConfig::mode`] for full control.
+    pub fn continuous(self, sessions: usize, steps_per_session: usize) -> Self {
+        let kv = KvPagerCfg::default();
+        self.mode(ServeMode::Continuous {
+            sessions,
+            steps_per_session,
+            prompt_tokens: 16,
+            kv_capacity_blocks: kv.capacity_blocks,
+            block_tokens: kv.block_tokens,
+        })
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.n_requests = n;
+        self
+    }
+
+    pub fn batch_max(mut self, n: usize) -> Self {
+        self.batch_max = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.n_workers = n;
+        self
+    }
+
+    pub fn queue_cap(mut self, n: usize) -> Self {
+        self.queue_cap = n;
+        self
+    }
+
+    pub fn admission(mut self, a: Admission) -> Self {
+        self.admission = a;
+        self
+    }
+
+    pub fn scheme(mut self, s: Scheme) -> Self {
+        self.scheme = s;
+        self
+    }
+
+    pub fn se_ratio(mut self, r: f64) -> Self {
+        self.se_ratio = r;
+        self
+    }
+
+    pub fn rate(mut self, per_ms: f64) -> Self {
+        self.arrival_per_ms = per_ms;
+        self
+    }
+
+    /// Skip cycle-sim calibration and use this slowdown factor
+    /// directly (`f <= 0` restores calibration — the historical
+    /// `slowdown: 0.0` convention).
+    pub fn slowdown(mut self, f: f64) -> Self {
+        self.slowdown_override = (f > 0.0).then_some(f);
+        self
+    }
+
+    pub fn calibration(mut self, w: CalWorkload) -> Self {
+        self.calibration = w;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn events(mut self, path: impl Into<PathBuf>) -> Self {
+        self.events = Some(path.into());
+        self
+    }
+
+    pub fn replay(mut self, path: impl Into<PathBuf>) -> Self {
+        self.replay = Some(path.into());
+        self
+    }
+
+    /// The slowdown factor this run will apply: the override when set,
+    /// otherwise the [`Calibration`] for the configured workload.
+    pub fn resolve_slowdown(&self) -> f64 {
+        match self.slowdown_override {
+            Some(f) if f > 0.0 => f,
+            _ => Calibration::new(self.calibration).slowdown(self.scheme, self.se_ratio),
+        }
+    }
+
+    /// Run the configured serve: dispatches on backend × mode.
+    pub fn run(&self) -> crate::Result<ServeOutcome> {
+        match (&self.backend, self.mode) {
+            (
+                ServeBackend::Synthetic { spec },
+                ServeMode::Continuous {
+                    sessions,
+                    steps_per_session,
+                    prompt_tokens,
+                    kv_capacity_blocks,
+                    block_tokens,
+                },
+            ) => {
+                let ccfg = session::ContinuousCfg {
+                    sessions,
+                    steps_per_session,
+                    prompt_tokens,
+                    batch_max: self.batch_max.max(1),
+                    kv: KvPagerCfg {
+                        capacity_blocks: kv_capacity_blocks,
+                        block_tokens,
+                        ..KvPagerCfg::default()
+                    },
+                    scheme: self.scheme,
+                    se_ratio: self.se_ratio,
+                    slowdown: self.resolve_slowdown(),
+                    seed: self.seed.unwrap_or(spec.seed ^ 0xc0de),
+                    events: open_sink(self.events.as_deref(), self.scheme.name())?,
+                };
+                Ok(ServeOutcome::Continuous(session::run_continuous(spec, &ccfg)?))
+            }
+            (ServeBackend::Pjrt { .. }, ServeMode::Continuous { .. }) => anyhow::bail!(
+                "continuous decode mode currently requires the synthetic backend \
+                 (--synthetic); the PJRT path serves whole requests"
+            ),
+            (ServeBackend::Synthetic { spec }, ServeMode::WholeRequest) => {
+                Ok(ServeOutcome::WholeRequest(run_synthetic_whole(self, spec)?))
+            }
+            (ServeBackend::Pjrt { model, artifacts, use_pallas }, ServeMode::WholeRequest) => {
+                Ok(ServeOutcome::WholeRequest(run_pjrt_whole(self, model, artifacts, *use_pallas)?))
+            }
+        }
+    }
+}
+
+// -- deprecated pre-unification shims ----------------------------------------
+
+/// Pre-PR-7 `seal serve` configuration (the PJRT/artifact path).
+#[deprecated(note = "superseded by ServeConfig::pjrt(model, artifacts) — one unified \
+                     serving-session config for both backends and modes")]
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub model: String,
+    pub artifacts: PathBuf,
+    pub n_requests: usize,
+    pub batch_max: usize,
+    pub n_workers: usize,
+    pub queue_cap: usize,
+    pub admission: Admission,
+    pub scheme: Scheme,
+    pub se_ratio: f64,
+    pub arrival_per_ms: f64,
+    pub seed: Option<u64>,
+    pub events: Option<PathBuf>,
+    pub replay: Option<PathBuf>,
     pub use_pallas: bool,
 }
 
-/// Synthetic-backend serving configuration (`seal serve-bench`, tests).
+#[allow(deprecated)]
+impl ServeCfg {
+    fn into_config(self) -> ServeConfig {
+        let mut cfg = ServeConfig::pjrt(self.model, self.artifacts).use_pallas(self.use_pallas);
+        cfg.n_requests = self.n_requests;
+        cfg.batch_max = self.batch_max;
+        cfg.n_workers = self.n_workers;
+        cfg.queue_cap = self.queue_cap;
+        cfg.admission = self.admission;
+        cfg.scheme = self.scheme;
+        cfg.se_ratio = self.se_ratio;
+        cfg.arrival_per_ms = self.arrival_per_ms;
+        cfg.seed = self.seed;
+        cfg.events = self.events;
+        cfg.replay = self.replay;
+        cfg
+    }
+}
+
+/// Pre-PR-7 synthetic-backend serving configuration.
+#[deprecated(note = "superseded by ServeConfig::synthetic() — one unified serving-session \
+                     config for both backends and modes")]
 #[derive(Debug, Clone)]
 pub struct SynthServeCfg {
     pub spec: SynthSpec,
@@ -119,15 +441,53 @@ pub struct SynthServeCfg {
     pub se_ratio: f64,
     pub arrival_per_ms: f64,
     /// `> 0.0` skips calibration and uses this factor directly;
-    /// `0.0` calibrates through [`scheme_slowdown`].
+    /// `0.0` calibrates through the CNN workload.
     pub slowdown: f64,
-    /// Arrival seed; `None` keeps the historical `spec.seed ^ 0xa771`.
     pub seed: Option<u64>,
-    /// Opt-in JSONL event stream destination.
-    pub events: Option<std::path::PathBuf>,
-    /// Replay trace overriding the Poisson arrivals (and `n_requests`).
-    pub replay: Option<std::path::PathBuf>,
+    pub events: Option<PathBuf>,
+    pub replay: Option<PathBuf>,
 }
+
+#[allow(deprecated)]
+impl SynthServeCfg {
+    fn as_config(&self) -> ServeConfig {
+        let mut cfg = ServeConfig::synthetic().spec(self.spec).slowdown(self.slowdown);
+        cfg.n_requests = self.n_requests;
+        cfg.batch_max = self.batch_max;
+        cfg.n_workers = self.n_workers;
+        cfg.queue_cap = self.queue_cap;
+        cfg.admission = self.admission;
+        cfg.scheme = self.scheme;
+        cfg.se_ratio = self.se_ratio;
+        cfg.arrival_per_ms = self.arrival_per_ms;
+        cfg.seed = self.seed;
+        cfg.events = self.events.clone();
+        cfg.replay = self.replay.clone();
+        cfg
+    }
+}
+
+/// Pre-PR-7 entry point for the PJRT path.
+#[deprecated(note = "use ServeConfig::pjrt(model, artifacts).run()")]
+#[allow(deprecated)]
+pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
+    match cfg.into_config().run()? {
+        ServeOutcome::WholeRequest(r) => Ok(r),
+        ServeOutcome::Continuous(_) => unreachable!("ServeCfg always runs whole-request mode"),
+    }
+}
+
+/// Pre-PR-7 entry point for the synthetic path.
+#[deprecated(note = "use ServeConfig::synthetic().run()")]
+#[allow(deprecated)]
+pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
+    match cfg.as_config().run()? {
+        ServeOutcome::WholeRequest(r) => Ok(r),
+        ServeOutcome::Continuous(_) => unreachable!("SynthServeCfg always runs whole-request mode"),
+    }
+}
+
+// -- the whole-request report ------------------------------------------------
 
 #[derive(Debug)]
 pub struct ServeReport {
@@ -165,10 +525,7 @@ impl ServeReport {
     pub fn print(&self) {
         println!(
             "serve report ({}, {} worker(s), queue {} [{}])",
-            self.scheme,
-            self.n_workers,
-            self.queue_cap,
-            self.admission.name()
+            self.scheme, self.n_workers, self.queue_cap, self.admission
         );
         println!("  served          : {} ({} batches)", self.served, self.n_batches);
         println!(
@@ -212,19 +569,23 @@ pub enum CalWorkload {
     TransformerDecode,
 }
 
-impl CalWorkload {
-    pub fn parse(s: &str) -> Option<CalWorkload> {
-        match s {
-            "cnn" => Some(CalWorkload::Cnn),
-            "transformer" | "transformer_decode" => Some(CalWorkload::TransformerDecode),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
+impl std::fmt::Display for CalWorkload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
             CalWorkload::Cnn => "cnn",
             CalWorkload::TransformerDecode => "transformer_decode",
+        })
+    }
+}
+
+impl std::str::FromStr for CalWorkload {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<CalWorkload> {
+        match s {
+            "cnn" => Ok(CalWorkload::Cnn),
+            "transformer" | "transformer_decode" => Ok(CalWorkload::TransformerDecode),
+            _ => anyhow::bail!("bad calibration workload {s:?} (cnn|transformer)"),
         }
     }
 }
@@ -234,60 +595,89 @@ impl CalWorkload {
 static SLOWDOWN_MEMO: OnceLock<Mutex<HashMap<(&'static str, u64, CalWorkload), f64>>> =
     OnceLock::new();
 
-/// Memory-scheme slowdown factor from the cycle simulator: cycles of a
-/// representative conv layer under `scheme` over baseline cycles.
+/// Owner of the memory-scheme slowdown factor: cycles of a
+/// representative layer under a scheme over baseline cycles, from the
+/// cycle simulator, for one calibration workload.
 ///
 /// Memoized per (scheme, effective se_ratio, workload): in-process via
 /// [`SLOWDOWN_MEMO`], across processes via the sweep results store
-/// (the `SweepSpec::serve_calibration` grid persists to
-/// `results/sweep_serve_cal_<hash>.json`), so startup pays the
-/// simulator at most once per key. Non-SE schemes ignore the ratio, so
-/// the key (and the persisted calibration spec) uses the *effective*
-/// ratio — sweeping `se_ratio` over a non-SE scheme hits one memo
-/// entry and one store file instead of minting duplicates per raw
-/// ratio value.
-pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
-    scheme_slowdown_for(scheme, se_ratio, CalWorkload::Cnn)
+/// (the [`Calibration::spec`] grid persists to
+/// `results/sweep_serve_cal_*.json`), so startup pays the simulator at
+/// most once per key. Non-SE schemes ignore the ratio, so the key (and
+/// the persisted calibration spec) uses the *effective* ratio —
+/// sweeping `se_ratio` over a non-SE scheme hits one memo entry and
+/// one store file instead of minting duplicates per raw ratio value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Calibration {
+    workload: CalWorkload,
 }
 
-/// [`scheme_slowdown`] calibrated against an explicit workload class
-/// (`seal serve-bench --calibration transformer` routes here).
-pub fn scheme_slowdown_for(scheme: Scheme, se_ratio: f64, workload: CalWorkload) -> f64 {
-    if scheme == Scheme::BASELINE {
-        return 1.0;
+impl Calibration {
+    pub fn new(workload: CalWorkload) -> Calibration {
+        Calibration { workload }
     }
-    let eff_ratio = scheme.effective_ratio(se_ratio);
-    let key = (scheme.name(), eff_ratio.to_bits(), workload);
-    let memo = SLOWDOWN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(&f) = memo.lock().unwrap().get(&key) {
-        return f;
-    }
-    let f = compute_scheme_slowdown(scheme, eff_ratio, workload);
-    memo.lock().unwrap().insert(key, f);
-    f
-}
 
-fn compute_scheme_slowdown(scheme: Scheme, eff_ratio: f64, workload: CalWorkload) -> f64 {
-    let spec = match workload {
-        CalWorkload::Cnn => SweepSpec::serve_calibration(scheme, eff_ratio),
-        CalWorkload::TransformerDecode => {
-            SweepSpec::serve_calibration_transformer(scheme, eff_ratio)
+    pub fn workload(&self) -> CalWorkload {
+        self.workload
+    }
+
+    /// The persisted sweep-store key for one (scheme, ratio) pair: the
+    /// historical `SweepSpec::serve_calibration*` constructors with the
+    /// *effective* ratio applied, so store hashes are byte-identical to
+    /// every pre-PR-7 run.
+    pub fn spec(&self, scheme: Scheme, se_ratio: f64) -> SweepSpec {
+        let eff_ratio = scheme.effective_ratio(se_ratio);
+        match self.workload {
+            CalWorkload::Cnn => SweepSpec::serve_calibration(scheme, eff_ratio),
+            CalWorkload::TransformerDecode => {
+                SweepSpec::serve_calibration_transformer(scheme, eff_ratio)
+            }
         }
-    };
-    // Two cells only: run inline rather than spinning up a pool (and
-    // fall back to an unpersisted run when results/ is unwritable).
-    let rows = match store::load_or_run_with(&spec, &RunnerCfg { threads: 1 }) {
-        Ok(r) => r.rows,
-        Err(_) => runner::run_sequential(&spec),
-    };
-    let enc =
-        rows.iter().find(|r| r.scheme == scheme.name() && (r.ratio - eff_ratio).abs() < 1e-9);
-    let base = rows.iter().find(|r| r.scheme == "Baseline");
-    match (enc, base) {
-        (Some(e), Some(b)) => e.sim.cycles / b.sim.cycles.max(1.0),
-        // Unreachable: serve_calibration always contains both cells.
-        _ => 1.0,
     }
+
+    /// The slowdown factor for `scheme` at `se_ratio` (Baseline is
+    /// 1.0 by definition; everything else is memoized cycle-sim).
+    pub fn slowdown(&self, scheme: Scheme, se_ratio: f64) -> f64 {
+        if scheme == Scheme::BASELINE {
+            return 1.0;
+        }
+        let eff_ratio = scheme.effective_ratio(se_ratio);
+        let key = (scheme.name(), eff_ratio.to_bits(), self.workload);
+        let memo = SLOWDOWN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(&f) = memo.lock().unwrap().get(&key) {
+            return f;
+        }
+        let spec = self.spec(scheme, se_ratio);
+        // Two cells only: run inline rather than spinning up a pool
+        // (and fall back to an unpersisted run when results/ is
+        // unwritable).
+        let rows = match store::load_or_run_with(&spec, &RunnerCfg { threads: 1 }) {
+            Ok(r) => r.rows,
+            Err(_) => runner::run_sequential(&spec),
+        };
+        let enc =
+            rows.iter().find(|r| r.scheme == scheme.name() && (r.ratio - eff_ratio).abs() < 1e-9);
+        let base = rows.iter().find(|r| r.scheme == "Baseline");
+        let f = match (enc, base) {
+            (Some(e), Some(b)) => e.sim.cycles / b.sim.cycles.max(1.0),
+            // Unreachable: the calibration specs always contain both cells.
+            _ => 1.0,
+        };
+        memo.lock().unwrap().insert(key, f);
+        f
+    }
+}
+
+/// Pre-PR-7 free function (CNN workload).
+#[deprecated(note = "use Calibration::new(CalWorkload::Cnn).slowdown(scheme, se_ratio)")]
+pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
+    Calibration::new(CalWorkload::Cnn).slowdown(scheme, se_ratio)
+}
+
+/// Pre-PR-7 free function (explicit workload).
+#[deprecated(note = "use Calibration::new(workload).slowdown(scheme, se_ratio)")]
+pub fn scheme_slowdown_for(scheme: Scheme, se_ratio: f64, workload: CalWorkload) -> f64 {
+    Calibration::new(workload).slowdown(scheme, se_ratio)
 }
 
 // -- request generation ------------------------------------------------------
@@ -688,14 +1078,19 @@ fn open_sink(path: Option<&Path>, scheme: &str) -> crate::Result<Option<Arc<Even
     }
 }
 
-/// Serve through real PJRT artifacts: every worker stands up its own
-/// runtime, loads the predict executable, and decrypts its own on-chip
-/// view of the (singly sealed) model.
-pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
-    let man = Manifest::load(&cfg.artifacts)?;
+/// Whole-request serving through real PJRT artifacts: every worker
+/// stands up its own runtime, loads the predict executable, and
+/// decrypts its own on-chip view of the (singly sealed) model.
+fn run_pjrt_whole(
+    cfg: &ServeConfig,
+    model: &str,
+    artifacts: &Path,
+    use_pallas: bool,
+) -> crate::Result<ServeReport> {
+    let man = Manifest::load(artifacts)?;
     let data = Dataset::load(&man)?;
-    let info = man.model(&cfg.model)?.clone();
-    let slowdown = scheme_slowdown(cfg.scheme, cfg.se_ratio);
+    let info = man.model(model)?.clone();
+    let slowdown = cfg.resolve_slowdown();
 
     // Arrival schedule: Poisson (historical seed 7 unless --seed), or
     // a replayed trace whose length overrides --requests.
@@ -719,20 +1114,19 @@ pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
     };
 
     // Seal once; each worker performs its own on-chip decrypt.
-    let theta = man
-        .load_f32(&format!("victim_{}.bin", cfg.model))
-        .or_else(|_| man.theta_init(&cfg.model))?;
+    let theta =
+        man.load_f32(&format!("victim_{model}.bin")).or_else(|_| man.theta_init(model))?;
     let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
     let encrypted_lines = sealed.encrypted_lines();
     let total_lines = sealed.n_lines();
 
     // Resolve the predict executable once (the quickstart Pallas
     // artifact exists for vgg16m only); workers just load it.
-    let pallas_name = format!("predict_pallas_{}.hlo.txt", cfg.model);
-    let (artifact, batch_cap) = if cfg.use_pallas && man.hlo_path(&pallas_name).exists() {
+    let pallas_name = format!("predict_pallas_{model}.hlo.txt");
+    let (artifact, batch_cap) = if use_pallas && man.hlo_path(&pallas_name).exists() {
         (pallas_name, man.batch_pallas)
     } else {
-        (format!("predict_{}.hlo.txt", cfg.model), man.batch_eval)
+        (format!("predict_{model}.hlo.txt"), man.batch_eval)
     };
 
     let ecfg = EngineCfg {
@@ -752,15 +1146,14 @@ pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
     Ok(report_from(cfg.scheme, &ecfg, stats, encrypted_lines, total_lines))
 }
 
-/// Serve the synthetic (artifact-free) workload: the substrate of
-/// `seal serve-bench`, `seal serve --synthetic`, CI serve-smoke, and
-/// the coordinator tests.
-pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
-    let spec = cfg.spec;
+/// Whole-request serving over the synthetic (artifact-free) workload:
+/// the substrate of `seal serve-bench`, `seal serve --synthetic`, CI
+/// serve-smoke, and the coordinator tests.
+fn run_synthetic_whole(cfg: &ServeConfig, spec: &SynthSpec) -> crate::Result<ServeReport> {
     let info = spec.model_info();
     let theta = spec.theta();
     let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
-    let reference = SyntheticBackend::from_theta(&theta, &spec);
+    let reference = SyntheticBackend::from_theta(&theta, spec);
     let (arrival, n_requests) = arrival_plan(
         cfg.replay.as_deref(),
         cfg.arrival_per_ms,
@@ -768,8 +1161,7 @@ pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
         cfg.n_requests,
     )?;
     let inputs = spec.requests(n_requests, &reference);
-    let slowdown =
-        if cfg.slowdown > 0.0 { cfg.slowdown } else { scheme_slowdown(cfg.scheme, cfg.se_ratio) };
+    let slowdown = cfg.resolve_slowdown();
 
     let ecfg = EngineCfg {
         n_workers: cfg.n_workers.max(1),
@@ -785,7 +1177,7 @@ pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
     let total_lines = sealed.n_lines();
     let stats = run_engine(&ecfg, inputs, |_worker| {
         // Per-worker on-chip fill: each worker decrypts its own view.
-        Ok(SyntheticBackend::from_store(&sealed, &spec))
+        Ok(SyntheticBackend::from_store(&sealed, spec))
     })?;
     Ok(report_from(cfg.scheme, &ecfg, stats, encrypted_lines, total_lines))
 }
@@ -795,21 +1187,23 @@ mod tests {
     use super::*;
     use crate::coordinator::telemetry::SharedBuf;
 
-    fn synth_cfg() -> SynthServeCfg {
-        SynthServeCfg {
-            spec: SynthSpec::default(),
-            n_requests: 24,
-            batch_max: 4,
-            n_workers: 2,
-            queue_cap: 4,
-            admission: Admission::Block,
-            scheme: Scheme::BASELINE,
-            se_ratio: 0.5,
-            arrival_per_ms: 1000.0,
-            slowdown: 1.0,
-            seed: None,
-            events: None,
-            replay: None,
+    fn synth_cfg() -> ServeConfig {
+        ServeConfig::synthetic()
+            .requests(24)
+            .batch_max(4)
+            .workers(2)
+            .queue_cap(4)
+            .admission(Admission::Block)
+            .scheme(Scheme::BASELINE)
+            .se_ratio(0.5)
+            .rate(1000.0)
+            .slowdown(1.0)
+    }
+
+    fn run_whole(cfg: ServeConfig) -> ServeReport {
+        match cfg.run().unwrap() {
+            ServeOutcome::WholeRequest(r) => r,
+            ServeOutcome::Continuous(_) => unreachable!("whole-request config"),
         }
     }
 
@@ -845,44 +1239,79 @@ mod tests {
 
     #[test]
     fn slowdown_calibration_collapses_ratio_for_non_se_schemes() {
-        // scheme_slowdown keys its memo and its persisted calibration
-        // spec on the *effective* ratio. For a non-SE scheme every raw
-        // ratio maps to the same spec (one store file, one memo entry);
-        // SE schemes legitimately calibrate per ratio.
-        let a = SweepSpec::serve_calibration(Scheme::DIRECT, Scheme::DIRECT.effective_ratio(0.25));
-        let b = SweepSpec::serve_calibration(Scheme::DIRECT, Scheme::DIRECT.effective_ratio(0.75));
+        // Calibration keys its memo and its persisted spec on the
+        // *effective* ratio. For a non-SE scheme every raw ratio maps
+        // to the same spec (one store file, one memo entry); SE schemes
+        // legitimately calibrate per ratio.
+        let cal = Calibration::new(CalWorkload::Cnn);
+        let a = cal.spec(Scheme::DIRECT, 0.25);
+        let b = cal.spec(Scheme::DIRECT, 0.75);
         assert_eq!(a.hash(), b.hash());
-        let c = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.25));
-        let d = SweepSpec::serve_calibration(Scheme::SEAL, Scheme::SEAL.effective_ratio(0.75));
+        let c = cal.spec(Scheme::SEAL, 0.25);
+        let d = cal.spec(Scheme::SEAL, 0.75);
         assert_ne!(c.hash(), d.hash());
     }
 
     #[test]
-    fn calibration_workload_parse_and_distinct_specs() {
-        assert_eq!(CalWorkload::parse("cnn"), Some(CalWorkload::Cnn));
-        assert_eq!(CalWorkload::parse("transformer"), Some(CalWorkload::TransformerDecode));
-        assert_eq!(CalWorkload::parse("transformer_decode"), Some(CalWorkload::TransformerDecode));
-        assert_eq!(CalWorkload::parse("gemm"), None);
+    fn calibration_specs_stay_byte_identical_to_history() {
+        // The persisted sweep-store key must be exactly the historical
+        // constructor output, or every cached calibration re-runs (and
+        // committed store hashes break).
+        let cal = Calibration::new(CalWorkload::Cnn);
+        assert_eq!(
+            cal.spec(Scheme::SEAL, 0.5).hash(),
+            SweepSpec::serve_calibration(Scheme::SEAL, 0.5).hash()
+        );
+        assert_eq!(
+            cal.spec(Scheme::DIRECT, 0.25).hash(),
+            SweepSpec::serve_calibration(Scheme::DIRECT, 1.0).hash(),
+            "non-SE effective-ratio collapse must match the historical key"
+        );
+        let tfm = Calibration::new(CalWorkload::TransformerDecode);
+        assert_eq!(
+            tfm.spec(Scheme::SEAL, 0.5).hash(),
+            SweepSpec::serve_calibration_transformer(Scheme::SEAL, 0.5).hash()
+        );
         // The transformer calibration grid is its own store (never
         // collides with the conv grid), still scheme + Baseline.
-        let cnn = SweepSpec::serve_calibration(Scheme::SEAL, 0.5);
-        let tfm = SweepSpec::serve_calibration_transformer(Scheme::SEAL, 0.5);
-        assert_ne!(cnn.hash(), tfm.hash());
-        assert_eq!(tfm.cells().len(), 2);
-        assert_eq!(tfm.cells()[1].scheme, "Baseline");
+        let cnn = cal.spec(Scheme::SEAL, 0.5);
+        let t = tfm.spec(Scheme::SEAL, 0.5);
+        assert_ne!(cnn.hash(), t.hash());
+        assert_eq!(t.cells().len(), 2);
+        assert_eq!(t.cells()[1].scheme, "Baseline");
     }
 
     #[test]
-    fn admission_parse_roundtrip() {
+    fn cli_strings_roundtrip_for_admission_calworkload_rejectreason() {
+        // The FromStr/Display round-trip property for every hand-typed
+        // CLI string in the serving path — strings must stay
+        // byte-identical to the pre-FromStr parse/name pairs.
         for a in [Admission::Block, Admission::Shed] {
-            assert_eq!(Admission::parse(a.name()), Some(a));
+            assert_eq!(a.to_string().parse::<Admission>().unwrap(), a);
         }
-        assert_eq!(Admission::parse("drop"), None);
+        assert_eq!(Admission::Block.to_string(), "block");
+        assert_eq!(Admission::Shed.to_string(), "shed");
+        assert!("drop".parse::<Admission>().is_err());
+
+        for w in [CalWorkload::Cnn, CalWorkload::TransformerDecode] {
+            assert_eq!(w.to_string().parse::<CalWorkload>().unwrap(), w);
+        }
+        assert_eq!(CalWorkload::Cnn.to_string(), "cnn");
+        assert_eq!(CalWorkload::TransformerDecode.to_string(), "transformer_decode");
+        assert_eq!("transformer".parse::<CalWorkload>().unwrap(), CalWorkload::TransformerDecode);
+        assert!("gemm".parse::<CalWorkload>().is_err());
+
+        for r in [RejectReason::Shed, RejectReason::Closed] {
+            assert_eq!(r.to_string().parse::<RejectReason>().unwrap(), r);
+        }
+        assert_eq!(RejectReason::Shed.to_string(), "shed");
+        assert_eq!(RejectReason::Closed.to_string(), "closed");
+        assert!("dropped".parse::<RejectReason>().is_err());
     }
 
     #[test]
     fn engine_serves_everything_under_backpressure() {
-        let report = serve_synthetic(&synth_cfg()).unwrap();
+        let report = run_whole(synth_cfg());
         assert_eq!(report.served, 24);
         assert_eq!(report.rejected, 0);
         assert_eq!(report.latency_us.n, 24);
@@ -901,13 +1330,7 @@ mod tests {
         // wall time the scheme never caused — its histogram must stay
         // in the same range as an unscaled run, and total latency must
         // equal queued + service per construction.
-        let report = serve_synthetic(&SynthServeCfg {
-            slowdown: 1000.0,
-            n_requests: 12,
-            n_workers: 1,
-            ..synth_cfg()
-        })
-        .unwrap();
+        let report = run_whole(synth_cfg().slowdown(1000.0).requests(12).workers(1));
         assert_eq!(report.served, 12);
         // Service mean under 1000x must dwarf queue-wait scaling: the
         // mean latency must be driven by service, and max latency must
@@ -918,6 +1341,35 @@ mod tests {
             "1000x slowdown must show in service: {}",
             report.service_us.mean()
         );
+    }
+
+    #[test]
+    fn continuous_mode_requires_the_synthetic_backend() {
+        let err = ServeConfig::pjrt("vgg16m", "artifacts").continuous(2, 2).run();
+        assert!(err.is_err(), "PJRT decode serving is not wired yet");
+    }
+
+    #[test]
+    fn serve_config_runs_continuous_mode_end_to_end() {
+        let out = ServeConfig::synthetic()
+            .scheme(Scheme::SEAL)
+            .slowdown(1.0)
+            .batch_max(4)
+            .mode(ServeMode::Continuous {
+                sessions: 3,
+                steps_per_session: 5,
+                prompt_tokens: 4,
+                kv_capacity_blocks: 8,
+                block_tokens: 4,
+            })
+            .run()
+            .unwrap();
+        let r = out.continuous().expect("continuous outcome");
+        assert_eq!(r.sessions, 3);
+        assert_eq!(r.steps, 15);
+        assert_eq!(r.scheme, "SEAL");
+        assert_eq!(r.step_latency_us.n, 15);
+        assert!(out.whole_request().is_none());
     }
 
     #[test]
@@ -1006,6 +1458,7 @@ mod tests {
                     assert!(service_us < 10_000_000, "service_us {service_us}");
                 }
                 Event::Rejected { .. } => panic!("no rejections under backpressure"),
+                ref ev => panic!("continuous-mode event in a whole-request run: {ev:?}"),
             }
         }
         assert_eq!(admitted, 6);

@@ -1,0 +1,345 @@
+//! Continuous-batching decode serving: step-level scheduling over many
+//! live sessions with a paged, always-encrypted KV cache
+//! (DESIGN.md §11).
+//!
+//! Whole-request serving ([`super::server`]) batches *requests*; a
+//! decode-phase fleet batches *steps* — every scheduler round takes one
+//! token from up to `batch_max` live sessions, so a long generation
+//! never blocks a short one behind it. Each [`DecodeSession`] owns its
+//! growing KV state, paged through [`KvPager`] into fixed-size
+//! `AddrClass::KvCache` blocks; when live KV exceeds `--kv-capacity`
+//! the pager LRU-evicts, and the *cost* of that eviction is where the
+//! registry schemes diverge (re-encryption vs counter lifecycle —
+//! [`crate::model::kv_pager::KvEvictCost`]).
+//!
+//! Per-step latency = the step's wall-clock share of its batched GEMV
+//! × the memory-scheme slowdown, plus the step's KV-eviction
+//! retirement cycles at the simulator's 1 GHz clock. The long tail
+//! (p99.9) is therefore *paging* tail, which is exactly what the
+//! serve-bench decode grid measures per scheme.
+//!
+//! Telemetry is additive under `seal-events/v1`:
+//! [`Event::SessionStart`] / [`Event::SessionEnd`] bracket each
+//! session; [`Event::KvEvict`] fires on every step that forced
+//! evictions.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::model::kv_pager::{KvPager, KvPagerCfg, PagerStats};
+use crate::sim::Scheme;
+use crate::stats::Histogram;
+
+use super::backend::{InferenceBackend, SyntheticBackend, SynthSpec};
+use super::secure_store::SecureModelStore;
+use super::telemetry::{Event, EventSink};
+
+/// One live decode session: identity plus its generation progress.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSession {
+    pub id: u64,
+    /// Current sequence length (prompt + generated tokens) — the KV
+    /// footprint the pager must keep resident.
+    pub seq_len: usize,
+    /// Decode steps still to run before the session completes.
+    pub remaining: usize,
+    /// Decode steps already executed.
+    pub steps_done: u64,
+}
+
+impl DecodeSession {
+    pub fn new(id: u64, prompt_tokens: usize, steps: usize) -> DecodeSession {
+        DecodeSession { id, seq_len: prompt_tokens, remaining: steps, steps_done: 0 }
+    }
+
+    pub fn live(&self) -> bool {
+        self.remaining > 0
+    }
+}
+
+/// Continuous-mode engine knobs (built by
+/// [`super::server::ServeConfig`] for `--mode continuous`).
+#[derive(Debug, Clone)]
+pub struct ContinuousCfg {
+    /// Concurrent decode sessions, all live from the start.
+    pub sessions: usize,
+    /// Decode steps each session runs before completing.
+    pub steps_per_session: usize,
+    /// Prefill length: KV tokens resident before the first decode step.
+    pub prompt_tokens: usize,
+    /// Sessions stepped per scheduler round (step-level batching).
+    pub batch_max: usize,
+    /// KV pool geometry (`--kv-capacity`, `--block-tokens`).
+    pub kv: KvPagerCfg,
+    pub scheme: Scheme,
+    pub se_ratio: f64,
+    /// Memory-scheme slowdown applied to each step's compute share.
+    pub slowdown: f64,
+    /// Arrival-free mode still wants reproducibility: seeds the
+    /// per-session decode inputs.
+    pub seed: u64,
+    pub events: Option<std::sync::Arc<EventSink>>,
+}
+
+/// Continuous-mode outcome: step-latency distribution (the p99.9 tail
+/// is the decode grid's headline column) plus the pager's ledger.
+#[derive(Debug)]
+pub struct ContinuousReport {
+    pub scheme: &'static str,
+    pub sessions: usize,
+    /// Total decode steps executed (sessions × steps_per_session).
+    pub steps: u64,
+    /// Scheduler rounds (= step-level batches formed).
+    pub rounds: u64,
+    /// Per-step latency: wall share × slowdown + eviction cycles @1GHz.
+    pub step_latency_us: Histogram,
+    pub slowdown: f64,
+    /// Aggregate paging ledger (allocs/faults/evictions/cycles/resets).
+    pub pager: PagerStats,
+    pub kv_capacity_blocks: usize,
+    pub block_tokens: usize,
+    /// Total bytes of the encrypted KV pool.
+    pub kv_bytes: u64,
+    pub throughput_sps: f64,
+    pub elapsed_s: f64,
+    /// Sealed-model line accounting (same meaning as whole-request).
+    pub encrypted_lines: usize,
+    pub total_lines: usize,
+}
+
+impl ContinuousReport {
+    pub fn print(&self) {
+        println!(
+            "continuous decode report ({}, {} sessions, kv {} blocks x {} tokens)",
+            self.scheme, self.sessions, self.kv_capacity_blocks, self.block_tokens
+        );
+        println!("  decode steps    : {} ({} rounds)", self.steps, self.rounds);
+        println!(
+            "  step latency    : mean {:.1} us, p50 {} / p99 {} / p99.9 {} us",
+            self.step_latency_us.mean(),
+            self.step_latency_us.quantile(0.5),
+            self.step_latency_us.quantile(0.99),
+            self.step_latency_us.quantile(0.999)
+        );
+        println!(
+            "  kv paging       : {} allocs, {} faults, {} evictions ({} cycles), {} ctr resets",
+            self.pager.allocs,
+            self.pager.faults,
+            self.pager.evictions,
+            self.pager.evict_cycles,
+            self.pager.counter_resets
+        );
+        println!("  kv pool         : {} bytes, always encrypted", self.kv_bytes);
+        println!("  throughput      : {:.1} steps/s", self.throughput_sps);
+        println!("  memory slowdown : {:.3}x (cycle-sim, scheme vs baseline)", self.slowdown);
+        println!("  sealed lines    : {}/{} encrypted", self.encrypted_lines, self.total_lines);
+    }
+}
+
+/// Run the continuous-batching decode engine over the synthetic
+/// backend: all `sessions` go live up front (prefill paged in), then a
+/// round-robin scheduler interleaves decode steps `batch_max` at a
+/// time until every session completes. Single-threaded by design — the
+/// interesting contention is KV-capacity pressure, not thread count.
+pub fn run_continuous(spec: &SynthSpec, cfg: &ContinuousCfg) -> crate::Result<ContinuousReport> {
+    let n_sessions = cfg.sessions.max(1);
+    let steps_each = cfg.steps_per_session.max(1);
+    let batch_max = cfg.batch_max.max(1);
+
+    // Seal once; the (single) decode worker decrypts its on-chip view,
+    // exactly like a whole-request worker.
+    let info = spec.model_info();
+    let theta = spec.theta();
+    let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
+    let mut backend = SyntheticBackend::from_store(&sealed, spec);
+
+    let mut pager = KvPager::new(cfg.kv, cfg.scheme)?;
+    let kv_bytes = pager.address_map().class_bytes(crate::model::AddrClass::KvCache);
+
+    let mut sessions: Vec<DecodeSession> =
+        (0..n_sessions).map(|i| DecodeSession::new(i as u64, cfg.prompt_tokens, steps_each)).collect();
+    let images: Vec<Vec<f32>> =
+        sessions.iter().map(|s| spec.session_image(cfg.seed ^ s.id)).collect();
+
+    let sink = cfg.events.as_deref();
+    let mut queue: VecDeque<usize> = (0..n_sessions).collect();
+    for s in &sessions {
+        // Prefill: the prompt's KV blocks go resident before decoding.
+        pager.step(s.id, s.seq_len);
+        if let Some(sink) = sink {
+            sink.emit(&Event::SessionStart {
+                session: s.id,
+                prompt_tokens: s.seq_len as u64,
+                t_us: sink.now_us(),
+            });
+        }
+    }
+
+    let mut latency = Histogram::default();
+    let mut steps = 0u64;
+    let mut rounds = 0u64;
+    let t_start = Instant::now();
+    while !queue.is_empty() {
+        rounds += 1;
+        let take = queue.len().min(batch_max);
+        let batch: Vec<usize> = (0..take).map(|_| queue.pop_front().unwrap()).collect();
+
+        // Page each session's KV forward one token, then run the
+        // step-level batch as one backend call.
+        let t_round = Instant::now();
+        let costs: Vec<_> = batch
+            .iter()
+            .map(|&i| {
+                let s = &mut sessions[i];
+                s.seq_len += 1;
+                pager.step(s.id, s.seq_len)
+            })
+            .collect();
+        let step_inputs: Vec<&[f32]> = batch.iter().map(|&i| images[i].as_slice()).collect();
+        backend.infer(&step_inputs)?;
+        // Each step's compute share of the batched GEMV, scheme-scaled;
+        // its paging cost rides on top at the simulator's 1 GHz clock.
+        let share_us = t_round.elapsed().as_secs_f64() * 1e6 * cfg.slowdown / take as f64;
+
+        for (&i, cost) in batch.iter().zip(&costs) {
+            let step_us = share_us + cost.evict_cycles as f64 / 1e3;
+            latency.record(step_us as u64);
+            steps += 1;
+            if cost.evictions > 0 {
+                if let Some(sink) = sink {
+                    sink.emit(&Event::KvEvict {
+                        session: sessions[i].id,
+                        blocks: cost.evictions as u64,
+                        cycles: cost.evict_cycles,
+                        t_us: sink.now_us(),
+                    });
+                }
+            }
+            let s = &mut sessions[i];
+            s.remaining -= 1;
+            s.steps_done += 1;
+            if s.live() {
+                queue.push_back(i);
+            } else {
+                pager.end_session(s.id);
+                if let Some(sink) = sink {
+                    sink.emit(&Event::SessionEnd {
+                        session: s.id,
+                        steps: s.steps_done,
+                        t_us: sink.now_us(),
+                    });
+                }
+            }
+        }
+    }
+    let elapsed_s = t_start.elapsed().as_secs_f64();
+
+    Ok(ContinuousReport {
+        scheme: cfg.scheme.name(),
+        sessions: n_sessions,
+        steps,
+        rounds,
+        step_latency_us: latency,
+        slowdown: cfg.slowdown,
+        pager: pager.stats,
+        kv_capacity_blocks: cfg.kv.capacity_blocks,
+        block_tokens: cfg.kv.block_tokens,
+        kv_bytes,
+        throughput_sps: steps as f64 / elapsed_s.max(1e-9),
+        elapsed_s,
+        encrypted_lines: sealed.encrypted_lines(),
+        total_lines: sealed.n_lines(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::{self, SharedBuf};
+    use std::sync::Arc;
+
+    fn tiny_cfg(scheme: Scheme, capacity: usize) -> ContinuousCfg {
+        ContinuousCfg {
+            sessions: 4,
+            steps_per_session: 8,
+            prompt_tokens: 4,
+            batch_max: 2,
+            kv: KvPagerCfg { capacity_blocks: capacity, block_tokens: 4, bytes_per_token: 512 },
+            scheme,
+            se_ratio: 0.5,
+            slowdown: 1.0,
+            seed: 0xc0de,
+            events: None,
+        }
+    }
+
+    #[test]
+    fn every_session_runs_to_completion() {
+        let spec = SynthSpec::default();
+        let r = run_continuous(&spec, &tiny_cfg(Scheme::BASELINE, 64)).unwrap();
+        assert_eq!(r.sessions, 4);
+        assert_eq!(r.steps, 4 * 8);
+        assert_eq!(r.step_latency_us.n, 4 * 8, "one latency sample per decode step");
+        // Step-level batching: 4 sessions / batch 2 → ≥ 16 rounds.
+        assert!(r.rounds >= 16, "rounds {}", r.rounds);
+        // Roomy pool: growth allocs only, no eviction churn.
+        assert_eq!(r.pager.evictions, 0);
+        assert_eq!(r.pager.evict_cycles, 0);
+        assert!(r.pager.allocs > 0);
+    }
+
+    #[test]
+    fn tight_kv_capacity_forces_scheme_priced_evictions() {
+        let spec = SynthSpec::default();
+        // 4 sessions × final seq 12 → 3 blocks each = 12 wanted, 4
+        // physical frames: heavy paging.
+        let seal = run_continuous(&spec, &tiny_cfg(Scheme::SEAL, 4)).unwrap();
+        let guardnn =
+            run_continuous(&spec, &tiny_cfg(Scheme::parse("guardnn").unwrap(), 4)).unwrap();
+        let seculator =
+            run_continuous(&spec, &tiny_cfg(Scheme::parse("seculator").unwrap(), 4)).unwrap();
+        assert!(seal.pager.evictions > 0);
+        // Identical paging pattern (deterministic scheduler) — the
+        // *cycles* differ because the counter lifecycle does.
+        assert_eq!(seal.pager.evictions, guardnn.pager.evictions);
+        assert_eq!(guardnn.pager.evictions, seculator.pager.evictions);
+        assert!(seal.pager.evict_cycles > guardnn.pager.evict_cycles);
+        assert!(guardnn.pager.evict_cycles > seculator.pager.evict_cycles);
+        // SEAL resets its colocated counters on page reuse.
+        assert!(seal.pager.counter_resets > 0);
+    }
+
+    #[test]
+    fn session_lifecycle_events_bracket_every_session() {
+        let spec = SynthSpec::default();
+        let buf = SharedBuf::default();
+        let mut cfg = tiny_cfg(Scheme::SEAL, 4);
+        cfg.events = Some(Arc::new(EventSink::to_writer(Box::new(buf.clone()), "SEAL")));
+        run_continuous(&spec, &cfg).unwrap();
+        let trace = telemetry::read_events(buf.take_string().as_bytes());
+        assert_eq!(trace.skipped(), 0);
+        let mut starts = 0;
+        let mut ends = 0;
+        let mut evict_blocks = 0u64;
+        for p in &trace.events {
+            match p.event {
+                Event::SessionStart { prompt_tokens, .. } => {
+                    starts += 1;
+                    assert_eq!(prompt_tokens, 4);
+                }
+                Event::SessionEnd { steps, .. } => {
+                    ends += 1;
+                    assert_eq!(steps, 8);
+                }
+                Event::KvEvict { blocks, cycles, .. } => {
+                    evict_blocks += blocks;
+                    assert!(cycles > 0);
+                }
+                ref ev => panic!("unexpected event in continuous mode: {ev:?}"),
+            }
+        }
+        assert_eq!(starts, 4);
+        assert_eq!(ends, 4);
+        assert!(evict_blocks > 0, "tight capacity must evict");
+    }
+}

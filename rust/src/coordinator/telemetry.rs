@@ -9,9 +9,13 @@
 //! request lifecycle — [`Event::Admitted`] / [`Event::Rejected`] at
 //! the admission queue, [`Event::Dequeued`] + [`Event::BatchFormed`]
 //! at the worker, [`Event::Completed`] with the queued/service split.
-//! Every event carries the request id, the worker (where one exists),
-//! the scheme, and a monotonic microsecond timestamp measured from
-//! engine start.
+//! Continuous-batching decode serving (DESIGN.md §11) adds the session
+//! lifecycle — [`Event::SessionStart`] / [`Event::SessionEnd`] and
+//! [`Event::KvEvict`] for KV-capacity pressure — additively under the
+//! same schema: pre-PR-7 readers skip them as unknown types. Every
+//! event carries its subject id, the worker (where one exists), the
+//! scheme, and a monotonic microsecond timestamp measured from engine
+//! start.
 //!
 //! The offline reader follows the tolerant-parser contract (SNIPPETS.md
 //! snippet 2): line-oriented over `BufRead`, CRLF-tolerant, and it
@@ -46,19 +50,23 @@ pub enum RejectReason {
     Closed,
 }
 
-impl RejectReason {
-    pub fn name(&self) -> &'static str {
-        match self {
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
             RejectReason::Shed => "shed",
             RejectReason::Closed => "closed",
-        }
+        })
     }
+}
 
-    pub fn parse(s: &str) -> Option<RejectReason> {
+impl std::str::FromStr for RejectReason {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<RejectReason> {
         match s {
-            "shed" => Some(RejectReason::Shed),
-            "closed" => Some(RejectReason::Closed),
-            _ => None,
+            "shed" => Ok(RejectReason::Shed),
+            "closed" => Ok(RejectReason::Closed),
+            _ => anyhow::bail!("unknown reject reason {s:?} (shed|closed)"),
         }
     }
 }
@@ -81,6 +89,17 @@ pub enum Event {
     /// `queued_us` is real wall time (never scheme-scaled),
     /// `service_us` is scaled by the memory-scheme slowdown.
     Completed { req: u64, worker: usize, queued_us: u64, service_us: u64, t_us: u64 },
+    /// Continuous mode: a decode session went live with its prefill
+    /// KV already `prompt_tokens` long (additive in `seal-events/v1` —
+    /// pre-PR-7 readers count it as an unknown type and skip it).
+    SessionStart { session: u64, prompt_tokens: u64, t_us: u64 },
+    /// Continuous mode: a session finished after `steps` decode steps;
+    /// all of its KV pages return to the free pool.
+    SessionEnd { session: u64, steps: u64, t_us: u64 },
+    /// Continuous mode: KV-capacity pressure evicted `blocks` of this
+    /// session's pages; `cycles` is the scheme-dependent retirement
+    /// cost (re-encryption + counter-lifecycle work) booked for them.
+    KvEvict { session: u64, blocks: u64, cycles: u64, t_us: u64 },
 }
 
 impl Event {
@@ -91,7 +110,10 @@ impl Event {
             | Event::Rejected { t_us, .. }
             | Event::Dequeued { t_us, .. }
             | Event::BatchFormed { t_us, .. }
-            | Event::Completed { t_us, .. } => *t_us,
+            | Event::Completed { t_us, .. }
+            | Event::SessionStart { t_us, .. }
+            | Event::SessionEnd { t_us, .. }
+            | Event::KvEvict { t_us, .. } => *t_us,
         }
     }
 
@@ -103,6 +125,9 @@ impl Event {
             Event::Dequeued { .. } => "dequeued",
             Event::BatchFormed { .. } => "batch_formed",
             Event::Completed { .. } => "completed",
+            Event::SessionStart { .. } => "session_start",
+            Event::SessionEnd { .. } => "session_end",
+            Event::KvEvict { .. } => "kv_evict",
         }
     }
 
@@ -118,7 +143,7 @@ impl Event {
             Event::Admitted { req, .. } => pairs.push(("req", Json::num(*req as f64))),
             Event::Rejected { req, reason, .. } => {
                 pairs.push(("req", Json::num(*req as f64)));
-                pairs.push(("reason", Json::str(reason.name())));
+                pairs.push(("reason", Json::str(&reason.to_string())));
             }
             Event::Dequeued { req, worker, .. } => {
                 pairs.push(("req", Json::num(*req as f64)));
@@ -134,6 +159,19 @@ impl Event {
                 pairs.push(("worker", Json::num(*worker as f64)));
                 pairs.push(("queued_us", Json::num(*queued_us as f64)));
                 pairs.push(("service_us", Json::num(*service_us as f64)));
+            }
+            Event::SessionStart { session, prompt_tokens, .. } => {
+                pairs.push(("session", Json::num(*session as f64)));
+                pairs.push(("prompt_tokens", Json::num(*prompt_tokens as f64)));
+            }
+            Event::SessionEnd { session, steps, .. } => {
+                pairs.push(("session", Json::num(*session as f64)));
+                pairs.push(("steps", Json::num(*steps as f64)));
+            }
+            Event::KvEvict { session, blocks, cycles, .. } => {
+                pairs.push(("session", Json::num(*session as f64)));
+                pairs.push(("blocks", Json::num(*blocks as f64)));
+                pairs.push(("cycles", Json::num(*cycles as f64)));
             }
         }
         Json::obj(pairs)
@@ -160,7 +198,7 @@ fn parse_line(line: &str) -> Result<Option<ParsedEvent>, ()> {
         "admitted" => Event::Admitted { req: req("req")?, t_us },
         "rejected" => {
             let r = j.get("reason").and_then(Json::as_str).ok_or(())?;
-            Event::Rejected { req: req("req")?, reason: RejectReason::parse(r).ok_or(())?, t_us }
+            Event::Rejected { req: req("req")?, reason: r.parse().map_err(|_| ())?, t_us }
         }
         "dequeued" => Event::Dequeued { req: req("req")?, worker: req("worker")? as usize, t_us },
         "batch_formed" => Event::BatchFormed {
@@ -174,6 +212,18 @@ fn parse_line(line: &str) -> Result<Option<ParsedEvent>, ()> {
             worker: req("worker")? as usize,
             queued_us: req("queued_us")?,
             service_us: req("service_us")?,
+            t_us,
+        },
+        "session_start" => Event::SessionStart {
+            session: req("session")?,
+            prompt_tokens: req("prompt_tokens")?,
+            t_us,
+        },
+        "session_end" => Event::SessionEnd { session: req("session")?, steps: req("steps")?, t_us },
+        "kv_evict" => Event::KvEvict {
+            session: req("session")?,
+            blocks: req("blocks")?,
+            cycles: req("cycles")?,
             t_us,
         },
         _ => return Ok(None),
@@ -366,6 +416,9 @@ mod tests {
             Event::Dequeued { req: 0, worker: 3, t_us: 40 },
             Event::BatchFormed { worker: 3, first_req: 0, size: 4, t_us: 41 },
             Event::Completed { req: 0, worker: 3, queued_us: 30, service_us: 9, t_us: 50 },
+            Event::SessionStart { session: 5, prompt_tokens: 8, t_us: 60 },
+            Event::KvEvict { session: 5, blocks: 2, cycles: 24348, t_us: 70 },
+            Event::SessionEnd { session: 5, steps: 32, t_us: 80 },
         ]
     }
 
@@ -390,9 +443,9 @@ mod tests {
     #[test]
     fn reject_reason_roundtrip() {
         for r in [RejectReason::Shed, RejectReason::Closed] {
-            assert_eq!(RejectReason::parse(r.name()), Some(r));
+            assert_eq!(r.to_string().parse::<RejectReason>().unwrap(), r);
         }
-        assert_eq!(RejectReason::parse("dropped"), None);
+        assert!("dropped".parse::<RejectReason>().is_err());
     }
 
     #[test]

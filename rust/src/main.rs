@@ -8,9 +8,11 @@
 //!   sweep       parallel scheme×network×ratio sweep -> results store
 //!   perf        simulator-throughput basket -> BENCH_perf.json + gate
 //!   security    victim training / substitute extraction / attacks
-//!   serve       multi-worker encrypted-model serving (PJRT runtime)
-//!   serve-bench serving-engine grid (schemes×workers×rates)
-//!               -> BENCH_serve.json
+//!   serve       multi-worker encrypted-model serving (PJRT runtime);
+//!               --mode continuous batches decode steps over a paged
+//!               encrypted KV cache
+//!   serve-bench serving-engine grid (schemes×workers×rates) plus the
+//!               continuous-decode grid -> BENCH_serve.json
 //!   schemes     list the open scheme registry (names + doc strings)
 //!   info        print config + artifact inventory
 
@@ -68,17 +70,26 @@ USAGE: seal <subcommand> [flags]
   security  train-victim|extract|attack --model <m> [--ratio r] ...
   serve     --model <m> [--requests n] [--batch b] [--scheme s]
             [--workers n] [--queue cap] [--admission block|shed]
-            [--rate req_per_ms] [--seed s] [--events out.jsonl]
-            [--replay trace.jsonl] [--no-pallas]
+            [--rate req_per_ms] [--calibration cnn|transformer]
+            [--seed s] [--events out.jsonl] [--replay trace.jsonl]
+            [--no-pallas]
             [--synthetic [--cost gemv_repeats] [--slowdown f]]
+            [--mode whole|continuous [--sessions n] [--steps n]
+             [--prompt tokens] [--kv-capacity blocks]
+             [--block-tokens t]]
             (--events streams seal-events/v1 JSONL; --replay drives
              arrivals from a recorded trace; --synthetic needs no
-             artifacts)
+             artifacts; --mode continuous interleaves decode steps
+             from --sessions live sessions over a paged encrypted KV
+             cache, synthetic backend only)
   serve-bench [--quick] [--schemes s1,s2] [--workers 1,2,4]
             [--rates r1,r2] [--requests n] [--batch b] [--queue cap]
             [--cost gemv_repeats] [--calibration cnn|transformer]
+            [--sessions n1,n2] [--steps n1,n2] [--decode-schemes s1,s2]
+            [--kv-capacity blocks] [--block-tokens t] [--prompt tokens]
             [--seed s] [--out f]
-            (synthetic backend; writes BENCH_serve.json)
+            (synthetic backend; writes BENCH_serve.json, schema
+             seal-serve/v3 incl. the continuous-decode grid)
   schemes   list every registered scheme with its doc string
   info
 

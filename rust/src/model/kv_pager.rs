@@ -1,0 +1,474 @@
+//! Paged, always-encrypted KV cache over the emalloc address map
+//! (DESIGN.md §11).
+//!
+//! Continuous-batching decode serving keeps per-session KV state in
+//! `AddrClass::KvCache` regions. Physical capacity is a fixed pool of
+//! [`KvPager`] frames, each one `block_tokens` tokens of K+V state,
+//! allocated up front with [`Allocator::emalloc_in`] (fully encrypted,
+//! like every KV region since PR 5). Sessions grow one token per
+//! decode step; when live KV exceeds the pool, the pager evicts the
+//! least-recently-touched frame of another session — and because the
+//! cache is *always encrypted*, eviction is not free: the page's
+//! ciphertext and counter state must be retired before the frame can
+//! be re-keyed for its next owner.
+//!
+//! That retirement cost is exactly where the registry schemes diverge
+//! ([`Scheme::counter_lifecycle`]): Counter-mode pays a full
+//! re-encryption round trip plus separate counter-line traffic,
+//! SEAL/ColoE pay the round trip with the counter riding in the data
+//! line, GuardNN's fixed on-chip counters make the bump a 1-cycle
+//! on-chip write with AES overlapped behind DRAM, and Seculator's
+//! pregenerated keystream hides AES entirely (the XOR pass remains).
+//! [`KvEvictCost`] grounds those cycles in the simulator's own DRAM
+//! and AES-engine constants, so `seal serve-bench`'s decode grid shows
+//! per-scheme paging cost without running the cycle simulator per
+//! eviction.
+
+use std::collections::HashMap;
+
+use crate::sim::config::{GpuConfig, LINE};
+use crate::sim::{CounterLifecycle, Scheme};
+
+use super::address_map::{AddrClass, AddressMap, Allocator};
+
+/// Geometry of the paged KV pool.
+#[derive(Debug, Clone, Copy)]
+pub struct KvPagerCfg {
+    /// Physical pool size in blocks (the `--kv-capacity` knob).
+    pub capacity_blocks: usize,
+    /// Tokens per block (vLLM-style fixed-size paging).
+    pub block_tokens: usize,
+    /// K+V bytes per token (2 × d_model × 4 for f32 K and V rows).
+    pub bytes_per_token: u64,
+}
+
+impl Default for KvPagerCfg {
+    fn default() -> KvPagerCfg {
+        // 2 * 256 * 4: K+V rows at d_model 256, f32.
+        KvPagerCfg { capacity_blocks: 64, block_tokens: 16, bytes_per_token: 2048 }
+    }
+}
+
+impl KvPagerCfg {
+    /// Bytes of one physical block (line-aligned by the allocator).
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_tokens.max(1) as u64) * self.bytes_per_token.max(1)
+    }
+
+    /// Blocks a session of `seq_len` tokens needs resident.
+    pub fn blocks_for(&self, seq_len: usize) -> usize {
+        seq_len.div_ceil(self.block_tokens.max(1))
+    }
+}
+
+/// Cycles to retire one evicted KV block and re-key its frame,
+/// derived from the scheme's counter lifecycle and the simulator's
+/// DRAM/AES constants — no per-eviction cycle simulation needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvEvictCost {
+    /// Data-line DRAM traffic (read old ciphertext + write re-keyed).
+    pub dram_cycles: u64,
+    /// AES / XOR work on the block's data lines.
+    pub crypto_cycles: u64,
+    /// Counter-state traffic (separate counter lines, or the on-chip
+    /// version bump).
+    pub counter_cycles: u64,
+}
+
+impl KvEvictCost {
+    /// Cost of evicting one `block_bytes` block under `scheme`.
+    pub fn per_block(scheme: Scheme, block_bytes: u64) -> KvEvictCost {
+        let g = GpuConfig::default();
+        let lines = block_bytes.max(1).div_ceil(LINE);
+        let dram_line = g.dram.t_cl + g.dram.line_bus_cycles;
+        // Bulk AES throughput: occupancy is tracked in deci-cycles.
+        let aes_bulk = |passes: u64| passes * lines * g.aes.line_occupancy_deci / 10;
+        let lifecycle = scheme.counter_lifecycle();
+
+        if scheme.spec().engine == "none" {
+            // Baseline: no ciphertext, no counters — the frame is
+            // handed over as-is.
+            return KvEvictCost { dram_cycles: 0, crypto_cycles: 0, counter_cycles: 0 };
+        }
+        // Every encrypting scheme moves the block through DRAM twice:
+        // read the old ciphertext, write it back re-keyed.
+        let dram_cycles = 2 * lines * dram_line;
+        let (crypto_cycles, counter_cycles) = match lifecycle {
+            // Direct: ECB with the global key — serialized decrypt +
+            // encrypt at full AES latency per line, no counter state.
+            CounterLifecycle::None => (2 * lines * g.aes.latency, 0),
+            // Counter mode: two throughput-bound AES passes plus the
+            // pipeline fill, and the per-line counters (8B each, 16
+            // per 128B counter line) are read and rewritten in DRAM.
+            CounterLifecycle::DramCounters => {
+                let ctr_lines = lines.div_ceil(LINE / 8);
+                (aes_bulk(2) + 2 * g.aes.latency, 2 * ctr_lines * dram_line)
+            }
+            // SEAL/ColoE: same two AES passes + per-line XOR; the
+            // counter rides inside the data line — zero extra traffic.
+            CounterLifecycle::Colocated => (aes_bulk(2) + 2 * g.aes.latency + lines, 0),
+            // GuardNN: OTP generation overlaps the DRAM fetch, so only
+            // the pipeline fill and the XOR pass are exposed; the
+            // version bump is one on-chip write.
+            CounterLifecycle::FixedOnChip => (2 * g.aes.latency + lines, 1),
+            // Seculator: keystream pregenerated during idle — AES
+            // latency fully hidden, only the XOR pass remains.
+            CounterLifecycle::Pregen => (lines, 0),
+        };
+        KvEvictCost { dram_cycles, crypto_cycles, counter_cycles }
+    }
+
+    /// Total retirement cycles per evicted block.
+    pub fn total(&self) -> u64 {
+        self.dram_cycles + self.crypto_cycles + self.counter_cycles
+    }
+}
+
+/// One physical frame of the pool.
+#[derive(Debug)]
+struct Frame {
+    /// Base address of this frame's region in the address map.
+    base: u64,
+    /// Owning session, if resident.
+    owner: Option<u64>,
+    /// LRU clock of the last decode step that read this frame.
+    last_touch: u64,
+    /// Counter-block lifecycle: bumps every time the frame is
+    /// (re)assigned; generation 0 = never used.
+    generation: u64,
+}
+
+/// Aggregate paging accounting (reported per decode-grid cell and as
+/// `kv_evict` telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PagerStats {
+    /// Frames handed out (first use + refills).
+    pub allocs: u64,
+    /// Block appends/refills that found no free frame and evicted.
+    pub evictions: u64,
+    /// Steps that found previously-evicted blocks missing (the
+    /// thrash signal — re-paged on the spot).
+    pub faults: u64,
+    /// Total retirement cycles booked against evictions.
+    pub evict_cycles: u64,
+    /// Frame reuses that had to reset counter state (schemes with a
+    /// counter/keystream lifecycle only).
+    pub counter_resets: u64,
+}
+
+/// What one decode step cost in paging terms.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    /// Blocks newly paged in (growth + fault refills).
+    pub paged_in: usize,
+    /// Previously-resident blocks found missing (evicted earlier).
+    pub faults: usize,
+    /// Evictions this step forced on other frames.
+    pub evictions: usize,
+    /// Retirement cycles booked this step.
+    pub evict_cycles: u64,
+}
+
+/// Paged KV-cache allocator: a fixed pool of encrypted
+/// `AddrClass::KvCache` frames, LRU eviction under capacity pressure,
+/// and per-scheme counter-lifecycle accounting across frame reuse.
+#[derive(Debug)]
+pub struct KvPager {
+    cfg: KvPagerCfg,
+    scheme: Scheme,
+    cost_per_block: KvEvictCost,
+    frames: Vec<Frame>,
+    free: Vec<usize>,
+    /// session id → resident frame indices (block order irrelevant:
+    /// a decode step touches every resident block).
+    resident: HashMap<u64, Vec<usize>>,
+    /// Blocks each live session *should* have resident (grows with
+    /// seq_len; the gap to `resident` is the fault count).
+    target_blocks: HashMap<u64, usize>,
+    clock: u64,
+    map: AddressMap,
+    pub stats: PagerStats,
+}
+
+impl KvPager {
+    pub fn new(cfg: KvPagerCfg, scheme: Scheme) -> anyhow::Result<KvPager> {
+        anyhow::ensure!(cfg.capacity_blocks > 0, "kv pager: capacity must be > 0 blocks");
+        anyhow::ensure!(cfg.block_tokens > 0, "kv pager: block_tokens must be > 0");
+        let block_bytes = cfg.block_bytes();
+        let mut alloc = Allocator::new();
+        let frames = (0..cfg.capacity_blocks)
+            .map(|i| Frame {
+                base: alloc.emalloc_in(&format!("kv_block_{i}"), block_bytes, AddrClass::KvCache),
+                owner: None,
+                last_touch: 0,
+                generation: 0,
+            })
+            .collect::<Vec<_>>();
+        let free = (0..cfg.capacity_blocks).rev().collect();
+        Ok(KvPager {
+            cfg,
+            scheme,
+            cost_per_block: KvEvictCost::per_block(scheme, block_bytes),
+            frames,
+            free,
+            resident: HashMap::new(),
+            target_blocks: HashMap::new(),
+            clock: 0,
+            map: alloc.finish(),
+            stats: PagerStats::default(),
+        })
+    }
+
+    pub fn cfg(&self) -> KvPagerCfg {
+        self.cfg
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    /// The per-block retirement cost this pager books on eviction.
+    pub fn evict_cost(&self) -> KvEvictCost {
+        self.cost_per_block
+    }
+
+    /// The encrypted address map backing the pool (every frame is an
+    /// `AddrClass::KvCache` region).
+    pub fn address_map(&self) -> &AddressMap {
+        &self.map
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn resident_blocks(&self, session: u64) -> usize {
+        self.resident.get(&session).map_or(0, Vec::len)
+    }
+
+    /// Base addresses of the frames currently holding `session`'s KV
+    /// blocks (all inside `AddrClass::KvCache` regions of
+    /// [`KvPager::address_map`]).
+    pub fn resident_frame_bases(&self, session: u64) -> Vec<u64> {
+        self.resident
+            .get(&session)
+            .map_or_else(Vec::new, |v| v.iter().map(|&i| self.frames[i].base).collect())
+    }
+
+    /// One decode step of `session` at (new) sequence length
+    /// `seq_len`: re-page any blocks lost to eviction, grow by however
+    /// many blocks the longer sequence needs, and touch everything
+    /// resident (a decode step reads the whole cache).
+    pub fn step(&mut self, session: u64, seq_len: usize) -> StepCost {
+        self.clock += 1;
+        let need = self.cfg.blocks_for(seq_len);
+        let target = self.target_blocks.entry(session).or_insert(0);
+        let prior_target = *target;
+        *target = need.max(prior_target);
+
+        let have = self.resident.get(&session).map_or(0, Vec::len);
+        let mut cost = StepCost::default();
+        // Blocks the session once had but lost to eviction.
+        cost.faults = prior_target.min(need).saturating_sub(have);
+        self.stats.faults += cost.faults as u64;
+
+        let missing = need.saturating_sub(have);
+        for _ in 0..missing {
+            let idx = self.acquire_frame(session, &mut cost);
+            self.resident.entry(session).or_default().push(idx);
+        }
+        cost.paged_in = missing;
+
+        // The step reads every resident block: refresh LRU state.
+        if let Some(frames) = self.resident.get(&session) {
+            for &i in frames {
+                self.frames[i].last_touch = self.clock;
+            }
+        }
+        cost
+    }
+
+    /// Session finished: every frame returns to the free list (its
+    /// generation sticks, so the next owner's assignment still counts
+    /// as a reuse).
+    pub fn end_session(&mut self, session: u64) {
+        self.target_blocks.remove(&session);
+        if let Some(frames) = self.resident.remove(&session) {
+            for i in frames {
+                self.frames[i].owner = None;
+                self.free.push(i);
+            }
+        }
+    }
+
+    /// Hand out one frame for `session`, evicting the LRU frame of
+    /// another session when the pool is exhausted (falling back to the
+    /// session's own LRU frame if it holds the entire pool).
+    fn acquire_frame(&mut self, session: u64, cost: &mut StepCost) -> usize {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                let victim = self.lru_victim(session);
+                self.evict(victim, cost);
+                victim
+            }
+        };
+        let frame = &mut self.frames[idx];
+        if frame.generation > 0 && self.scheme.counter_lifecycle() != CounterLifecycle::None {
+            // Page reuse: the frame's counter/keystream state belongs
+            // to its previous life and must be reset before re-keying.
+            self.stats.counter_resets += 1;
+        }
+        frame.generation += 1;
+        frame.owner = Some(session);
+        frame.last_touch = self.clock;
+        self.stats.allocs += 1;
+        idx
+    }
+
+    fn lru_victim(&self, requester: u64) -> usize {
+        let pick = |exclude_requester: bool| {
+            self.frames
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| {
+                    f.owner.is_some() && (!exclude_requester || f.owner != Some(requester))
+                })
+                .min_by_key(|(_, f)| f.last_touch)
+                .map(|(i, _)| i)
+        };
+        pick(true)
+            .or_else(|| pick(false))
+            .expect("kv pager: no free frame and no resident frame to evict")
+    }
+
+    fn evict(&mut self, idx: usize, cost: &mut StepCost) {
+        let owner = self.frames[idx].owner.take().expect("evicting an unowned frame");
+        if let Some(frames) = self.resident.get_mut(&owner) {
+            frames.retain(|&i| i != idx);
+        }
+        let cycles = self.cost_per_block.total();
+        self.stats.evictions += 1;
+        self.stats.evict_cycles += cycles;
+        cost.evictions += 1;
+        cost.evict_cycles += cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(capacity: usize) -> KvPagerCfg {
+        KvPagerCfg { capacity_blocks: capacity, block_tokens: 4, bytes_per_token: 512 }
+    }
+
+    #[test]
+    fn pool_is_encrypted_kv_cache_regions() {
+        let mut pager = KvPager::new(tiny_cfg(4), Scheme::SEAL).unwrap();
+        let block = tiny_cfg(4).block_bytes();
+        assert_eq!(pager.address_map().class_bytes(AddrClass::KvCache), 4 * block);
+        pager.step(3, 8); // 2 resident blocks
+        let bases = pager.resident_frame_bases(3);
+        assert_eq!(bases.len(), 2);
+        for addr in bases {
+            let map = pager.address_map();
+            assert_eq!(map.class_of(addr), Some(AddrClass::KvCache));
+            assert!(crate::sim::encryption::EncMap::encrypted(map, addr));
+        }
+    }
+
+    #[test]
+    fn no_eviction_at_exact_capacity_then_one_past_it() {
+        // 2 sessions × 2 blocks fill a 4-frame pool exactly: zero
+        // evictions. The next block demand must evict exactly once.
+        let mut pager = KvPager::new(tiny_cfg(4), Scheme::SEAL).unwrap();
+        for s in 0..2u64 {
+            // 8 tokens = 2 blocks at block_tokens 4.
+            let c = pager.step(s, 8);
+            assert_eq!(c.paged_in, 2);
+            assert_eq!(c.evictions, 0);
+        }
+        assert_eq!(pager.free_blocks(), 0);
+        assert_eq!(pager.stats.evictions, 0);
+
+        // Token 9 of session 0 opens block 3 — someone must go, and
+        // it must be a session-1 frame (LRU excludes the requester).
+        let c = pager.step(0, 9);
+        assert_eq!(c.paged_in, 1);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.evict_cycles, pager.evict_cost().total());
+        assert_eq!(pager.resident_blocks(0), 3);
+        assert_eq!(pager.resident_blocks(1), 1);
+        assert_eq!(pager.stats.evictions, 1);
+    }
+
+    #[test]
+    fn evicted_blocks_fault_back_in_on_the_next_step() {
+        let mut pager = KvPager::new(tiny_cfg(2), Scheme::SEAL).unwrap();
+        pager.step(0, 8); // session 0 owns both frames
+        pager.step(1, 4); // evicts one of session 0's frames
+        assert_eq!(pager.resident_blocks(0), 1);
+        let c = pager.step(0, 8); // session 0 refaults its lost block
+        assert_eq!(c.faults, 1);
+        assert_eq!(c.paged_in, 1);
+        assert!(pager.stats.faults >= 1);
+    }
+
+    #[test]
+    fn page_reuse_resets_counter_state_per_scheme() {
+        // Same eviction pattern under SEAL vs Direct: SEAL's colocated
+        // counters must be reset on every frame reuse; Direct has no
+        // counter state, so reuse resets nothing.
+        for (scheme, expects_resets) in [(Scheme::SEAL, true), (Scheme::DIRECT, false)] {
+            let mut pager = KvPager::new(tiny_cfg(2), scheme).unwrap();
+            pager.step(0, 8);
+            pager.step(1, 4); // forces reuse of a generation-1 frame
+            assert_eq!(
+                pager.stats.counter_resets > 0,
+                expects_resets,
+                "{} counter_resets={}",
+                scheme.name(),
+                pager.stats.counter_resets
+            );
+        }
+    }
+
+    #[test]
+    fn session_end_frees_every_page() {
+        let mut pager = KvPager::new(tiny_cfg(6), Scheme::SEAL).unwrap();
+        pager.step(7, 12); // 3 blocks
+        pager.step(8, 8); // 2 blocks
+        assert_eq!(pager.free_blocks(), 1);
+        pager.end_session(7);
+        assert_eq!(pager.free_blocks(), 4);
+        assert_eq!(pager.resident_blocks(7), 0);
+        pager.end_session(8);
+        assert_eq!(pager.free_blocks(), 6);
+        // A freed frame is reusable without an eviction.
+        let c = pager.step(9, 24);
+        assert_eq!(c.evictions, 0);
+        assert_eq!(pager.resident_blocks(9), 6);
+    }
+
+    #[test]
+    fn evict_cost_separates_seal_guardnn_seculator() {
+        // The acceptance-criterion contrast: the three related-work
+        // schemes must book pairwise-distinct eviction totals, ordered
+        // by how much counter/AES work page reuse exposes.
+        let block = KvPagerCfg::default().block_bytes();
+        let seal = KvEvictCost::per_block(Scheme::SEAL, block).total();
+        let guardnn = KvEvictCost::per_block(Scheme::parse("guardnn").unwrap(), block).total();
+        let seculator = KvEvictCost::per_block(Scheme::parse("seculator").unwrap(), block).total();
+        let counter = KvEvictCost::per_block(Scheme::COUNTER, block).total();
+        let baseline = KvEvictCost::per_block(Scheme::BASELINE, block).total();
+        assert_eq!(baseline, 0);
+        assert!(counter > seal, "counter traffic must cost beyond colocation");
+        assert!(seal > guardnn, "colocated AES round trip beats overlapped fixed counters");
+        assert!(guardnn > seculator, "pregen keystream hides what GuardNN still exposes");
+        assert!(seculator > 0, "even Seculator pays DRAM + XOR");
+        // Counter mode is the only builtin with separate counter lines.
+        assert!(KvEvictCost::per_block(Scheme::COUNTER, block).counter_cycles > 1);
+        assert_eq!(KvEvictCost::per_block(Scheme::SEAL, block).counter_cycles, 0);
+    }
+}

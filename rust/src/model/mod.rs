@@ -1,13 +1,16 @@
 //! NN-model substrate: manifests, parameter layouts, the SE scheme's
 //! importance measurement/row selection, full-size layer tables for the
-//! performance figures, and the emalloc()/malloc() address-space map.
+//! performance figures, the emalloc()/malloc() address-space map, and
+//! the paged always-encrypted KV cache built on top of it.
 
 pub mod address_map;
 pub mod importance;
+pub mod kv_pager;
 pub mod manifest;
 pub mod zoo;
 
 pub use address_map::{AddrClass, AddressMap, Allocator, Region};
+pub use kv_pager::{KvEvictCost, KvPager, KvPagerCfg, PagerStats, StepCost};
 pub use importance::{build_mask, se_row_selection, RowSelection};
 pub use manifest::{Manifest, ModelInfo, ParamInfo};
 pub use zoo::{Layer, Network};

@@ -35,4 +35,6 @@ pub mod scheme;
 pub use config::{GpuConfig, SimEngine, LINE};
 pub use event::EventWheel;
 pub use gpu::{Gpu, SimStats};
-pub use scheme::{CipherPipeline, McResources, Scheme, SchemeRegistry, SchemeSpec};
+pub use scheme::{
+    CipherPipeline, CounterLifecycle, McResources, Scheme, SchemeRegistry, SchemeSpec,
+};

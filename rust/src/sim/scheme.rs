@@ -164,6 +164,56 @@ impl Scheme {
     }
 }
 
+/// How a scheme's per-line counter / keystream state behaves when a
+/// physical page is retired and reused (KV-cache paging — the
+/// serving-side cost model in `model::kv_pager` derives per-scheme
+/// eviction cycles from this classification plus
+/// [`SchemeSpec::counter_store`]). Derived, not stored: registry
+/// schemes opt in purely through the `engine` label and
+/// `counter_store` flag they already declare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterLifecycle {
+    /// No per-line counter or keystream state at all (Baseline has no
+    /// crypto; Direct re-keys with the global key, nothing to retire).
+    None,
+    /// Per-line counters in DRAM behind an on-chip cache (Counter,
+    /// Counter+SE): page reuse rewrites the counter lines — eviction
+    /// pays separate counter-block DRAM traffic.
+    DramCounters,
+    /// Counter colocated with the data line (SEAL / ColoE): reuse
+    /// re-encrypts data + counter together — no separate counter
+    /// traffic, but the full AES round trip per line.
+    Colocated,
+    /// Fixed on-chip counters (GuardNN): the version bump is an
+    /// on-chip write, and OTP generation overlaps the DRAM fetch —
+    /// eviction is nearly counter-free.
+    FixedOnChip,
+    /// Pregenerated keystream (Seculator): fresh OTP blocks come from
+    /// the idle-time pregen pool, hiding AES latency — eviction pays
+    /// only the XOR pass.
+    Pregen,
+}
+
+impl Scheme {
+    /// Classify this scheme's counter-state lifecycle across page
+    /// reuse (see [`CounterLifecycle`]).
+    pub fn counter_lifecycle(&self) -> CounterLifecycle {
+        if self.0.counter_store {
+            return CounterLifecycle::DramCounters;
+        }
+        match self.0.engine {
+            "none" | "direct" => CounterLifecycle::None,
+            "coloe" => CounterLifecycle::Colocated,
+            "fixed-ctr" => CounterLifecycle::FixedOnChip,
+            "pregen-otp" => CounterLifecycle::Pregen,
+            // Unknown registry engines without a counter store:
+            // assume colocated (full re-encryption, no counter
+            // traffic) — the conservative middle of the space.
+            _ => CounterLifecycle::Colocated,
+        }
+    }
+}
+
 impl PartialEq for Scheme {
     fn eq(&self, other: &Scheme) -> bool {
         self.0.name == other.0.name
@@ -624,6 +674,21 @@ mod tests {
         assert_eq!(Scheme::parse("TEST-DIRECT-CLONE"), Some(s));
         assert_eq!(Scheme::parse("tdc"), Some(s));
         assert!(SchemeRegistry::all().contains(&s));
+    }
+
+    #[test]
+    fn counter_lifecycle_partitions_the_builtins() {
+        use CounterLifecycle as L;
+        let lc = |n: &str| Scheme::parse(n).unwrap().counter_lifecycle();
+        assert_eq!(lc("baseline"), L::None);
+        assert_eq!(lc("direct"), L::None);
+        assert_eq!(lc("direct_se"), L::None);
+        assert_eq!(lc("counter"), L::DramCounters);
+        assert_eq!(lc("counter_se"), L::DramCounters);
+        assert_eq!(lc("seal"), L::Colocated);
+        assert_eq!(lc("coloe"), L::Colocated);
+        assert_eq!(lc("guardnn"), L::FixedOnChip);
+        assert_eq!(lc("seculator"), L::Pregen);
     }
 
     #[test]

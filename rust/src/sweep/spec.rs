@@ -212,7 +212,7 @@ impl SweepSpec {
     }
 
     /// The serving coordinator's startup-calibration grid
-    /// (`coordinator::server::scheme_slowdown`): one representative
+    /// (`coordinator::server::Calibration`): one representative
     /// conv layer (fig 10 layer 1) under `scheme` and Baseline.
     /// `base_seed` 6 makes the conv cell's seed 6 + 1 = 7 and the
     /// 360-tile budget matches the coordinator's historical inline

@@ -2,33 +2,37 @@
 //! bounded admission (backpressure + counted load shedding, split by
 //! cause), worker scaling accounting, deadlock-free shutdown on
 //! backend failure, record→replay determinism over the JSONL
-//! telemetry stream, and the `seal serve-bench` document contract.
-//! Everything runs on the synthetic backend — no artifacts, no PJRT.
+//! telemetry stream, continuous-batching decode over the paged
+//! encrypted KV cache, the deprecated-shim equivalence contract, and
+//! the `seal serve-bench` document contract. Everything runs on the
+//! synthetic backend — no artifacts, no PJRT.
 
 use std::time::Duration;
 
 use seal::coordinator::{
-    bench, run_engine, serve_synthetic, telemetry, Admission, ArrivalPlan, CalWorkload, EngineCfg,
-    Event, SynthServeCfg, SynthSpec, SyntheticBackend,
+    bench, run_engine, telemetry, Admission, ArrivalPlan, CalWorkload, EngineCfg, Event,
+    ServeConfig, ServeMode, ServeOutcome, ServeReport, SynthSpec, SyntheticBackend,
 };
 use seal::sim::Scheme;
 use seal::util::json::Json;
 
-fn base_cfg() -> SynthServeCfg {
-    SynthServeCfg {
-        spec: SynthSpec::default(),
-        n_requests: 48,
-        batch_max: 8,
-        n_workers: 3,
-        queue_cap: 8,
-        admission: Admission::Block,
-        scheme: Scheme::BASELINE,
-        se_ratio: 0.5,
-        arrival_per_ms: 1000.0,
-        slowdown: 1.0,
-        seed: None,
-        events: None,
-        replay: None,
+fn base_cfg() -> ServeConfig {
+    ServeConfig::synthetic()
+        .requests(48)
+        .batch_max(8)
+        .workers(3)
+        .queue_cap(8)
+        .admission(Admission::Block)
+        .scheme(Scheme::BASELINE)
+        .se_ratio(0.5)
+        .rate(1000.0)
+        .slowdown(1.0)
+}
+
+fn run_whole(cfg: ServeConfig) -> ServeReport {
+    match cfg.run().unwrap() {
+        ServeOutcome::WholeRequest(r) => r,
+        ServeOutcome::Continuous(_) => unreachable!("whole-request config"),
     }
 }
 
@@ -40,7 +44,7 @@ fn temp_path(name: &str) -> std::path::PathBuf {
 
 #[test]
 fn backpressure_serves_every_request_exactly_once() {
-    let report = serve_synthetic(&base_cfg()).unwrap();
+    let report = run_whole(base_cfg());
     assert_eq!(report.served, 48);
     assert_eq!(report.rejected, 0, "backpressure must not shed");
     assert_eq!(report.rejected_shed, 0);
@@ -55,7 +59,7 @@ fn backpressure_serves_every_request_exactly_once() {
     assert_eq!(report.sample_accuracy, 1.0);
     // Latency accounting invariant (the histogram bugfix): no quantile
     // may overshoot the observed maximum.
-    for q in [0.5, 0.9, 0.99, 1.0] {
+    for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
         assert!(report.latency_us.quantile(q) <= report.latency_us.max, "q={q}");
     }
 }
@@ -65,17 +69,14 @@ fn overload_sheds_with_full_accounting() {
     // One slow worker (heavy GEMV emulation) behind a single-slot
     // queue, hammered by microsecond-scale arrivals: most requests
     // must be rejected — and every one of them accounted for.
-    let cfg = SynthServeCfg {
-        spec: SynthSpec { cost_repeats: 20_000, ..SynthSpec::default() },
-        n_requests: 32,
-        batch_max: 1,
-        n_workers: 1,
-        queue_cap: 1,
-        admission: Admission::Shed,
-        arrival_per_ms: 1000.0,
-        ..base_cfg()
-    };
-    let report = serve_synthetic(&cfg).unwrap();
+    let cfg = base_cfg()
+        .spec(SynthSpec { cost_repeats: 20_000, ..SynthSpec::default() })
+        .requests(32)
+        .batch_max(1)
+        .workers(1)
+        .queue_cap(1)
+        .admission(Admission::Shed);
+    let report = run_whole(cfg);
     assert!(report.served >= 1, "at least the first admitted request is served");
     assert!(report.rejected > 0, "a single-slot queue under burst load must shed");
     assert_eq!(
@@ -116,8 +117,7 @@ fn worker_backend_failure_errors_instead_of_hanging() {
 
 #[test]
 fn single_worker_degenerate_engine_works() {
-    let cfg = SynthServeCfg { n_workers: 1, n_requests: 10, ..base_cfg() };
-    let report = serve_synthetic(&cfg).unwrap();
+    let report = run_whole(base_cfg().workers(1).requests(10));
     assert_eq!(report.served, 10);
     assert_eq!(report.per_worker_served, vec![10]);
     assert!(report.n_batches >= 2, "10 requests at batch_max 8 need >= 2 batches");
@@ -125,17 +125,12 @@ fn single_worker_degenerate_engine_works() {
 
 #[test]
 fn record_then_replay_reproduces_counts_exactly() {
-    // The headline acceptance criterion: record a run with --events,
+    // The PR-6 acceptance criterion: record a run with --events,
     // replay its arrival trace with --replay, and get identical
     // admitted/served/rejected counts. Exact equality is guaranteed
     // under Block admission (shed counts are timing-dependent).
     let events_path = temp_path("events_rt");
-    let recorded = serve_synthetic(&SynthServeCfg {
-        n_requests: 24,
-        events: Some(events_path.clone()),
-        ..base_cfg()
-    })
-    .unwrap();
+    let recorded = run_whole(base_cfg().requests(24).events(events_path.clone()));
     assert_eq!(recorded.served, 24);
     assert_eq!(recorded.rejected, 0);
 
@@ -149,13 +144,8 @@ fn record_then_replay_reproduces_counts_exactly() {
     assert_eq!(count(|e| matches!(e, Event::Completed { .. })), 24);
     assert_eq!(count(|e| matches!(e, Event::Rejected { .. })), 0);
 
-    let replayed = serve_synthetic(&SynthServeCfg {
-        // n_requests deliberately wrong: the trace length must win.
-        n_requests: 7,
-        replay: Some(events_path.clone()),
-        ..base_cfg()
-    })
-    .unwrap();
+    // n_requests deliberately wrong: the trace length must win.
+    let replayed = run_whole(base_cfg().requests(7).replay(events_path.clone()));
     assert_eq!(replayed.served, recorded.served);
     assert_eq!(replayed.rejected, recorded.rejected);
     assert_eq!(replayed.rejected_shed, recorded.rejected_shed);
@@ -177,21 +167,98 @@ fn synthesized_bursty_trace_drives_replay() {
     let trace_path = temp_path("bursty_trace");
     std::fs::write(&trace_path, telemetry::synth_arrival_trace(&times, "hand")).unwrap();
 
-    let report = serve_synthetic(&SynthServeCfg {
-        n_requests: 1, // overridden by the 12-arrival trace
-        replay: Some(trace_path.clone()),
-        ..base_cfg()
-    })
-    .unwrap();
+    // 1 request configured — overridden by the 12-arrival trace.
+    let report = run_whole(base_cfg().requests(1).replay(trace_path.clone()));
     assert_eq!(report.served, 12, "one request per synthesized arrival");
     assert_eq!(report.rejected, 0);
     let _ = std::fs::remove_file(&trace_path);
 }
 
 #[test]
+fn continuous_mode_completes_every_session_with_lifecycle_telemetry() {
+    // The PR-7 acceptance path end to end through ServeConfig: N live
+    // sessions decode to completion over a deliberately tight KV pool;
+    // the event stream brackets every session and records eviction
+    // traffic.
+    let events_path = temp_path("continuous");
+    let out = ServeConfig::synthetic()
+        .scheme(Scheme::SEAL)
+        .slowdown(1.0)
+        .batch_max(4)
+        .events(events_path.clone())
+        .mode(ServeMode::Continuous {
+            sessions: 6,
+            steps_per_session: 10,
+            prompt_tokens: 4,
+            kv_capacity_blocks: 6,
+            block_tokens: 4,
+        })
+        .run()
+        .unwrap();
+    let report = out.continuous().expect("continuous outcome");
+    assert_eq!(report.sessions, 6);
+    assert_eq!(report.steps, 60, "every session runs all its decode steps");
+    assert_eq!(report.step_latency_us.n, 60, "one latency sample per decode step");
+    assert!(report.pager.evictions > 0, "6 sessions x 14 tokens over 6 blocks must page");
+    assert!(report.pager.evict_cycles > 0);
+    assert!(report.kv_bytes > 0, "the KV pool is a real emalloc'd encrypted region");
+
+    let trace = telemetry::read_events_path(&events_path).unwrap();
+    assert_eq!(trace.skipped(), 0);
+    let count = |f: fn(&Event) -> bool| trace.events.iter().filter(|p| f(&p.event)).count();
+    assert_eq!(count(|e| matches!(e, Event::SessionStart { .. })), 6);
+    assert_eq!(count(|e| matches!(e, Event::SessionEnd { .. })), 6);
+    assert!(count(|e| matches!(e, Event::KvEvict { .. })) > 0);
+    let _ = std::fs::remove_file(&events_path);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_whole_request_shims_match_serve_config() {
+    // The pre-PR-7 entry points survive as thin wrappers over
+    // ServeConfig: under a deterministic trace the shim and the
+    // unified API must produce identical admission accounting.
+    use seal::coordinator::{serve_synthetic, SynthServeCfg};
+
+    let mut times = Vec::new();
+    for i in 0..10u64 {
+        times.push(i * 100);
+    }
+    let trace_path = temp_path("shim_equiv");
+    std::fs::write(&trace_path, telemetry::synth_arrival_trace(&times, "hand")).unwrap();
+
+    let via_config = run_whole(
+        base_cfg().workers(2).requests(1).replay(trace_path.clone()),
+    );
+    let via_shim = serve_synthetic(&SynthServeCfg {
+        spec: SynthSpec::default(),
+        n_requests: 1,
+        batch_max: 8,
+        n_workers: 2,
+        queue_cap: 8,
+        admission: Admission::Block,
+        scheme: Scheme::BASELINE,
+        se_ratio: 0.5,
+        arrival_per_ms: 1000.0,
+        slowdown: 1.0,
+        seed: None,
+        events: None,
+        replay: Some(trace_path.clone()),
+    })
+    .unwrap();
+    assert_eq!(via_shim.served, via_config.served);
+    assert_eq!(via_shim.served, 10, "trace length drives both paths");
+    assert_eq!(via_shim.rejected, via_config.rejected);
+    assert_eq!(via_shim.scheme, via_config.scheme);
+    assert_eq!(via_shim.admission, via_config.admission);
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+#[test]
 fn serve_bench_document_contract() {
-    // Baseline-only grid skips cycle-sim calibration, so this stays
-    // milliseconds-fast while exercising the whole bench path.
+    // Baseline-only whole-request grid + one SEAL decode cell skips
+    // cycle-sim calibration, so this stays milliseconds-fast while
+    // exercising the whole bench path.
     let opts = bench::BenchOptions {
         quick: true,
         schemes: vec![Scheme::BASELINE],
@@ -206,6 +273,12 @@ fn serve_bench_document_contract() {
         calibration: CalWorkload::Cnn,
         slowdown_override: Some(1.0),
         seed: None,
+        decode_sessions: vec![4],
+        decode_steps: vec![8],
+        decode_schemes: vec![Scheme::SEAL],
+        decode_prompt: 4,
+        kv_capacity_blocks: 4,
+        block_tokens: 4,
     };
     let report = bench::run(&opts).unwrap();
     let doc = bench::document(&report);
@@ -225,6 +298,8 @@ fn serve_bench_document_contract() {
         assert_eq!(shed + closed, rejected, "shed + closed must sum to rejected");
         assert!(c.req("p99_queued_us").as_f64().is_some());
         assert!(c.req("p99_service_us").as_f64().is_some());
+        // v3 contract: the extreme tail per cell.
+        assert!(c.req("p999_latency_us").as_f64().is_some());
     }
     // The scaling summary carries the worker axis and the verdict.
     let scaling = j.req("scaling").as_arr().unwrap();
@@ -232,4 +307,12 @@ fn serve_bench_document_contract() {
     assert_eq!(scaling[0].req("workers").as_arr().unwrap().len(), 2);
     assert!(scaling[0].req("monotonic").as_bool().is_some());
     assert!(j.req("all_monotonic").as_bool().is_some());
+    // v3 contract: the continuous-decode grid with its paging ledger.
+    let decode = j.req("decode_grid").as_arr().unwrap();
+    assert_eq!(decode.len(), 1);
+    assert_eq!(decode[0].req("scheme").as_str(), Some("SEAL"));
+    assert_eq!(decode[0].req("steps").as_f64(), Some(32.0));
+    assert!(decode[0].req("p999_step_us").as_f64().is_some());
+    assert!(decode[0].req("kv_evictions").as_f64().unwrap() > 0.0);
+    assert!(decode[0].req("kv_evict_cycles").as_f64().unwrap() > 0.0);
 }
