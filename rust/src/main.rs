@@ -6,6 +6,7 @@
 //!   network     whole-network inference under all six schemes
 //!   networks    the model zoo table (markdown; the README source)
 //!   sweep       parallel scheme×network×ratio sweep -> results store
+//!               (checkpointed: resumable, shardable, merge-identical)
 //!   perf        simulator-throughput basket -> BENCH_perf.json + gate
 //!   security    victim training / substitute extraction / attacks
 //!   serve       multi-worker encrypted-model serving (PJRT runtime);
@@ -59,11 +60,18 @@ USAGE: seal <subcommand> [flags]
   network   --model <net> [--ratio r] [--sample t] [--phase p] [--seq n]
             (nets: vgg16|resnet18|resnet34|bert_tiny|gpt2_small)
   networks  print the model zoo table (markdown; regenerates README's)
-  sweep     [--networks a,b,c] [--schemes paper|all|s1,s2] [--ratios r1,r2]
-            [--sample t] [--seed s] [--phase prefill|decode] [--seq n]
-            [--sequential] [--force]
+  sweep     [status] [--networks a,b,c] [--schemes paper|all|s1,s2]
+            [--ratios r1,r2] [--sample t] [--seed s]
+            [--phase prefill|decode] [--seq n] [--sequential] [--force]
+            [--resume] [--cell-budget n] [--shard i/n] [--merge n]
             (SEAL_SWEEP_THREADS caps the worker pool; =1 runs inline;
-             --sample beats SEAL_NET_SAMPLE beats the default)
+             --sample beats SEAL_NET_SAMPLE beats the default.
+             Checkpoint fabric: completed cells stream to a
+             results/*.state.jsonl statefile; an interrupted run
+             `--resume`s with zero recomputation; `--shard i/n` runs
+             one slice and `--merge n` reassembles the final store
+             byte-identical to a single-shot run; `seal sweep status`
+             inspects progress without executing)
   perf      [--quick] [--compare-lockstep] [--out f] [--baseline f]
             [--bless-baseline] [--no-gate]
             (writes BENCH_perf.json; nonzero exit on >2x regression)

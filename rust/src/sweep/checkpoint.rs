@@ -1,0 +1,785 @@
+//! Checkpointed, resumable, shardable cell execution — the sweep
+//! fabric (DESIGN.md §12).
+//!
+//! The historical engine ran every cell, held the whole grid in
+//! memory, and wrote one document at the end: an interruption (CI time
+//! limit, OOM, ^C) lost everything. This module persists progress as
+//! it happens in a *statefile* next to the store:
+//!
+//! `results/sweep_<name>_<hash16>.state.jsonl` (full runs)
+//! `results/sweep_<name>_<hash16>.shard<i>of<n>.state.jsonl` (shards)
+//!
+//! Append-only JSONL, schema [`STATE_SCHEMA`], following the
+//! `seal-events/v1` conventions (one flushed line per record, tolerant
+//! reader that counts-and-skips instead of failing):
+//!
+//! ```json
+//! {"type":"header","schema":"seal-sweep-state/v1","name":"cli",
+//!  "spec_hash":"9f8a6c5d3b2e1a40","total_cells":54,
+//!  "shard_index":0,"shard_count":2}
+//! {"type":"cell","index":7,"cell_id":"0c7d…","target":"vgg16", ...row}
+//! {"type":"error","index":9,"cell_id":"55aa…","target":"resnet18",
+//!  "scheme":"SEAL","ratio":0.5,"error":"..."}
+//! {"type":"summary","done":26,"failed":1,"total_cells":54}
+//! ```
+//!
+//! Invariants the fabric maintains:
+//!
+//! - **Zero recomputation on resume.** Every `cell` line carries the
+//!   cell's enumeration `index` *and* its content-derived
+//!   `cell_id` ([`crate::sweep::spec::CellKey::id_hex`]); a resumed
+//!   run re-executes only cells with no valid checkpoint line. A
+//!   statefile whose header hash mismatches the spec is stale and
+//!   ignored wholesale.
+//! - **Fault aggregation.** A panicking cell becomes an `error` line
+//!   and an [`ErrorSet`] entry; the grid keeps going. A later success
+//!   for the same index supersedes the recorded failure (resume
+//!   retries failed cells).
+//! - **Byte-identical assembly.** Cells are deterministic, statefile
+//!   lines carry enumeration indices, and the final store document is
+//!   reassembled in index order — so a resumed, sharded-and-merged, or
+//!   single-shot run produces the *same bytes*
+//!   (`tests/sweep_fabric.rs`). Existing store hashes and golden spec
+//!   bytes are untouched: the fabric changes how cells are executed,
+//!   never what a cell computes or how the document is serialized.
+//! - **Crash-safe files.** Cell lines are individually flushed (a
+//!   crash costs at most the line in flight — one tolerated malformed
+//!   line); the finalize step rewrites the statefile canonically
+//!   (header, cells in order, errors, terminal `summary` line) and
+//!   both it and the store document go through
+//!   `store::write_atomic`'s temp-file-then-rename.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+use super::errorset::{CellError, ErrorSet};
+use super::runner::{self, CellSink, RunnerCfg};
+use super::spec::{CellKey, SweepSpec};
+use super::store::{self, CellRow, SweepResults};
+
+/// Statefile schema tag (the header line pins it).
+pub const STATE_SCHEMA: &str = "seal-sweep-state/v1";
+
+/// Which slice of the grid a run owns: shard `index` of `count`
+/// (cell `i` belongs to shard `i % count`). [`ShardId::full`] is the
+/// whole grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardId {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardId {
+    /// The whole grid as one shard (0 of 1).
+    pub fn full() -> ShardId {
+        ShardId { index: 0, count: 1 }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+
+    /// Parse the CLI form `i/n` (e.g. `--shard 0/4`).
+    pub fn parse(s: &str) -> anyhow::Result<ShardId> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("--shard expects i/n (e.g. 0/4), got {s:?}"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shard index must be an integer, got {i:?}"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shard count must be an integer, got {n:?}"))?;
+        anyhow::ensure!(count >= 1, "--shard count must be at least 1");
+        anyhow::ensure!(index < count, "--shard index {index} out of range 0..{count}");
+        Ok(ShardId { index, count })
+    }
+}
+
+impl std::fmt::Display for ShardId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// The statefile path for one (spec, shard).
+pub fn state_path(spec: &SweepSpec, shard: ShardId) -> PathBuf {
+    let stem = format!("sweep_{}_{:016x}", spec.name, spec.hash());
+    if shard.is_full() {
+        PathBuf::from(format!("results/{stem}.state.jsonl"))
+    } else {
+        PathBuf::from(format!(
+            "results/{stem}.shard{}of{}.state.jsonl",
+            shard.index, shard.count
+        ))
+    }
+}
+
+// -- the writer --------------------------------------------------------------
+
+/// Append-only statefile writer: one flushed JSONL line per record,
+/// shared across the worker pool behind a mutex (the [`CellSink`]
+/// implementation). Unlike serving telemetry, write failures are NOT
+/// swallowed silently — resume correctness depends on the checkpoint —
+/// but they also must not abort workers mid-cell: the first failure
+/// poisons the writer and the fabric reports it after the run.
+pub struct StateWriter {
+    out: Mutex<File>,
+    poisoned: AtomicBool,
+}
+
+impl StateWriter {
+    /// Create (truncate) the statefile and write its header line.
+    pub fn create(
+        path: &Path,
+        spec: &SweepSpec,
+        shard: ShardId,
+        total_cells: usize,
+    ) -> std::io::Result<StateWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = File::create(path)?;
+        let header = Json::obj(vec![
+            ("type", Json::str("header")),
+            ("schema", Json::str(STATE_SCHEMA)),
+            ("name", Json::str(&spec.name)),
+            ("spec_hash", Json::str(&format!("{:016x}", spec.hash()))),
+            ("total_cells", Json::num(total_cells as f64)),
+            ("shard_index", Json::num(shard.index as f64)),
+            ("shard_count", Json::num(shard.count as f64)),
+        ]);
+        writeln!(f, "{header}")?;
+        f.flush()?;
+        Ok(StateWriter { out: Mutex::new(f), poisoned: AtomicBool::new(false) })
+    }
+
+    /// Reopen an existing statefile for appending (resume; the header
+    /// is already on disk and is never rewritten mid-run).
+    pub fn append(path: &Path) -> std::io::Result<StateWriter> {
+        let f = OpenOptions::new().append(true).open(path)?;
+        Ok(StateWriter { out: Mutex::new(f), poisoned: AtomicBool::new(false) })
+    }
+
+    /// Whether any line failed to reach the file.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    fn emit(&self, line: &Json) {
+        let mut text = line.to_string();
+        text.push('\n');
+        let mut out = self.out.lock().unwrap();
+        if out.write_all(text.as_bytes()).and_then(|_| out.flush()).is_err() {
+            self.poisoned.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Frame a row (or error) payload with the statefile line metadata.
+fn with_meta(payload: Json, ty: &str, index: usize, cell_id: &str) -> Json {
+    match payload {
+        Json::Obj(mut m) => {
+            m.insert("type".to_string(), Json::str(ty));
+            m.insert("index".to_string(), Json::num(index as f64));
+            m.insert("cell_id".to_string(), Json::str(cell_id));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+fn cell_line(index: usize, cell_id: &str, row: &CellRow) -> Json {
+    with_meta(row.to_json(), "cell", index, cell_id)
+}
+
+fn error_line(e: &CellError) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("error")),
+        ("index", Json::num(e.index as f64)),
+        ("cell_id", Json::str(&e.cell_id)),
+        ("target", Json::str(&e.target)),
+        ("scheme", Json::str(&e.scheme)),
+        ("ratio", Json::num(e.ratio)),
+        ("error", Json::str(&e.error)),
+    ])
+}
+
+impl CellSink for StateWriter {
+    fn record(&self, index: usize, key: &CellKey, outcome: &Result<CellRow, String>) {
+        let id = key.id_hex();
+        match outcome {
+            Ok(row) => self.emit(&cell_line(index, &id, row)),
+            Err(msg) => self.emit(&error_line(&CellError {
+                index,
+                cell_id: id,
+                target: key.target.label(),
+                scheme: key.scheme.clone(),
+                ratio: key.ratio,
+                error: msg.clone(),
+            })),
+        }
+    }
+}
+
+// -- the tolerant reader -----------------------------------------------------
+
+/// Parsed statefile header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateHeader {
+    pub name: String,
+    pub spec_hash: String,
+    pub total_cells: usize,
+    pub shard: ShardId,
+}
+
+/// A tolerantly read statefile: checkpointed rows and recorded
+/// failures by enumeration index, plus the skip accounting.
+#[derive(Debug)]
+pub struct StateRead {
+    pub header: StateHeader,
+    /// Completed cells (a later duplicate line wins; a success always
+    /// supersedes a recorded failure for the same index).
+    pub done: BTreeMap<usize, CellRow>,
+    /// Failures with no superseding success.
+    pub errors: BTreeMap<usize, CellError>,
+    /// Non-blank lines seen (parsed + skipped).
+    pub lines: usize,
+    /// Unparseable or inconsistent lines, counted and skipped — a
+    /// truncated tail (crash mid-write) costs exactly one.
+    pub malformed: usize,
+}
+
+impl StateRead {
+    /// The recorded failures as an enumeration-ordered [`ErrorSet`].
+    pub fn error_set(&self) -> ErrorSet {
+        let mut set = ErrorSet::new();
+        for e in self.errors.values() {
+            set.push(e.clone());
+        }
+        set
+    }
+}
+
+fn parse_header(j: &Json) -> Option<StateHeader> {
+    if j.get("type")?.as_str()? != "header" || j.get("schema")?.as_str()? != STATE_SCHEMA {
+        return None;
+    }
+    let index = j.get("shard_index")?.as_usize()?;
+    let count = j.get("shard_count")?.as_usize()?;
+    if count < 1 || index >= count {
+        return None;
+    }
+    Some(StateHeader {
+        name: j.get("name")?.as_str()?.to_string(),
+        spec_hash: j.get("spec_hash")?.as_str()?.to_string(),
+        total_cells: j.get("total_cells")?.as_usize()?,
+        shard: ShardId { index, count },
+    })
+}
+
+/// Read a statefile tolerantly against `spec`. Returns `None` when the
+/// file is absent **or stale** — no parseable header on the first
+/// non-blank line, a schema/spec-hash mismatch, or a cell count that
+/// is not the spec's — in which case the caller starts from scratch
+/// (a stale checkpoint must never contaminate a different grid).
+/// Content damage below the header is never fatal: malformed lines,
+/// unknown types, wrong `cell_id`s and out-of-range indices are
+/// counted and skipped per the `seal-events/v1` reader conventions.
+pub fn read_state(spec: &SweepSpec, path: &Path) -> Option<StateRead> {
+    let file = File::open(path).ok()?;
+    let mut lines = std::io::BufReader::new(file).lines();
+    // Expected identities, by enumeration index.
+    let ids: Vec<String> = spec.cells().iter().map(|c| c.id_hex()).collect();
+    let spec_hash = format!("{:016x}", spec.hash());
+
+    // The header line: the first non-blank line must be a valid,
+    // matching header or the whole file is stale.
+    let header = loop {
+        let line = lines.next()?.ok()?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let h = parse_header(&Json::parse(line).ok()?)?;
+        if h.spec_hash != spec_hash || h.total_cells != ids.len() {
+            eprintln!(
+                "[sweep] statefile {} is stale (different spec); ignoring it",
+                path.display()
+            );
+            return None;
+        }
+        break h;
+    };
+
+    let mut read = StateRead {
+        header,
+        done: BTreeMap::new(),
+        errors: BTreeMap::new(),
+        lines: 1,
+        malformed: 0,
+    };
+    for line in lines {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => {
+                // Unreadable (e.g. invalid UTF-8): count and stop —
+                // line framing cannot be trusted past this point.
+                read.lines += 1;
+                read.malformed += 1;
+                break;
+            }
+        };
+        let line = line.trim_end_matches('\r');
+        if line.trim().is_empty() {
+            continue;
+        }
+        read.lines += 1;
+        let Ok(j) = Json::parse(line) else {
+            read.malformed += 1;
+            continue;
+        };
+        let valid_at = |j: &Json| -> Option<usize> {
+            let index = j.get("index")?.as_usize()?;
+            let cell_id = j.get("cell_id")?.as_str()?;
+            (index < ids.len() && cell_id == ids[index]).then_some(index)
+        };
+        match j.get("type").and_then(Json::as_str) {
+            Some("cell") => match (valid_at(&j), CellRow::from_json(&j)) {
+                (Some(index), Some(row)) => {
+                    read.done.insert(index, row);
+                }
+                _ => read.malformed += 1,
+            },
+            Some("error") => match (valid_at(&j), j.get("error").and_then(Json::as_str)) {
+                (Some(index), Some(msg)) => {
+                    read.errors.insert(
+                        index,
+                        CellError {
+                            index,
+                            cell_id: ids[index].clone(),
+                            target: j
+                                .get("target")
+                                .and_then(Json::as_str)
+                                .unwrap_or("?")
+                                .to_string(),
+                            scheme: j
+                                .get("scheme")
+                                .and_then(Json::as_str)
+                                .unwrap_or("?")
+                                .to_string(),
+                            ratio: j.get("ratio").and_then(Json::as_f64).unwrap_or(1.0),
+                            error: msg.to_string(),
+                        },
+                    );
+                }
+                _ => read.malformed += 1,
+            },
+            // The terminal summary is advisory (the reader recounts);
+            // a second header (shouldn't happen) and unknown types are
+            // skipped for forward compatibility.
+            Some(_) => {}
+            None => read.malformed += 1,
+        }
+    }
+    // A success supersedes any recorded failure for the same cell
+    // (resume retries failed cells; the retry's outcome wins).
+    let done_idx: Vec<usize> = read.done.keys().copied().collect();
+    for idx in done_idx {
+        read.errors.remove(&idx);
+    }
+    Some(read)
+}
+
+/// Rewrite the statefile canonically — header, `cell` lines in
+/// enumeration order, surviving `error` lines, terminal `summary` —
+/// through the atomic temp-file-and-rename path. Run at the end of
+/// every fabric invocation: compacts duplicate/superseded lines and
+/// guarantees the terminal summary can never tear the file.
+fn finalize_state(spec: &SweepSpec, path: &Path, read: &StateRead) -> std::io::Result<()> {
+    let mut text = String::new();
+    let header = Json::obj(vec![
+        ("type", Json::str("header")),
+        ("schema", Json::str(STATE_SCHEMA)),
+        ("name", Json::str(&spec.name)),
+        ("spec_hash", Json::str(&read.header.spec_hash)),
+        ("total_cells", Json::num(read.header.total_cells as f64)),
+        ("shard_index", Json::num(read.header.shard.index as f64)),
+        ("shard_count", Json::num(read.header.shard.count as f64)),
+    ]);
+    text.push_str(&header.to_string());
+    text.push('\n');
+    let ids: Vec<String> = spec.cells().iter().map(|c| c.id_hex()).collect();
+    for (&index, row) in &read.done {
+        text.push_str(&cell_line(index, &ids[index], row).to_string());
+        text.push('\n');
+    }
+    for e in read.errors.values() {
+        text.push_str(&error_line(e).to_string());
+        text.push('\n');
+    }
+    let summary = Json::obj(vec![
+        ("type", Json::str("summary")),
+        ("done", Json::num(read.done.len() as f64)),
+        ("failed", Json::num(read.errors.len() as f64)),
+        ("total_cells", Json::num(read.header.total_cells as f64)),
+    ]);
+    text.push_str(&summary.to_string());
+    text.push('\n');
+    store::write_atomic(path, &text)
+}
+
+// -- the fabric driver -------------------------------------------------------
+
+/// What one fabric invocation accomplished.
+#[derive(Debug)]
+pub struct FabricReport {
+    /// The finished results — `Some` only for a *full* (unsharded) run
+    /// whose grid is complete and failure-free; the final store
+    /// document has been written and the statefile retired. Shard runs
+    /// always leave their statefile for [`merge_shards`].
+    pub results: Option<SweepResults>,
+    pub state_path: PathBuf,
+    /// Cells owned by this run's shard.
+    pub total: usize,
+    /// ... of which are checkpointed as completed.
+    pub done: usize,
+    /// ... of which have a recorded, unsuperseded failure.
+    pub failed: usize,
+    /// ... of which are still to compute (includes the failed).
+    pub remaining: usize,
+    /// Cells actually executed by THIS invocation (a pure resume of a
+    /// complete statefile executes zero).
+    pub executed: usize,
+    /// Cells skipped because a prior run already checkpointed them.
+    pub resumed: usize,
+    /// The surviving failures.
+    pub errors: ErrorSet,
+}
+
+/// Run (or continue) `spec`'s grid through the checkpoint fabric.
+///
+/// - A valid statefile for the same spec is always resumed: its
+///   completed cells are never recomputed, its failed cells are
+///   retried.
+/// - `budget` caps how many cells this invocation executes (an
+///   interrupted/CI-time-boxed run in miniature); the statefile keeps
+///   the rest resumable.
+/// - For [`ShardId::full`] runs that complete cleanly, the final store
+///   document is written (atomically, byte-identical to the
+///   historical single-shot writer) and the statefile removed; shard
+///   runs keep their statefile for [`merge_shards`].
+///
+/// Errors are *infrastructure* problems (statefile unwritable);
+/// per-cell failures land in [`FabricReport::errors`] instead.
+pub fn run_checkpointed(
+    spec: &SweepSpec,
+    rc: &RunnerCfg,
+    shard: ShardId,
+    budget: Option<usize>,
+) -> anyhow::Result<FabricReport> {
+    let total_cells = spec.cells().len();
+    let shard_cells = spec.cells_for_shard(shard.index, shard.count);
+    let path = state_path(spec, shard);
+
+    let prior = read_state(spec, &path);
+    let prior_done: std::collections::BTreeSet<usize> = match &prior {
+        Some(st) => st.done.keys().copied().collect(),
+        None => Default::default(),
+    };
+    let mut pending: Vec<(usize, CellKey)> = shard_cells
+        .iter()
+        .filter(|(i, _)| !prior_done.contains(i))
+        .cloned()
+        .collect();
+    let resumed = shard_cells.len() - pending.len();
+    if let Some(b) = budget {
+        pending.truncate(b);
+    }
+
+    let writer = match prior {
+        Some(_) => StateWriter::append(&path)?,
+        None => StateWriter::create(&path, spec, shard, total_cells)?,
+    };
+    let executed = pending.len();
+    runner::run_cells_streamed(spec, &pending, rc, &writer);
+    anyhow::ensure!(
+        !writer.poisoned(),
+        "checkpoint write to {} failed mid-run; completed cells may be missing",
+        path.display()
+    );
+    drop(writer);
+
+    // Re-read our own statefile: the single source of truth for what
+    // is durably checkpointed (anything that didn't reach disk is
+    // recomputed next time — never silently assumed done).
+    let read = read_state(spec, &path)
+        .ok_or_else(|| anyhow::anyhow!("statefile {} unreadable after run", path.display()))?;
+    finalize_state(spec, &path, &read)?;
+
+    let done = read.done.len();
+    let failed = read.errors.len();
+    let remaining = shard_cells.len() - done;
+    let errors = read.error_set();
+
+    let results = if shard.is_full() && done == shard_cells.len() {
+        let rows: Vec<CellRow> = read.done.into_values().collect();
+        let saved = store::save(spec, &rows)?;
+        // The checkpoint has served its purpose; the store document is
+        // the durable artifact from here on.
+        let _ = std::fs::remove_file(&path);
+        Some(saved)
+    } else {
+        None
+    };
+
+    Ok(FabricReport {
+        results,
+        state_path: path,
+        total: shard_cells.len(),
+        done,
+        failed,
+        remaining,
+        executed,
+        resumed,
+        errors,
+    })
+}
+
+/// Combine `count` completed shard statefiles into the final store
+/// document — byte-identical to a single-shot run, because rows are
+/// deterministic and reassembled in enumeration order. Fails (listing
+/// the gaps) when any shard statefile is missing, stale, incomplete,
+/// or carries unsuperseded failures.
+pub fn merge_shards(spec: &SweepSpec, count: usize) -> anyhow::Result<SweepResults> {
+    anyhow::ensure!(count >= 1, "--merge expects a shard count of at least 1");
+    let all = spec.cells();
+    let mut rows: BTreeMap<usize, CellRow> = BTreeMap::new();
+    let mut errors = ErrorSet::new();
+    for index in 0..count {
+        let shard = ShardId { index, count };
+        let path = state_path(spec, shard);
+        let st = read_state(spec, &path).ok_or_else(|| {
+            anyhow::anyhow!(
+                "missing or stale shard statefile {} (run `seal sweep --shard {shard}` first)",
+                path.display()
+            )
+        })?;
+        anyhow::ensure!(
+            st.header.shard == shard,
+            "statefile {} claims shard {} but was read as shard {shard}",
+            path.display(),
+            st.header.shard,
+        );
+        for (i, row) in st.done {
+            // Foreign indices can only come from hand-edited files;
+            // dropping them keeps the merge honest.
+            if i % count == shard.index {
+                rows.insert(i, row);
+            }
+        }
+        for e in st.errors.into_values() {
+            errors.push(e);
+        }
+    }
+    anyhow::ensure!(errors.is_empty(), "cannot merge: {errors}");
+    if rows.len() != all.len() {
+        let missing: Vec<String> = (0..all.len())
+            .filter(|i| !rows.contains_key(i))
+            .take(8)
+            .map(|i| format!("{i} ({})", all[i].target.label()))
+            .collect();
+        anyhow::bail!(
+            "cannot merge: {}/{} cells checkpointed; missing e.g. {}",
+            rows.len(),
+            all.len(),
+            missing.join(", ")
+        );
+    }
+    let rows: Vec<CellRow> = rows.into_values().collect();
+    store::save(spec, &rows)
+}
+
+// -- status ------------------------------------------------------------------
+
+/// Progress of one statefile.
+#[derive(Debug)]
+pub struct ShardProgress {
+    pub shard: ShardId,
+    pub done: usize,
+    pub failed: usize,
+    /// Cells this shard owns.
+    pub total: usize,
+    pub path: PathBuf,
+}
+
+/// Everything `seal sweep status` reports for one spec.
+#[derive(Debug)]
+pub struct SweepStatus {
+    /// Cells in the whole grid.
+    pub total: usize,
+    /// Whether the final store document exists and parses.
+    pub cached: bool,
+    pub store_path: PathBuf,
+    /// The full-run statefile, when one exists.
+    pub state: Option<ShardProgress>,
+    /// Any shard statefiles found for this spec, by shard index.
+    pub shards: Vec<ShardProgress>,
+}
+
+fn progress_of(spec: &SweepSpec, path: &Path) -> Option<ShardProgress> {
+    let st = read_state(spec, path)?;
+    let shard = st.header.shard;
+    let total = (0..st.header.total_cells).filter(|i| i % shard.count == shard.index).count();
+    Some(ShardProgress {
+        shard,
+        done: st.done.len(),
+        failed: st.errors.len(),
+        total,
+        path: path.to_path_buf(),
+    })
+}
+
+/// Inspect the store and every statefile of `spec` (cells done /
+/// failed / remaining) without executing anything.
+pub fn status(spec: &SweepSpec) -> SweepStatus {
+    let total = spec.cells().len();
+    let store_path = store::store_path(spec);
+    let cached = store::load(spec).is_some();
+    let state = progress_of(spec, &state_path(spec, ShardId::full()));
+    let mut shards: Vec<ShardProgress> = Vec::new();
+    let prefix = format!("sweep_{}_{:016x}.shard", spec.name, spec.hash());
+    if let Ok(entries) = std::fs::read_dir("results") {
+        for entry in entries.flatten() {
+            let fname = entry.file_name();
+            let fname = fname.to_string_lossy();
+            if fname.starts_with(&prefix) && fname.ends_with(".state.jsonl") {
+                if let Some(p) = progress_of(spec, &entry.path()) {
+                    shards.push(p);
+                }
+            }
+        }
+    }
+    shards.sort_by_key(|p| (p.shard.count, p.shard.index));
+    SweepStatus { total, cached, store_path, state, shards }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::SweepTarget;
+
+    fn spec(name: &str) -> SweepSpec {
+        SweepSpec {
+            name: name.into(),
+            targets: vec![
+                SweepTarget::Matmul { m: 64, k: 64, n: 64 },
+                SweepTarget::DramStream { lines: 500 },
+            ],
+            schemes: vec!["Baseline".into(), "SEAL".into()],
+            ratios: vec![0.5],
+            sample_tiles: 2,
+            base_seed: 0,
+        }
+    }
+
+    fn cleanup(s: &SweepSpec) {
+        let _ = std::fs::remove_file(store::store_path(s));
+        let _ = std::fs::remove_file(state_path(s, ShardId::full()));
+        for n in 2..=4 {
+            for i in 0..n {
+                let _ = std::fs::remove_file(state_path(s, ShardId { index: i, count: n }));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_id_parse_and_display() {
+        let s = ShardId::parse("1/4").unwrap();
+        assert_eq!(s, ShardId { index: 1, count: 4 });
+        assert_eq!(s.to_string(), "1/4");
+        assert!(!s.is_full());
+        assert!(ShardId::full().is_full());
+        assert!(ShardId::parse("4/4").is_err());
+        assert!(ShardId::parse("0").is_err());
+        assert!(ShardId::parse("a/b").is_err());
+        assert!(ShardId::parse("0/0").is_err());
+    }
+
+    #[test]
+    fn statefile_roundtrip_and_tolerance() {
+        let s = spec("ckpt_roundtrip");
+        cleanup(&s);
+        let cells = s.cells();
+        let path = state_path(&s, ShardId::full());
+        let w = StateWriter::create(&path, &s, ShardId::full(), cells.len()).unwrap();
+        let row = runner::run_cell(&cells[0], &s);
+        w.record(0, &cells[0], &Ok(row.clone()));
+        w.record(1, &cells[1], &Err("synthetic failure".to_string()));
+        drop(w);
+        // Damage the tail: garbage, an unknown type, a wrong cell_id,
+        // and a truncated line — all counted, none fatal.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "{{not json").unwrap();
+        writeln!(f, "{{\"type\":\"frobnicate\",\"index\":0,\"cell_id\":\"x\"}}").unwrap();
+        writeln!(
+            f,
+            "{{\"type\":\"cell\",\"index\":2,\"cell_id\":\"0000000000000000\"}}"
+        )
+        .unwrap();
+        write!(f, "{{\"type\":\"cell\",\"ind").unwrap();
+        drop(f);
+
+        let read = read_state(&s, &path).expect("statefile reads back");
+        assert_eq!(read.done.len(), 1);
+        assert_eq!(read.done[&0], row);
+        assert_eq!(read.errors.len(), 1);
+        assert_eq!(read.errors[&1].error, "synthetic failure");
+        assert_eq!(read.malformed, 3, "garbage + bad-id + truncated");
+        assert_eq!(read.header.total_cells, cells.len());
+
+        // A later success supersedes the recorded failure.
+        let w = StateWriter::append(&path).unwrap();
+        let row1 = runner::run_cell(&cells[1], &s);
+        w.record(1, &cells[1], &Ok(row1.clone()));
+        drop(w);
+        let read = read_state(&s, &path).unwrap();
+        assert_eq!(read.done.len(), 2);
+        assert!(read.errors.is_empty());
+
+        // Finalize canonicalizes: damaged lines gone, summary present.
+        finalize_state(&s, &path, &read).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"type\":\"summary\""));
+        assert!(!text.contains("frobnicate"));
+        let reread = read_state(&s, &path).unwrap();
+        assert_eq!(reread.malformed, 0);
+        assert_eq!(reread.done.len(), 2);
+        cleanup(&s);
+    }
+
+    #[test]
+    fn stale_statefile_is_ignored_wholesale() {
+        let s = spec("ckpt_stale");
+        cleanup(&s);
+        let path = state_path(&s, ShardId::full());
+        // A statefile created for a *different* spec content (other
+        // hash) must read as absent.
+        let mut other = spec("ckpt_stale");
+        other.sample_tiles = 99;
+        StateWriter::create(&path, &other, ShardId::full(), other.cells().len()).unwrap();
+        assert!(read_state(&s, &path).is_none());
+        // And a file with no header at all.
+        std::fs::write(&path, "{\"type\":\"cell\",\"index\":0}\n").unwrap();
+        assert!(read_state(&s, &path).is_none());
+        cleanup(&s);
+    }
+}

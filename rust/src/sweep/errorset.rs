@@ -1,0 +1,149 @@
+//! Fault aggregation for fallible cell execution.
+//!
+//! A million-cell grid must not abort because one cell panicked: the
+//! runner captures each failure into a [`CellError`] and the fabric
+//! collects them into an [`ErrorSet`] (the `errorset.rs` pattern from
+//! the s3invsync statefile design ROADMAP item 4 references). The set
+//! is reported at the end of the run — and persisted to the statefile
+//! as `error` lines — so a resume can retry exactly the failed cells
+//! while every completed cell stays checkpointed.
+
+use std::fmt;
+
+/// One failed sweep cell: where it sits in the grid, what it was, and
+/// the captured panic/error message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellError {
+    /// Position in the spec's cell-enumeration order.
+    pub index: usize,
+    /// Content-derived cell identity (`CellKey::id_hex`).
+    pub cell_id: String,
+    /// Target label (`SweepTarget::label`).
+    pub target: String,
+    /// Canonical scheme name.
+    pub scheme: String,
+    /// Effective SE ratio of the cell.
+    pub ratio: f64,
+    /// The captured failure message.
+    pub error: String,
+}
+
+impl fmt::Display for CellError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cell {} [{} / {} @ {}]: {}",
+            self.index, self.target, self.scheme, self.ratio, self.error
+        )
+    }
+}
+
+/// An aggregate of per-cell failures, kept in enumeration order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ErrorSet {
+    errors: Vec<CellError>,
+}
+
+impl ErrorSet {
+    pub fn new() -> ErrorSet {
+        ErrorSet::default()
+    }
+
+    /// Record one failure, keeping the set sorted by cell index (a
+    /// resumed run may interleave retries with first attempts).
+    pub fn push(&mut self, e: CellError) {
+        let at = self.errors.partition_point(|x| x.index <= e.index);
+        self.errors.insert(at, e);
+    }
+
+    /// Drop any recorded failure for `index` — a later attempt
+    /// succeeded, so the failure is superseded.
+    pub fn clear_index(&mut self, index: usize) {
+        self.errors.retain(|e| e.index != index);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.errors.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &CellError> {
+        self.errors.iter()
+    }
+
+    /// Multi-line human report (one line per failure), capped at
+    /// `max_lines` with a trailing elision count — a million-cell grid
+    /// that lost a DRAM model must not print a million lines.
+    pub fn report(&self, max_lines: usize) -> String {
+        let mut out = String::new();
+        for (i, e) in self.errors.iter().enumerate() {
+            if i == max_lines {
+                out.push_str(&format!("... and {} more", self.errors.len() - max_lines));
+                break;
+            }
+            out.push_str(&e.to_string());
+            out.push('\n');
+        }
+        out.trim_end().to_string()
+    }
+}
+
+impl fmt::Display for ErrorSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} failed cell(s):\n{}", self.len(), self.report(16))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn err(index: usize, msg: &str) -> CellError {
+        CellError {
+            index,
+            cell_id: format!("{index:016x}"),
+            target: "vgg16".into(),
+            scheme: "SEAL".into(),
+            ratio: 0.5,
+            error: msg.into(),
+        }
+    }
+
+    #[test]
+    fn push_keeps_enumeration_order() {
+        let mut set = ErrorSet::new();
+        for i in [5, 1, 3, 2] {
+            set.push(err(i, "boom"));
+        }
+        let idx: Vec<usize> = set.iter().map(|e| e.index).collect();
+        assert_eq!(idx, vec![1, 2, 3, 5]);
+        assert_eq!(set.len(), 4);
+        assert!(!set.is_empty());
+    }
+
+    #[test]
+    fn clear_index_supersedes_a_retry_success() {
+        let mut set = ErrorSet::new();
+        set.push(err(1, "boom"));
+        set.push(err(2, "bang"));
+        set.clear_index(1);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.iter().next().unwrap().index, 2);
+    }
+
+    #[test]
+    fn report_caps_output() {
+        let mut set = ErrorSet::new();
+        for i in 0..5 {
+            set.push(err(i, "x"));
+        }
+        let r = set.report(2);
+        assert_eq!(r.lines().count(), 3);
+        assert!(r.ends_with("... and 3 more"), "{r}");
+        // Under the cap: every line, no elision marker.
+        assert_eq!(set.report(10).lines().count(), 5);
+    }
+}

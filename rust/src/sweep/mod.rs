@@ -16,12 +16,23 @@
 //!   replacing the per-bench ad-hoc caches. The fig 10–15 and
 //!   tab 1/2 benches all consume it; `seal sweep` drives it from the
 //!   CLI.
+//! - [`checkpoint`] is the cell-execution fabric on top (DESIGN.md
+//!   §12): completed cells stream to an append-only statefile as they
+//!   finish, an interrupted run resumes with zero recomputation, the
+//!   grid can be split across `--shard i/n` invocations and merged
+//!   back byte-identical to a single-shot run, and a failing cell is
+//!   aggregated into an [`errorset::ErrorSet`] instead of aborting
+//!   the sweep.
 
+pub mod checkpoint;
+pub mod errorset;
 pub mod runner;
 pub mod spec;
 pub mod store;
 
-pub use runner::{run_cell, run_parallel, run_sequential, RunnerCfg};
+pub use checkpoint::{merge_shards, run_checkpointed, FabricReport, ShardId};
+pub use errorset::{CellError, ErrorSet};
+pub use runner::{cells_executed, run_cell, run_parallel, run_sequential, RunnerCfg};
 pub use spec::{resolve_sample, CellKey, SweepSpec, SweepTarget, PAPER_NETS};
 pub use store::{CellRow, SimSummary, SweepResults};
 
@@ -36,6 +47,14 @@ use crate::util::cli::Args;
 /// scheme is listable); `--schemes paper` is the six compared
 /// configurations of the paper. Transformer networks take a `--phase
 /// prefill|decode` and a `--seq` length; CNNs ignore both.
+///
+/// Fabric controls (DESIGN.md §12): `seal sweep status` inspects the
+/// store and statefiles without executing; `--resume` continues an
+/// interrupted run from its statefile; `--cell-budget N` caps how many
+/// cells this invocation executes (checkpointing the rest); `--shard
+/// i/n` runs one slice of the grid; `--merge n` combines completed
+/// shard statefiles into the final store, byte-identical to a
+/// single-shot run.
 pub fn cli(args: &Args) -> anyhow::Result<()> {
     let networks: Vec<String> = args
         .get_or("networks", &args.get_or("model", "vgg16"))
@@ -101,7 +120,45 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         base_seed: args.get_u64("seed", 0),
     };
 
-    let results = if args.has("sequential") {
+    match args.positional.first().map(String::as_str) {
+        None => {}
+        Some("status") => return print_status(&spec),
+        Some(other) => anyhow::bail!("unknown sweep action {other:?} (did you mean `status`?)"),
+    }
+
+    let budget = args.get("cell-budget").map(|s| {
+        s.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--cell-budget expects an integer, got {s:?}"))
+    });
+    let budget = match budget {
+        Some(b) => Some(b?),
+        None => None,
+    };
+
+    let results = if let Some(n) = args.get("merge") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--merge expects the shard count, got {n:?}"))?;
+        let r = checkpoint::merge_shards(&spec, n)?;
+        println!("[sweep] merged {n} shard statefiles -> {}", r.path.display());
+        r
+    } else if let Some(s) = args.get("shard") {
+        let shard = ShardId::parse(s)?;
+        let report =
+            checkpoint::run_checkpointed(&spec, &RunnerCfg::from_env(), shard, budget)?;
+        return finish_partial(&report, &format!("--shard {shard}"));
+    } else if args.has("resume") || budget.is_some() {
+        let report = checkpoint::run_checkpointed(
+            &spec,
+            &RunnerCfg::from_env(),
+            ShardId::full(),
+            budget,
+        )?;
+        match report.results {
+            Some(r) => r,
+            None => return finish_partial(&report, "--resume"),
+        }
+    } else if args.has("sequential") {
         let rows = run_sequential(&spec);
         store::save(&spec, &rows)?
     } else if args.has("force") {
@@ -147,5 +204,64 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         if results.from_cache { "cached" } else { "computed" },
         results.path.display()
     );
+    Ok(())
+}
+
+/// Report a fabric invocation that did not produce the final store:
+/// a shard run (complete or not) or a budget-capped partial run.
+/// Checkpointed progress is success — exit 0 with resume instructions;
+/// recorded cell failures are an error (they would poison a merge).
+fn finish_partial(report: &FabricReport, how: &str) -> anyhow::Result<()> {
+    println!(
+        "[sweep] {how}: {}/{} cells done ({} executed now, {} resumed) -> {}",
+        report.done,
+        report.total,
+        report.executed,
+        report.resumed,
+        report.state_path.display()
+    );
+    if report.failed > 0 {
+        anyhow::bail!("{}", report.errors);
+    }
+    if report.remaining > 0 {
+        println!("[sweep] {} cells remaining; run again with {how} to continue", report.remaining);
+    } else if how.starts_with("--shard") {
+        println!("[sweep] shard complete; combine finished shards with --merge <n>");
+    }
+    Ok(())
+}
+
+/// `seal sweep status` — inspect the store and every statefile for the
+/// spec the flags describe, without executing any cells.
+fn print_status(spec: &SweepSpec) -> anyhow::Result<()> {
+    let st = checkpoint::status(spec);
+    println!(
+        "[sweep] {} ({} cells, hash {:016x}): store {}",
+        spec.name,
+        st.total,
+        spec.hash(),
+        if st.cached { "cached" } else { "absent" }
+    );
+    println!("  store:     {}", st.store_path.display());
+    match &st.state {
+        Some(p) => println!(
+            "  statefile: {}/{} done, {} failed ({})",
+            p.done,
+            p.total,
+            p.failed,
+            p.path.display()
+        ),
+        None => println!("  statefile: none"),
+    }
+    for p in &st.shards {
+        println!(
+            "  shard {}:   {}/{} done, {} failed ({})",
+            p.shard,
+            p.done,
+            p.total,
+            p.failed,
+            p.path.display()
+        );
+    }
     Ok(())
 }

@@ -7,8 +7,19 @@
 //! itself single-threaded and fully seeded, so a parallel sweep is
 //! byte-identical to a sequential one (asserted in
 //! `tests/golden_stats.rs`).
+//!
+//! Two execution surfaces share [`run_cell`]:
+//!
+//! - the historical in-memory collectors ([`run_sequential`] /
+//!   [`run_parallel`]) — small grids, everything returned at once;
+//! - the checkpoint fabric ([`run_cells_streamed`]) — cells are
+//!   *fallible* ([`run_cell_checked`] captures a panicking cell into
+//!   an error instead of aborting the grid) and every outcome is
+//!   streamed to a [`CellSink`] the moment it completes, so nothing
+//!   holds a full grid in memory and an interrupted run loses at most
+//!   the cells in flight (`sweep::checkpoint` persists the rest).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::model::zoo::{self, Layer};
@@ -56,9 +67,21 @@ impl RunnerCfg {
     }
 }
 
+/// Process-lifetime count of cells actually executed (every
+/// [`run_cell`] call, from any surface). The resume tests assert
+/// zero recomputation against this counter: loading a checkpoint must
+/// not move it.
+static CELLS_EXECUTED: AtomicU64 = AtomicU64::new(0);
+
+/// How many cells this process has executed so far.
+pub fn cells_executed() -> u64 {
+    CELLS_EXECUTED.load(Ordering::Relaxed)
+}
+
 /// Run one cell to completion (deterministic; safe to call from any
 /// thread).
 pub fn run_cell(key: &CellKey, spec: &SweepSpec) -> CellRow {
+    CELLS_EXECUTED.fetch_add(1, Ordering::Relaxed);
     let cfg = GpuConfig::default();
     let sample = spec.sample_tiles;
     let seed = key.target.seed(spec.base_seed);
@@ -220,6 +243,85 @@ pub fn run_parallel(spec: &SweepSpec, rc: &RunnerCfg) -> Vec<CellRow> {
         .collect()
 }
 
+// -- fallible, streamed execution (the checkpoint fabric's surface) ----------
+
+/// Run one cell, capturing a panic into an error message instead of
+/// unwinding through the grid. The cell simulations are pure
+/// computation over owned state, so unwinding cannot leave shared
+/// state torn (`AssertUnwindSafe` is sound here); the worst a panic
+/// costs is one error-set entry.
+pub fn run_cell_checked(key: &CellKey, spec: &SweepSpec) -> Result<CellRow, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_cell(key, spec)))
+        .map_err(|p| panic_message(p.as_ref()))
+}
+
+/// Best-effort text of a caught panic payload (`panic!` string
+/// literals and `format!`ed messages; anything else gets a stub).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "cell panicked (non-string payload)".to_string()
+    }
+}
+
+/// Where streamed cell outcomes land, the moment each completes.
+/// Implementations must be internally synchronized (workers call
+/// [`CellSink::record`] concurrently, in completion order — NOT
+/// enumeration order; the statefile writer records the enumeration
+/// index so order is reassembled at read time).
+pub trait CellSink: Sync {
+    /// One finished cell: its enumeration index, its key, and either
+    /// the computed row or the captured failure message.
+    fn record(&self, index: usize, key: &CellKey, outcome: &Result<CellRow, String>);
+}
+
+/// Run `cells` (enumeration-indexed, e.g. from
+/// [`SweepSpec::cells_for_shard`] or a resume's pending set) across
+/// the worker pool, streaming every outcome to `sink` as it finishes.
+/// Nothing is collected: peak memory is one in-flight cell per worker
+/// regardless of grid size. A failing cell is recorded and the grid
+/// continues. With an effective thread count of 1 the cells run
+/// inline on the calling thread (the `SEAL_SWEEP_THREADS=1`
+/// contract), in slice order.
+pub fn run_cells_streamed(
+    spec: &SweepSpec,
+    cells: &[(usize, CellKey)],
+    rc: &RunnerCfg,
+    sink: &dyn CellSink,
+) {
+    if cells.is_empty() {
+        return;
+    }
+    let n_threads = rc.threads.clamp(1, cells.len());
+    if n_threads == 1 {
+        for (index, key) in cells {
+            sink.record(*index, key, &run_cell_checked(key, spec));
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let cursor = &cursor;
+            let worker = move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let (index, key) = &cells[i];
+                sink.record(*index, key, &run_cell_checked(key, spec));
+            };
+            std::thread::Builder::new()
+                .name(format!("seal-sweep-{t}"))
+                .spawn_scoped(s, worker)
+                .expect("spawn sweep worker");
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +371,67 @@ mod tests {
         let rc = RunnerCfg::from_threads_str(Some("1"));
         assert!(rc.is_inline());
         assert_eq!(run_parallel(&spec, &rc), run_sequential(&spec));
+    }
+
+    #[test]
+    fn checked_cell_captures_panic_as_error() {
+        let spec = SweepSpec {
+            name: "checked".into(),
+            targets: vec![SweepTarget::Network { name: "no_such_net".into() }],
+            schemes: vec!["Baseline".into()],
+            ratios: vec![1.0],
+            sample_tiles: 1,
+            base_seed: 0,
+        };
+        let cells = spec.cells();
+        let err = run_cell_checked(&cells[0], &spec).unwrap_err();
+        assert!(err.contains("no_such_net"), "{err}");
+        // A healthy cell still computes, identically to run_cell.
+        let ok_spec = SweepSpec {
+            targets: vec![SweepTarget::Matmul { m: 64, k: 64, n: 64 }],
+            ..spec
+        };
+        let ok_cells = ok_spec.cells();
+        let row = run_cell_checked(&ok_cells[0], &ok_spec).unwrap();
+        assert_eq!(row, run_cell(&ok_cells[0], &ok_spec));
+    }
+
+    #[test]
+    fn streamed_outcomes_cover_every_cell_and_tolerate_failures() {
+        struct Collect(Mutex<Vec<(usize, bool)>>);
+        impl CellSink for Collect {
+            fn record(&self, index: usize, _key: &CellKey, out: &Result<CellRow, String>) {
+                self.0.lock().unwrap().push((index, out.is_ok()));
+            }
+        }
+        let spec = SweepSpec {
+            name: "streamed".into(),
+            targets: vec![
+                SweepTarget::Matmul { m: 64, k: 64, n: 64 },
+                SweepTarget::Network { name: "no_such_net".into() },
+                SweepTarget::DramStream { lines: 100 },
+            ],
+            schemes: vec!["Baseline".into(), "SEAL".into()],
+            ratios: vec![0.5],
+            sample_tiles: 2,
+            base_seed: 0,
+        };
+        let cells: Vec<(usize, CellKey)> = spec.cells().into_iter().enumerate().collect();
+        let executed_before = cells_executed();
+        let sink = Collect(Mutex::new(Vec::new()));
+        run_cells_streamed(&spec, &cells, &RunnerCfg { threads: 2 }, &sink);
+        let mut got = sink.0.into_inner().unwrap();
+        got.sort();
+        // Every cell streamed exactly once; the two bad-network cells
+        // failed without taking the grid down.
+        let want_idx: Vec<usize> = (0..cells.len()).collect();
+        assert_eq!(got.iter().map(|(i, _)| *i).collect::<Vec<_>>(), want_idx);
+        let failures = got.iter().filter(|(_, ok)| !ok).count();
+        assert_eq!(failures, 2, "{got:?}");
+        // `>=`: sibling unit tests execute cells concurrently. The
+        // exact zero-recompute accounting is asserted under a serial
+        // lock in `tests/sweep_fabric.rs`.
+        assert!(cells_executed() - executed_before >= cells.len() as u64);
     }
 
     #[test]

@@ -146,11 +146,44 @@ pub struct CellKey {
     pub ratio: f64,
 }
 
+impl CellKey {
+    /// Canonical JSON identity of this cell: target label, scheme and
+    /// ratio printed by the store's own emitter, so the identity is
+    /// serialization-stable — a cell that round-trips through a
+    /// statefile hashes back to the same id.
+    pub fn canonical(&self) -> String {
+        Json::obj(vec![
+            ("target", Json::str(&self.target.label())),
+            ("scheme", Json::str(&self.scheme)),
+            ("ratio", Json::num(self.ratio)),
+        ])
+        .to_string()
+    }
+
+    /// Stable content-derived cell identity (FNV-1a of [`canonical`]).
+    /// Statefile lines carry it next to the enumeration index so a
+    /// checkpoint can never be replayed against the wrong cell.
+    ///
+    /// [`canonical`]: CellKey::canonical
+    pub fn id(&self) -> u64 {
+        fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// [`CellKey::id`] in the store's 16-hex-digit convention.
+    pub fn id_hex(&self) -> String {
+        format!("{:016x}", self.id())
+    }
+}
+
 impl SweepSpec {
     /// Enumerate unique cells in deterministic (target-major) order.
     /// Non-SE schemes collapse every ratio to 1.0; micro targets
     /// collapse both axes.
     pub fn cells(&self) -> Vec<CellKey> {
+        // First-occurrence order with a hashed dedup key: enumeration
+        // order is unchanged from the historical `Vec::contains` scan,
+        // but a million-cell grid enumerates in linear time.
+        let mut seen = std::collections::HashSet::new();
         let mut out: Vec<CellKey> = Vec::new();
         for target in &self.targets {
             for name in &self.schemes {
@@ -166,13 +199,28 @@ impl SweepSpec {
                             ratio: scheme.effective_ratio(ratio),
                         }
                     };
-                    if !out.contains(&key) {
+                    if seen.insert((key.target.label(), key.scheme.clone(), key.ratio.to_bits()))
+                    {
                         out.push(key);
                     }
                 }
             }
         }
         out
+    }
+
+    /// The cells of shard `shard` out of `of`, as (enumeration index,
+    /// cell) pairs: cell `i` belongs to shard `i % of`. The partition
+    /// is deterministic, shards are pairwise disjoint, and merging all
+    /// shards by index reproduces [`SweepSpec::cells`] exactly — the
+    /// invariant the byte-identical shard merge rests on (property
+    /// test in `tests/sweep_fabric.rs`). Round-robin (rather than
+    /// contiguous block) assignment keeps shard wall times balanced
+    /// when a grid orders cheap micro cells before whole networks.
+    pub fn cells_for_shard(&self, shard: usize, of: usize) -> Vec<(usize, CellKey)> {
+        assert!(of >= 1, "shard count must be at least 1");
+        assert!(shard < of, "shard index {shard} out of range 0..{of}");
+        self.cells().into_iter().enumerate().filter(|(i, _)| i % of == shard).collect()
     }
 
     /// Canonical JSON form — the hash input and the store's `spec`
@@ -421,6 +469,61 @@ mod tests {
     #[should_panic]
     fn sample_resolution_rejects_garbage_flag() {
         resolve_sample_from(Some("many"), None, 240);
+    }
+
+    #[test]
+    fn cell_ids_are_stable_and_distinct() {
+        let spec = demo_spec();
+        let cells = spec.cells();
+        // Identity is content-derived: recomputing never drifts, and
+        // every cell of a grid is distinct (labels are injective).
+        let ids: Vec<u64> = cells.iter().map(|c| c.id()).collect();
+        let again: Vec<u64> = spec.cells().iter().map(|c| c.id()).collect();
+        assert_eq!(ids, again);
+        let unique: std::collections::HashSet<u64> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), cells.len());
+        // The hex form is the store's 16-digit convention.
+        assert_eq!(cells[0].id_hex(), format!("{:016x}", cells[0].id()));
+        // The canonical form is serialization-stable JSON.
+        let c = &cells[0];
+        assert_eq!(
+            c.canonical(),
+            format!(
+                "{{\"ratio\":{},\"scheme\":\"{}\",\"target\":\"{}\"}}",
+                Json::num(c.ratio),
+                c.scheme,
+                c.target.label()
+            )
+        );
+    }
+
+    #[test]
+    fn shards_partition_cells_exactly() {
+        let mut spec = demo_spec();
+        spec.ratios = vec![0.25, 0.5];
+        let cells = spec.cells();
+        for n in 1..=8 {
+            let mut merged: Vec<(usize, CellKey)> = Vec::new();
+            for i in 0..n {
+                let shard = spec.cells_for_shard(i, n);
+                for (idx, _) in &shard {
+                    assert_eq!(idx % n, i, "cell {idx} landed in shard {i}/{n}");
+                }
+                merged.extend(shard);
+            }
+            merged.sort_by_key(|(i, _)| *i);
+            assert_eq!(merged.len(), cells.len(), "n={n}");
+            for (k, (idx, cell)) in merged.iter().enumerate() {
+                assert_eq!(*idx, k, "n={n}");
+                assert_eq!(cell, &cells[k], "n={n} cell {k}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_index_out_of_range_is_rejected() {
+        demo_spec().cells_for_shard(2, 2);
     }
 
     #[test]

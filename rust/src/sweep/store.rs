@@ -33,6 +33,7 @@ use crate::sim::SimStats;
 use crate::traffic::network::NetworkRun;
 use crate::util::json::Json;
 
+use super::checkpoint;
 use super::runner::{self, RunnerCfg};
 use super::spec::SweepSpec;
 
@@ -118,7 +119,10 @@ pub struct CellRow {
 }
 
 impl CellRow {
-    fn to_json(&self) -> Json {
+    /// The store's flat row object (also the payload of a statefile
+    /// `cell` line — `sweep::checkpoint` adds its framing fields on
+    /// top of this same schema).
+    pub(crate) fn to_json(&self) -> Json {
         let s = &self.sim;
         Json::obj(vec![
             ("target", Json::str(&self.target)),
@@ -144,7 +148,8 @@ impl CellRow {
         ])
     }
 
-    fn from_json(j: &Json) -> Option<CellRow> {
+    /// Parse a row object; extra keys (statefile framing) are ignored.
+    pub(crate) fn from_json(j: &Json) -> Option<CellRow> {
         let num = |k: &str| j.get(k)?.as_f64();
         Some(CellRow {
             target: j.get("target")?.as_str()?.to_string(),
@@ -188,10 +193,18 @@ impl SweepResults {
         self.rows.iter().find(|r| r.target == target && r.scheme == scheme)
     }
 
-    /// Row matching (target, scheme, ratio) with a small tolerance.
+    /// Row matching (target, scheme, ratio). Ratios are matched by
+    /// their *serialized label* (the store's own JSON emission) or,
+    /// failing that, by a small epsilon — never by exact `f64`
+    /// equality, so a ratio that round-trips through JSON or arrives
+    /// as an accumulated sum (`0.1 + 0.2`) still finds its row
+    /// (regression-tested in `tests/sweep_fabric.rs`).
     pub fn get_at(&self, target: &str, scheme: &str, ratio: f64) -> Option<&CellRow> {
+        let label = Json::num(ratio).to_string();
         self.rows.iter().find(|r| {
-            r.target == target && r.scheme == scheme && (r.ratio - ratio).abs() < 1e-9
+            r.target == target
+                && r.scheme == scheme
+                && (Json::num(r.ratio).to_string() == label || (r.ratio - ratio).abs() < 1e-9)
         })
     }
 }
@@ -212,7 +225,9 @@ pub fn document(spec: &SweepSpec, rows: &[CellRow]) -> String {
 }
 
 /// Parse a store document previously produced by [`document`],
-/// validating the spec hash.
+/// validating the spec hash and that the row set covers the spec's
+/// whole grid (a partial document — e.g. an incomplete merge — must
+/// read as a cache miss, not as a short row list consumers index into).
 pub fn parse_document(spec: &SweepSpec, text: &str) -> Option<Vec<CellRow>> {
     let j = Json::parse(text).ok()?;
     if j.get("spec_hash")?.as_str()? != format!("{:016x}", spec.hash()) {
@@ -222,36 +237,82 @@ pub fn parse_document(spec: &SweepSpec, text: &str) -> Option<Vec<CellRow>> {
     for r in j.get("rows")?.as_arr()? {
         rows.push(CellRow::from_json(r)?);
     }
+    if rows.len() != spec.cells().len() {
+        return None;
+    }
     Some(rows)
 }
 
-/// Write rows for `spec` to its store file.
-pub fn save(spec: &SweepSpec, rows: &[CellRow]) -> anyhow::Result<SweepResults> {
-    let path = store_path(spec);
+/// Write `text` to `path` atomically: a sibling temp file in the same
+/// directory is renamed into place, so an interrupted writer can never
+/// leave a torn half-document behind (readers see the old file or the
+/// new one, nothing in between). Shared by the store document and the
+/// statefile's canonical finalize rewrite.
+pub(crate) fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(&path, document(spec, rows))?;
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Write rows for `spec` to its store file (atomically — see
+/// [`write_atomic`]).
+pub fn save(spec: &SweepSpec, rows: &[CellRow]) -> anyhow::Result<SweepResults> {
+    let path = store_path(spec);
+    write_atomic(&path, &document(spec, rows))?;
     Ok(SweepResults { rows: rows.to_vec(), path, from_cache: false })
 }
 
-/// Load the store for `spec` if present and hash-consistent.
+/// Load the store for `spec` if present and hash-consistent. A store
+/// file that exists but cannot be parsed — torn by a pre-atomic-write
+/// interrupt, truncated, or plain garbage — is a logged *cache miss*
+/// (the caller re-runs and overwrites it), never a panic.
 pub fn load(spec: &SweepSpec) -> Option<SweepResults> {
     let path = store_path(spec);
     let text = std::fs::read_to_string(&path).ok()?;
-    let rows = parse_document(spec, &text)?;
-    Some(SweepResults { rows, path, from_cache: true })
+    match parse_document(spec, &text) {
+        Some(rows) => Some(SweepResults { rows, path, from_cache: true }),
+        None => {
+            eprintln!(
+                "[sweep] ignoring unreadable or mismatched store {} (re-running)",
+                path.display()
+            );
+            None
+        }
+    }
 }
 
 /// Load the cached results or run the sweep with `rc` and persist it.
 /// `RunnerCfg { threads: 1 }` runs inline — small grids (e.g. the
 /// serving coordinator's two-cell calibration) skip the worker pool.
+///
+/// Cache misses route through the checkpoint fabric
+/// (`sweep::checkpoint`): completed cells stream to a statefile as
+/// they finish, a valid statefile left by an interrupted run is
+/// resumed with zero recomputation, and per-cell failures are
+/// aggregated into the returned error instead of panicking through
+/// the grid. When the statefile cannot be written at all (read-only
+/// `results/`), the run falls back to the historical in-memory path
+/// so the old no-filesystem behavior is preserved.
 pub fn load_or_run_with(spec: &SweepSpec, rc: &RunnerCfg) -> anyhow::Result<SweepResults> {
     if let Some(r) = load(spec) {
         return Ok(r);
     }
-    let rows = runner::run_parallel(spec, rc);
-    save(spec, &rows)
+    match checkpoint::run_checkpointed(spec, rc, checkpoint::ShardId::full(), None) {
+        Ok(report) => match report.results {
+            Some(r) => Ok(r),
+            None => anyhow::bail!("sweep {:?} finished with {}", spec.name, report.errors),
+        },
+        // Statefile unavailable (not a cell failure): historical path.
+        Err(_) => {
+            let rows = runner::run_parallel(spec, rc);
+            save(spec, &rows)
+        }
+    }
 }
 
 /// Load the cached results or run the sweep in parallel and persist it.

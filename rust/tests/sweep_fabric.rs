@@ -1,0 +1,232 @@
+//! Integration suite for the checkpointed sweep fabric (DESIGN.md
+//! §12): interrupt/resume with zero recomputation, shard-and-merge
+//! byte-identity against a single-shot run, fault aggregation that
+//! survives a panicking cell, and the store's corrupt-file tolerance.
+//!
+//! Tests that count executed cells or share `results/` paths take the
+//! `serial()` lock: the `cells_executed` counter is process-wide, so
+//! concurrent tests would otherwise leak executions into each other's
+//! deltas.
+
+use std::sync::{Mutex, MutexGuard};
+
+use seal::sweep::{
+    checkpoint, runner, store, RunnerCfg, ShardId, SweepResults, SweepSpec, SweepTarget,
+};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A 5-cell grid that exercises all three row kinds: matmul + conv
+/// layer cells (Baseline collapses the ratio, SEAL keeps it) and one
+/// micro cell.
+fn spec(name: &str) -> SweepSpec {
+    SweepSpec {
+        name: name.into(),
+        targets: vec![
+            SweepTarget::Matmul { m: 64, k: 64, n: 64 },
+            SweepTarget::ConvLayer { index: 0 },
+            SweepTarget::DramStream { lines: 400 },
+        ],
+        schemes: vec!["Baseline".into(), "SEAL".into()],
+        ratios: vec![0.5],
+        sample_tiles: 2,
+        base_seed: 0,
+    }
+}
+
+fn cleanup(s: &SweepSpec) {
+    let _ = std::fs::remove_file(store::store_path(s));
+    let _ = std::fs::remove_file(checkpoint::state_path(s, ShardId::full()));
+    for count in 2..=8 {
+        for index in 0..count {
+            let _ = std::fs::remove_file(checkpoint::state_path(s, ShardId { index, count }));
+        }
+    }
+}
+
+#[test]
+fn interrupted_sweep_resumes_with_zero_recomputation() {
+    let _g = serial();
+    let s = spec("fabric_resume");
+    cleanup(&s);
+    let total = s.cells().len();
+    assert_eq!(total, 5);
+    // The reference bytes a single-shot run would write.
+    let single = store::document(&s, &runner::run_sequential(&s));
+    let rc = RunnerCfg { threads: 1 };
+
+    // First pass: a cell budget simulates an interrupt after 2 cells.
+    let before = runner::cells_executed();
+    let r1 = checkpoint::run_checkpointed(&s, &rc, ShardId::full(), Some(2)).unwrap();
+    assert_eq!(runner::cells_executed() - before, 2);
+    assert!(r1.results.is_none(), "partial run must not produce the store");
+    assert_eq!((r1.executed, r1.done, r1.failed, r1.remaining), (2, 2, 0, 3));
+    let state = checkpoint::state_path(&s, ShardId::full());
+    assert!(state.exists(), "interrupt leaves the statefile behind");
+    assert!(!store::store_path(&s).exists());
+    // The finalize pass wrote the terminal summary.
+    let text = std::fs::read_to_string(&state).unwrap();
+    assert!(text.contains("\"type\":\"summary\""), "{text}");
+
+    // Resume: only the 3 remaining cells execute — zero recomputation.
+    let before = runner::cells_executed();
+    let r2 = checkpoint::run_checkpointed(&s, &rc, ShardId::full(), None).unwrap();
+    assert_eq!(
+        runner::cells_executed() - before,
+        3,
+        "resume recomputed checkpointed cells"
+    );
+    assert_eq!((r2.executed, r2.resumed, r2.done, r2.remaining), (3, 2, 5, 0));
+    let results = r2.results.expect("completed run produces the store");
+    assert!(!state.exists(), "completed run retires the statefile");
+
+    // The resumed document is byte-identical to a single-shot run.
+    let bytes = std::fs::read_to_string(&results.path).unwrap();
+    assert_eq!(bytes, single, "resumed store differs from single-shot");
+
+    // From here on it is a pure cache hit: nothing executes.
+    let before = runner::cells_executed();
+    let again = store::load_or_run_with(&s, &rc).unwrap();
+    assert!(again.from_cache);
+    assert_eq!(runner::cells_executed() - before, 0);
+    cleanup(&s);
+}
+
+#[test]
+fn sharded_run_merges_byte_identical_to_single_shot() {
+    let _g = serial();
+    let s = spec("fabric_shard");
+    cleanup(&s);
+    let single = store::document(&s, &runner::run_sequential(&s));
+    let n = 3;
+    for index in 0..n {
+        let shard = ShardId { index, count: n };
+        let r = checkpoint::run_checkpointed(&s, &RunnerCfg { threads: 2 }, shard, None).unwrap();
+        assert!(r.results.is_none(), "a shard run never writes the final store");
+        assert_eq!((r.failed, r.remaining), (0, 0), "shard {shard}");
+        assert!(
+            checkpoint::state_path(&s, shard).exists(),
+            "shard statefile must be kept for the merge"
+        );
+    }
+
+    // `status` sees every shard complete and no store yet.
+    let st = checkpoint::status(&s);
+    assert!(!st.cached);
+    assert_eq!(st.total, 5);
+    assert_eq!(st.shards.len(), n);
+    for p in &st.shards {
+        assert_eq!((p.done, p.failed), (p.total, 0), "shard {}", p.shard);
+    }
+
+    let merged = checkpoint::merge_shards(&s, n).unwrap();
+    let bytes = std::fs::read_to_string(&merged.path).unwrap();
+    assert_eq!(bytes, single, "merged store differs from single-shot");
+    assert!(checkpoint::status(&s).cached);
+
+    // Merging with statefiles missing is a clean error, not a partial
+    // store: ask for a shard count that was never run.
+    let err = checkpoint::merge_shards(&s, 2).unwrap_err();
+    assert!(format!("{err:#}").contains("statefile"), "{err:#}");
+    cleanup(&s);
+}
+
+#[test]
+fn failing_cell_is_recorded_without_aborting_the_grid() {
+    let _g = serial();
+    let s = SweepSpec {
+        name: "fabric_errors".into(),
+        targets: vec![
+            SweepTarget::Matmul { m: 64, k: 64, n: 64 },
+            SweepTarget::Network { name: "no_such_net".into() },
+        ],
+        schemes: vec!["Baseline".into()],
+        ratios: vec![1.0],
+        sample_tiles: 1,
+        base_seed: 0,
+    };
+    cleanup(&s);
+    let rc = RunnerCfg { threads: 1 };
+    let r = checkpoint::run_checkpointed(&s, &rc, ShardId::full(), None).unwrap();
+    assert!(r.results.is_none());
+    assert_eq!((r.done, r.failed, r.remaining), (1, 1, 1));
+    let e = r.errors.iter().next().expect("failure recorded");
+    assert!(e.error.contains("no_such_net"), "{e}");
+    assert_eq!(e.target, "no_such_net");
+
+    // The healthy cell is checkpointed: a retry re-executes only the
+    // failed cell, and the aggregate failure surfaces as the error of
+    // the store-level entry point (no panic anywhere).
+    let before = runner::cells_executed();
+    let err = store::load_or_run_with(&s, &rc).unwrap_err();
+    assert_eq!(runner::cells_executed() - before, 1, "retry recomputed the healthy cell");
+    assert!(format!("{err:#}").contains("no_such_net"), "{err:#}");
+    cleanup(&s);
+}
+
+#[test]
+fn corrupt_store_files_are_cache_misses_not_panics() {
+    let _g = serial();
+    let s = spec("fabric_corrupt");
+    cleanup(&s);
+    let rc = RunnerCfg { threads: 1 };
+    let first = store::load_or_run_with(&s, &rc).unwrap();
+    assert!(!first.from_cache);
+    let good = std::fs::read_to_string(&first.path).unwrap();
+
+    // Truncated store (a torn pre-atomic-write interrupt).
+    std::fs::write(&first.path, &good[..good.len() / 2]).unwrap();
+    assert!(store::load(&s).is_none(), "truncated store must read as a miss");
+    let re = store::load_or_run_with(&s, &rc).unwrap();
+    assert!(!re.from_cache);
+    assert_eq!(std::fs::read_to_string(&re.path).unwrap(), good, "store not healed");
+
+    // Garbage store.
+    std::fs::write(&first.path, "definitely {{{ not json").unwrap();
+    assert!(store::load(&s).is_none(), "garbage store must read as a miss");
+    let re = store::load_or_run_with(&s, &rc).unwrap();
+    assert_eq!(std::fs::read_to_string(&re.path).unwrap(), good);
+
+    // A syntactically valid store whose rows do not cover the whole
+    // grid (e.g. left by a buggy merge) is also a miss — consumers
+    // index into the full grid.
+    let short = store::document(&s, &re.rows[..re.rows.len() - 1]);
+    std::fs::write(&first.path, short).unwrap();
+    assert!(store::load(&s).is_none(), "short row set must read as a miss");
+    cleanup(&s);
+}
+
+#[test]
+fn get_at_matches_serialized_ratio_labels_and_float_sums() {
+    // No disk involved: the lookup contract alone. 0.1 + 0.2 is the
+    // classic sum that is not exactly 0.3 — it must still find the
+    // 0.3 row. (Serialized: this executes a cell, which would leak
+    // into the counting tests' deltas.)
+    let _g = serial();
+    let s = SweepSpec {
+        name: "fabric_get_at".into(),
+        targets: vec![SweepTarget::Matmul { m: 64, k: 64, n: 64 }],
+        schemes: vec!["SEAL".into()],
+        ratios: vec![0.3],
+        sample_tiles: 1,
+        base_seed: 0,
+    };
+    let results = SweepResults {
+        rows: runner::run_sequential(&s),
+        path: std::path::PathBuf::new(),
+        from_cache: false,
+    };
+    let acc = 0.1 + 0.2;
+    assert_ne!(acc, 0.3, "if this sum were exact the test would be vacuous");
+    assert!(results.get_at("matmul_64x64x64", "SEAL", 0.3).is_some());
+    assert!(
+        results.get_at("matmul_64x64x64", "SEAL", acc).is_some(),
+        "accumulated ratio failed to find its row"
+    );
+    assert!(results.get_at("matmul_64x64x64", "SEAL", 0.31).is_none());
+    assert!(results.get_at("matmul_64x64x64", "Baseline", 0.3).is_none());
+}
