@@ -51,9 +51,13 @@ pub use server::{
     EngineStats, ServeBackend, ServeConfig, ServeMode, ServeOutcome, ServeReport,
 };
 #[allow(deprecated)]
-pub use server::{scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic, ServeCfg, SynthServeCfg};
+pub use server::{
+    scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic, ServeCfg, SynthServeCfg,
+};
 pub use session::{run_continuous, ContinuousCfg, ContinuousReport, DecodeSession};
-pub use telemetry::{Event, EventSink, ParsedEvent, RejectReason, SharedBuf, Trace};
+pub use telemetry::{
+    Event, EventSink, ParsedEvent, RejectReason, RunMeta, ScanStats, SharedBuf, Trace,
+};
 
 use crate::util::cli::Args;
 

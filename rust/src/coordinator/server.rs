@@ -59,7 +59,7 @@ use super::batcher::Batcher;
 use super::queue::BoundedQueue;
 use super::secure_store::SecureModelStore;
 use super::session::{self, ContinuousReport};
-use super::telemetry::{self, Event, EventSink, RejectReason};
+use super::telemetry::{self, Event, EventSink, RejectReason, RunMeta};
 
 /// What the coordinator does when the admission queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -339,6 +339,49 @@ impl ServeConfig {
         }
     }
 
+    /// The `run_meta` header stamped first into `--events` recordings:
+    /// effective mode/seed after defaulting, plus a compact free-form
+    /// config summary (`seal trace-report` prints it verbatim).
+    fn run_meta(&self, mode: &str, seed: u64) -> RunMeta {
+        let backend = match &self.backend {
+            ServeBackend::Synthetic { .. } => "synthetic",
+            ServeBackend::Pjrt { .. } => "pjrt",
+        };
+        let config = match self.mode {
+            ServeMode::Continuous {
+                sessions,
+                steps_per_session,
+                prompt_tokens,
+                kv_capacity_blocks,
+                block_tokens,
+            } => format!(
+                "backend={backend} sessions={sessions} steps={steps_per_session} \
+                 prompt={prompt_tokens} kv_capacity={kv_capacity_blocks} \
+                 block_tokens={block_tokens} batch={} ratio={}",
+                self.batch_max.max(1),
+                self.se_ratio
+            ),
+            ServeMode::WholeRequest => format!(
+                "backend={backend} requests={} workers={} batch={} queue={} admission={} \
+                 rate={} ratio={}",
+                self.n_requests,
+                self.n_workers.max(1),
+                self.batch_max.max(1),
+                self.queue_cap.max(1),
+                self.admission,
+                self.arrival_per_ms,
+                self.se_ratio
+            ),
+        };
+        RunMeta {
+            schema: telemetry::EVENTS_SCHEMA.to_string(),
+            scheme: self.scheme.name().to_string(),
+            mode: mode.to_string(),
+            seed,
+            config,
+        }
+    }
+
     /// Run the configured serve: dispatches on backend × mode.
     pub fn run(&self) -> crate::Result<ServeOutcome> {
         match (&self.backend, self.mode) {
@@ -352,6 +395,7 @@ impl ServeConfig {
                     block_tokens,
                 },
             ) => {
+                let seed = self.seed.unwrap_or(spec.seed ^ 0xc0de);
                 let ccfg = session::ContinuousCfg {
                     sessions,
                     steps_per_session,
@@ -365,8 +409,11 @@ impl ServeConfig {
                     scheme: self.scheme,
                     se_ratio: self.se_ratio,
                     slowdown: self.resolve_slowdown(),
-                    seed: self.seed.unwrap_or(spec.seed ^ 0xc0de),
-                    events: open_sink(self.events.as_deref(), self.scheme.name())?,
+                    seed,
+                    events: open_sink(
+                        self.events.as_deref(),
+                        &self.run_meta("continuous", seed),
+                    )?,
                 };
                 Ok(ServeOutcome::Continuous(session::run_continuous(spec, &ccfg)?))
             }
@@ -1066,13 +1113,16 @@ fn arrival_plan(
     }
 }
 
-/// Open the opt-in event sink (`--events`); `None` stays free.
-fn open_sink(path: Option<&Path>, scheme: &str) -> crate::Result<Option<Arc<EventSink>>> {
+/// Open the opt-in event sink (`--events`); `None` stays free. Every
+/// recording starts with the stream's `run_meta` header line so
+/// `seal trace-report` can label it without trusting the filename.
+fn open_sink(path: Option<&Path>, meta: &RunMeta) -> crate::Result<Option<Arc<EventSink>>> {
     match path {
         None => Ok(None),
         Some(p) => {
-            let sink = EventSink::to_path(p, scheme)
+            let sink = EventSink::to_path(p, &meta.scheme)
                 .map_err(|e| anyhow::anyhow!("events {}: {e}", p.display()))?;
+            sink.emit_meta(meta);
             Ok(Some(Arc::new(sink)))
         }
     }
@@ -1094,12 +1144,9 @@ fn run_pjrt_whole(
 
     // Arrival schedule: Poisson (historical seed 7 unless --seed), or
     // a replayed trace whose length overrides --requests.
-    let (arrival, n_requests) = arrival_plan(
-        cfg.replay.as_deref(),
-        cfg.arrival_per_ms,
-        cfg.seed.unwrap_or(7),
-        cfg.n_requests,
-    )?;
+    let seed = cfg.seed.unwrap_or(7);
+    let (arrival, n_requests) =
+        arrival_plan(cfg.replay.as_deref(), cfg.arrival_per_ms, seed, cfg.n_requests)?;
 
     // Request sample over the test split.
     let img = data.image_len();
@@ -1137,7 +1184,7 @@ fn run_pjrt_whole(
         batch_timeout: Duration::from_millis(2),
         arrival,
         slowdown,
-        events: open_sink(cfg.events.as_deref(), cfg.scheme.name())?,
+        events: open_sink(cfg.events.as_deref(), &cfg.run_meta("whole_request", seed))?,
     };
     let stats = run_engine(&ecfg, inputs, |_worker| {
         let (hw, ch, ncls) = (data.hw, data.channels, data.n_classes);
@@ -1154,12 +1201,9 @@ fn run_synthetic_whole(cfg: &ServeConfig, spec: &SynthSpec) -> crate::Result<Ser
     let theta = spec.theta();
     let sealed = SecureModelStore::seal(&info, &theta, cfg.se_ratio, &SecureModelStore::DEMO_KEY);
     let reference = SyntheticBackend::from_theta(&theta, spec);
-    let (arrival, n_requests) = arrival_plan(
-        cfg.replay.as_deref(),
-        cfg.arrival_per_ms,
-        cfg.seed.unwrap_or(spec.seed ^ 0xa771),
-        cfg.n_requests,
-    )?;
+    let seed = cfg.seed.unwrap_or(spec.seed ^ 0xa771);
+    let (arrival, n_requests) =
+        arrival_plan(cfg.replay.as_deref(), cfg.arrival_per_ms, seed, cfg.n_requests)?;
     let inputs = spec.requests(n_requests, &reference);
     let slowdown = cfg.resolve_slowdown();
 
@@ -1171,7 +1215,7 @@ fn run_synthetic_whole(cfg: &ServeConfig, spec: &SynthSpec) -> crate::Result<Ser
         batch_timeout: Duration::from_millis(2),
         arrival,
         slowdown,
-        events: open_sink(cfg.events.as_deref(), cfg.scheme.name())?,
+        events: open_sink(cfg.events.as_deref(), &cfg.run_meta("whole_request", seed))?,
     };
     let encrypted_lines = sealed.encrypted_lines();
     let total_lines = sealed.n_lines();

@@ -26,6 +26,15 @@
 //! [`arrival_times_us`] + [`gaps_from_times`] turn any trace —
 //! recorded or hand-synthesized ([`synth_arrival_trace`]) — into the
 //! deterministic arrival schedule `seal serve --replay` drives.
+//!
+//! The trace-forensics subsystem (`seal trace-report`, DESIGN.md §13)
+//! added two reader-side refinements, both additive to
+//! `seal-events/v1`: a [`RunMeta`] header line stamped first in every
+//! recorded stream (pre-existing readers skip it as an unknown type),
+//! and [`scan_events`] — a streaming variant of [`read_events`] that
+//! folds arbitrarily long soak streams in bounded memory and counts
+//! timestamp regressions ([`ScanStats::out_of_order`]) instead of
+//! letting a shuffled trace silently produce a garbage replay schedule.
 
 use std::fmt;
 use std::fs::File;
@@ -67,6 +76,59 @@ impl std::str::FromStr for RejectReason {
             "shed" => Ok(RejectReason::Shed),
             "closed" => Ok(RejectReason::Closed),
             _ => anyhow::bail!("unknown reject reason {s:?} (shed|closed)"),
+        }
+    }
+}
+
+/// Stream-level metadata stamped as the *first* line of every recorded
+/// event stream: schema tag, scheme, serving mode, the *effective*
+/// seed (after `ServeConfig` defaulting), and a compact free-form
+/// config summary — so `seal trace-report` can label and group streams
+/// without trusting filenames.
+///
+/// On the wire this is one more `seal-events/v1` line with
+/// `"type":"run_meta"`. It deliberately carries `"t_us":0`: the v1
+/// reader requires `t_us` *before* reaching its unknown-type branch,
+/// so omitting it would make pre-PR-9 readers count the header as
+/// **malformed** rather than the intended (and harmless) **unknown**.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunMeta {
+    /// The writer's schema tag (normally [`EVENTS_SCHEMA`]).
+    pub schema: String,
+    /// Wire scheme name (`Scheme::name()`), same stamp as every event.
+    pub scheme: String,
+    /// `"whole_request"` or `"continuous"`.
+    pub mode: String,
+    /// Effective arrival/session seed after defaulting.
+    pub seed: u64,
+    /// Compact human-readable config summary (free-form, never parsed).
+    pub config: String,
+}
+
+impl RunMeta {
+    /// Serialize as the stream's header line (sans newline).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("run_meta")),
+            ("schema", Json::str(&self.schema)),
+            ("scheme", Json::str(&self.scheme)),
+            ("mode", Json::str(&self.mode)),
+            ("seed", Json::num(self.seed as f64)),
+            ("config", Json::str(&self.config)),
+            ("t_us", Json::num(0.0)),
+        ])
+    }
+
+    /// Tolerant parse: missing fields default rather than failing, so
+    /// a header from a future writer still labels the stream.
+    fn from_json(j: &Json) -> RunMeta {
+        let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+        RunMeta {
+            schema: s("schema"),
+            scheme: s("scheme"),
+            mode: s("mode"),
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            config: s("config"),
         }
     }
 }
@@ -185,12 +247,24 @@ pub struct ParsedEvent {
     pub event: Event,
 }
 
-/// Parse one already-trimmed JSONL line. `Ok(None)` means the line was
-/// a structurally valid object of an *unknown* type (forward compat:
-/// counted, skipped, never fatal); `Err(())` means malformed.
-fn parse_line(line: &str) -> Result<Option<ParsedEvent>, ()> {
+/// What one structurally valid JSONL line turned out to be.
+enum ParsedLine {
+    /// A recognized lifecycle event.
+    Event(ParsedEvent),
+    /// The stream's `run_meta` header.
+    Meta(RunMeta),
+    /// A valid object of an *unknown* type (forward compat: counted,
+    /// skipped, never fatal).
+    Unknown,
+}
+
+/// Parse one already-trimmed JSONL line; `Err(())` means malformed.
+fn parse_line(line: &str) -> Result<ParsedLine, ()> {
     let j = Json::parse(line).map_err(|_| ())?;
     let ty = j.get("type").and_then(Json::as_str).ok_or(())?;
+    if ty == "run_meta" {
+        return Ok(ParsedLine::Meta(RunMeta::from_json(&j)));
+    }
     let t_us = j.get("t_us").and_then(Json::as_u64).ok_or(())?;
     let scheme = j.get("scheme").and_then(Json::as_str).unwrap_or("?").to_string();
     let req = |k: &str| j.get(k).and_then(Json::as_u64).ok_or(());
@@ -226,9 +300,9 @@ fn parse_line(line: &str) -> Result<Option<ParsedEvent>, ()> {
             cycles: req("cycles")?,
             t_us,
         },
-        _ => return Ok(None),
+        _ => return Ok(ParsedLine::Unknown),
     };
-    Ok(Some(ParsedEvent { scheme, event }))
+    Ok(ParsedLine::Event(ParsedEvent { scheme, event }))
 }
 
 /// A tolerantly read trace: every parseable event, plus the accounting
@@ -242,6 +316,11 @@ pub struct Trace {
     pub malformed: usize,
     /// Structurally valid objects with an unrecognized `type`.
     pub unknown: usize,
+    /// Events whose `t_us` ran strictly backwards vs. the previous
+    /// event in stream order (equal timestamps are fine).
+    pub out_of_order: usize,
+    /// The stream's `run_meta` header, when one was recorded.
+    pub run_meta: Option<RunMeta>,
 }
 
 impl Trace {
@@ -250,20 +329,47 @@ impl Trace {
     }
 }
 
-/// Read a JSONL event stream tolerantly: CRLF-insensitive, blank lines
-/// ignored, malformed/unknown lines counted and skipped. Content can
-/// never make this abort — only the underlying reader erroring stops
-/// it early (counted as one malformed line).
-pub fn read_events(r: impl BufRead) -> Trace {
-    let mut trace = Trace::default();
+/// Accounting from one streaming pass over an event stream: everything
+/// in [`Trace`] except the events themselves, which the caller folded.
+#[derive(Debug, Default)]
+pub struct ScanStats {
+    /// Non-empty lines seen (parsed + skipped).
+    pub lines: usize,
+    /// Invalid JSON, missing/ill-typed fields, or a truncated tail.
+    pub malformed: usize,
+    /// Structurally valid objects with an unrecognized `type`.
+    pub unknown: usize,
+    /// Events whose `t_us` ran strictly backwards vs. the previous
+    /// event in stream order (equal timestamps are fine). A nonzero
+    /// count means replay schedules derived from this stream were
+    /// reconstructed from re-sorted timestamps, not native order.
+    pub out_of_order: usize,
+    /// The stream's `run_meta` header, when present (first one wins).
+    pub run_meta: Option<RunMeta>,
+}
+
+impl ScanStats {
+    pub fn skipped(&self) -> usize {
+        self.malformed + self.unknown
+    }
+}
+
+/// Streaming tolerant reader: same contract as [`read_events`]
+/// (CRLF-insensitive, blank lines free, malformed/unknown counted and
+/// skipped, content can never abort it) but O(1) in stream length —
+/// each parsed event is handed to `on_event` and dropped, so
+/// arbitrarily long soak streams fold in bounded memory.
+pub fn scan_events(r: impl BufRead, mut on_event: impl FnMut(ParsedEvent)) -> ScanStats {
+    let mut stats = ScanStats::default();
+    let mut prev_t: Option<u64> = None;
     for line in r.lines() {
         let line = match line {
             Ok(l) => l,
             Err(_) => {
                 // Unreadable (e.g. invalid UTF-8): count and stop —
                 // line framing cannot be trusted past this point.
-                trace.lines += 1;
-                trace.malformed += 1;
+                stats.lines += 1;
+                stats.malformed += 1;
                 break;
             }
         };
@@ -271,14 +377,49 @@ pub fn read_events(r: impl BufRead) -> Trace {
         if line.trim().is_empty() {
             continue;
         }
-        trace.lines += 1;
+        stats.lines += 1;
         match parse_line(line) {
-            Ok(Some(ev)) => trace.events.push(ev),
-            Ok(None) => trace.unknown += 1,
-            Err(()) => trace.malformed += 1,
+            Ok(ParsedLine::Event(ev)) => {
+                let t = ev.event.t_us();
+                if prev_t.is_some_and(|p| t < p) {
+                    stats.out_of_order += 1;
+                }
+                prev_t = Some(t);
+                on_event(ev);
+            }
+            Ok(ParsedLine::Meta(m)) => {
+                if stats.run_meta.is_none() {
+                    stats.run_meta = Some(m);
+                }
+            }
+            Ok(ParsedLine::Unknown) => stats.unknown += 1,
+            Err(()) => stats.malformed += 1,
         }
     }
-    trace
+    stats
+}
+
+/// [`scan_events`] over a file path (`io::Error` only for the open).
+pub fn scan_events_path(path: &Path, on_event: impl FnMut(ParsedEvent)) -> io::Result<ScanStats> {
+    let f = File::open(path)?;
+    Ok(scan_events(io::BufReader::new(f), on_event))
+}
+
+/// Read a JSONL event stream tolerantly into memory: CRLF-insensitive,
+/// blank lines ignored, malformed/unknown lines counted and skipped.
+/// Content can never make this abort — only the underlying reader
+/// erroring stops it early (counted as one malformed line).
+pub fn read_events(r: impl BufRead) -> Trace {
+    let mut events = Vec::new();
+    let stats = scan_events(r, |ev| events.push(ev));
+    Trace {
+        events,
+        lines: stats.lines,
+        malformed: stats.malformed,
+        unknown: stats.unknown,
+        out_of_order: stats.out_of_order,
+        run_meta: stats.run_meta,
+    }
 }
 
 /// [`read_events`] over a file path (`io::Error` only for the open —
@@ -373,7 +514,17 @@ impl EventSink {
     /// Write failures are deliberately swallowed: telemetry must never
     /// take the serving path down.
     pub fn emit(&self, ev: &Event) {
-        let mut line = ev.to_json(&self.scheme).to_string();
+        self.emit_line(ev.to_json(&self.scheme));
+    }
+
+    /// Emit the stream's [`RunMeta`] header (call once, before any
+    /// event). Same swallow-failures contract as [`EventSink::emit`].
+    pub fn emit_meta(&self, meta: &RunMeta) {
+        self.emit_line(meta.to_json());
+    }
+
+    fn emit_line(&self, j: Json) {
+        let mut line = j.to_string();
         line.push('\n');
         let mut out = self.out.lock().unwrap();
         let _ = out.write_all(line.as_bytes());
@@ -509,6 +660,88 @@ mod tests {
         assert_eq!(trace.events.len(), 4);
         assert_eq!(arrival_times_us(&trace), times.to_vec());
         assert!(trace.events.iter().all(|p| p.scheme == "hand"));
+    }
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            schema: EVENTS_SCHEMA.to_string(),
+            scheme: "SEAL".to_string(),
+            mode: "whole_request".to_string(),
+            seed: 42,
+            config: "workers=2 batch=8".to_string(),
+        }
+    }
+
+    #[test]
+    fn run_meta_roundtrips_and_is_not_counted_as_an_event() {
+        let buf = SharedBuf::default();
+        let sink = EventSink::to_writer(Box::new(buf.clone()), "SEAL");
+        sink.emit_meta(&meta());
+        sink.emit(&Event::Admitted { req: 0, t_us: 3 });
+        let trace = read_events(buf.take_string().as_bytes());
+        assert_eq!(trace.lines, 2);
+        assert_eq!(trace.skipped(), 0, "run_meta must not count as unknown in the new reader");
+        assert_eq!(trace.events.len(), 1);
+        assert_eq!(trace.run_meta, Some(meta()));
+    }
+
+    #[test]
+    fn run_meta_wire_line_is_unknown_not_malformed_to_pre_pr9_readers() {
+        // The v1 reader requires `t_us` *before* its unknown-type
+        // branch, so the header must carry one or old readers would
+        // count it as malformed. Pin the wire property here.
+        let j = meta().to_json();
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("run_meta"));
+        assert_eq!(j.get("t_us").and_then(Json::as_u64), Some(0));
+        // Regression for the PR-6 contract: an unknown type carrying a
+        // `t_us` is still counted + skipped exactly as before.
+        let text = "{\"type\":\"frobnicate\",\"t_us\":7,\"scheme\":\"SEAL\"}\n";
+        let trace = read_events(text.as_bytes());
+        assert_eq!((trace.events.len(), trace.unknown, trace.malformed), (0, 1, 0));
+    }
+
+    #[test]
+    fn first_run_meta_wins_over_later_duplicates() {
+        let mut text = meta().to_json().to_string();
+        text.push('\n');
+        let mut second = meta();
+        second.seed = 99;
+        text.push_str(&second.to_json().to_string());
+        text.push('\n');
+        let trace = read_events(text.as_bytes());
+        assert_eq!(trace.run_meta.map(|m| m.seed), Some(42));
+    }
+
+    #[test]
+    fn shuffled_trace_counts_out_of_order_and_still_replays_sorted() {
+        let mut text = String::new();
+        // Stream order 100, 50, 50, 200, 150: two strict regressions
+        // (100→50 and 200→150); the duplicate 50 is not one.
+        for (req, t) in [(0u64, 100u64), (1, 50), (2, 50), (3, 200), (4, 150)] {
+            text.push_str(&Event::Admitted { req, t_us: t }.to_json("x").to_string());
+            text.push('\n');
+        }
+        let trace = read_events(text.as_bytes());
+        assert_eq!(trace.out_of_order, 2);
+        let times = arrival_times_us(&trace);
+        assert_eq!(times, vec![50, 50, 100, 150, 200]);
+        // Reconstructed gaps are all non-negative: duplicates clamp to
+        // zero instead of poisoning the replay schedule.
+        assert_eq!(gaps_from_times(&times), vec![50, 0, 50, 50, 50]);
+    }
+
+    #[test]
+    fn scan_events_matches_read_events_accounting() {
+        let text = format!(
+            "{}\n{}\nnot json\n",
+            meta().to_json(),
+            Event::Admitted { req: 0, t_us: 5 }.to_json("SEAL")
+        );
+        let mut n = 0usize;
+        let stats = scan_events(text.as_bytes(), |_| n += 1);
+        assert_eq!(n, 1);
+        assert_eq!((stats.lines, stats.malformed, stats.unknown), (3, 1, 0));
+        assert!(stats.run_meta.is_some());
     }
 
     #[test]

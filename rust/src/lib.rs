@@ -10,8 +10,10 @@
 //!   executes the AOT artifacts ([`runtime`]), an edge-serving
 //!   coordinator ([`coordinator`]), the model-extraction security
 //!   evaluation ([`security`]), the parallel experiment-sweep engine
-//!   every figure bench runs on ([`sweep`]), and the simulator-
-//!   throughput benchmark + CI regression gate ([`perf`]).
+//!   every figure bench runs on ([`sweep`]), the simulator-
+//!   throughput benchmark + CI regression gate ([`perf`]), and the
+//!   trace-forensics + soak subsystem that consumes the serving
+//!   telemetry offline ([`trace`]).
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -25,6 +27,7 @@ pub mod security;
 pub mod sim;
 pub mod stats;
 pub mod sweep;
+pub mod trace;
 pub mod traffic;
 pub mod util;
 

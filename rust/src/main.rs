@@ -14,6 +14,10 @@
 //!               encrypted KV cache
 //!   serve-bench serving-engine grid (schemes×workers×rates) plus the
 //!               continuous-decode grid -> BENCH_serve.json
+//!   trace-report offline forensics over recorded seal-events/v1 files:
+//!               per-scheme tail quantiles, timelines, --compare mode
+//!   soak        long-running serving replay loop with tail-regression
+//!               and growth gates -> soak_report.json
 //!   schemes     list the open scheme registry (names + doc strings)
 //!   info        print config + artifact inventory
 
@@ -36,6 +40,8 @@ fn main() -> anyhow::Result<()> {
         Some("security") => seal::security::cli(&args),
         Some("serve") => seal::coordinator::cli(&args),
         Some("serve-bench") => seal::coordinator::bench_cli(&args),
+        Some("trace-report") => seal::trace::report_cli(&args),
+        Some("soak") => seal::trace::soak_cli(&args),
         Some("schemes") => schemes(&args),
         Some("info") => info(&args),
         other => {
@@ -98,6 +104,28 @@ USAGE: seal <subcommand> [flags]
             [--seed s] [--out f]
             (synthetic backend; writes BENCH_serve.json, schema
              seal-serve/v3 incl. the continuous-decode grid)
+  trace-report <events.jsonl>... [--window-ms w] [--compare]
+            [--markdown] [--out report.json]
+            (streams recorded seal-events/v1 files in bounded memory;
+             reconstructs request/session lifecycles; emits a
+             seal-trace-report/v1 document with per-scheme
+             p50/p99/p99.9/p99.99 queued/service/total latency,
+             windowed throughput + queue-depth timelines, batch-fill
+             and KV-eviction analytics; --compare puts N runs side by
+             side against the first)
+  soak      [--schemes s1,s2] [--iterations n] [--duration secs]
+            [--mode whole|continuous|both] [--requests n] [--burst n]
+            [--burst-gap-us us] [--sessions n] [--steps n] [--prompt t]
+            [--kv-capacity blocks] [--block-tokens t] [--workers n]
+            [--batch b] [--queue cap] [--cost gemv_repeats]
+            [--slowdown f] [--seed s] [--keep-events n]
+            [--tail-budget x] [--growth-budget x] [--window-ms w]
+            [--out-dir d] [--synthetic]
+            (loops one synthesized bursty trace through the serving
+             engine per scheme, rotating event files and snapshotting
+             results/soak/soak_report.json (seal-soak/v1) each
+             iteration; fails on reconciliation, tail-regression or
+             growth-proxy gates)
   schemes   list every registered scheme with its doc string
   info
 

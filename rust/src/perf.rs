@@ -387,6 +387,15 @@ pub fn unix_now() -> u64 {
         .unwrap_or(0)
 }
 
+/// Milliseconds since the Unix epoch — the sweep-statefile cell stamp
+/// (`seal sweep status` derives cells/sec and ETA from these).
+pub fn unix_now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
 /// The whole `seal perf` outcome.
 #[derive(Debug, Clone)]
 pub struct PerfReport {

@@ -16,12 +16,19 @@
 //! ```json
 //! {"type":"header","schema":"seal-sweep-state/v1","name":"cli",
 //!  "spec_hash":"9f8a6c5d3b2e1a40","total_cells":54,
-//!  "shard_index":0,"shard_count":2}
-//! {"type":"cell","index":7,"cell_id":"0c7d…","target":"vgg16", ...row}
+//!  "shard_index":0,"shard_count":2,"created_ms":1754600000000}
+//! {"type":"cell","index":7,"cell_id":"0c7d…","target":"vgg16",
+//!  "t_ms":1754600012345, ...row}
 //! {"type":"error","index":9,"cell_id":"55aa…","target":"resnet18",
 //!  "scheme":"SEAL","ratio":0.5,"error":"..."}
 //! {"type":"summary","done":26,"failed":1,"total_cells":54}
 //! ```
+//!
+//! `created_ms` / `t_ms` are wall-clock stamps (Unix milliseconds,
+//! [`crate::perf::unix_now_ms`]); `seal sweep status` derives a
+//! cells/sec rate and an ETA from the stamp span. Both keys are
+//! additive: readers predating them skip unknown keys, and this reader
+//! treats their absence as "no rate available" rather than staleness.
 //!
 //! Invariants the fabric maintains:
 //!
@@ -156,6 +163,7 @@ impl StateWriter {
             ("total_cells", Json::num(total_cells as f64)),
             ("shard_index", Json::num(shard.index as f64)),
             ("shard_count", Json::num(shard.count as f64)),
+            ("created_ms", Json::num(crate::perf::unix_now_ms() as f64)),
         ]);
         writeln!(f, "{header}")?;
         f.flush()?;
@@ -197,8 +205,15 @@ fn with_meta(payload: Json, ty: &str, index: usize, cell_id: &str) -> Json {
     }
 }
 
-fn cell_line(index: usize, cell_id: &str, row: &CellRow) -> Json {
-    with_meta(row.to_json(), "cell", index, cell_id)
+fn cell_line(index: usize, cell_id: &str, row: &CellRow, t_ms: Option<u64>) -> Json {
+    let j = with_meta(row.to_json(), "cell", index, cell_id);
+    match (j, t_ms) {
+        (Json::Obj(mut m), Some(t)) => {
+            m.insert("t_ms".to_string(), Json::num(t as f64));
+            Json::Obj(m)
+        }
+        (j, _) => j,
+    }
 }
 
 fn error_line(e: &CellError) -> Json {
@@ -217,7 +232,7 @@ impl CellSink for StateWriter {
     fn record(&self, index: usize, key: &CellKey, outcome: &Result<CellRow, String>) {
         let id = key.id_hex();
         match outcome {
-            Ok(row) => self.emit(&cell_line(index, &id, row)),
+            Ok(row) => self.emit(&cell_line(index, &id, row, Some(crate::perf::unix_now_ms()))),
             Err(msg) => self.emit(&error_line(&CellError {
                 index,
                 cell_id: id,
@@ -239,6 +254,9 @@ pub struct StateHeader {
     pub spec_hash: String,
     pub total_cells: usize,
     pub shard: ShardId,
+    /// Unix milliseconds the statefile was created (0 = written before
+    /// stamps existed — never a staleness criterion).
+    pub created_ms: u64,
 }
 
 /// A tolerantly read statefile: checkpointed rows and recorded
@@ -249,6 +267,9 @@ pub struct StateRead {
     /// Completed cells (a later duplicate line wins; a success always
     /// supersedes a recorded failure for the same index).
     pub done: BTreeMap<usize, CellRow>,
+    /// Completion wall-clock stamps (Unix ms) for `done` cells whose
+    /// lines carried `t_ms` — the `seal sweep status` rate source.
+    pub stamps: BTreeMap<usize, u64>,
     /// Failures with no superseding success.
     pub errors: BTreeMap<usize, CellError>,
     /// Non-blank lines seen (parsed + skipped).
@@ -283,6 +304,7 @@ fn parse_header(j: &Json) -> Option<StateHeader> {
         spec_hash: j.get("spec_hash")?.as_str()?.to_string(),
         total_cells: j.get("total_cells")?.as_usize()?,
         shard: ShardId { index, count },
+        created_ms: j.get("created_ms").and_then(Json::as_u64).unwrap_or(0),
     })
 }
 
@@ -323,6 +345,7 @@ pub fn read_state(spec: &SweepSpec, path: &Path) -> Option<StateRead> {
     let mut read = StateRead {
         header,
         done: BTreeMap::new(),
+        stamps: BTreeMap::new(),
         errors: BTreeMap::new(),
         lines: 1,
         malformed: 0,
@@ -356,6 +379,16 @@ pub fn read_state(spec: &SweepSpec, path: &Path) -> Option<StateRead> {
             Some("cell") => match (valid_at(&j), CellRow::from_json(&j)) {
                 (Some(index), Some(row)) => {
                     read.done.insert(index, row);
+                    // Duplicate-line semantics carry over to stamps:
+                    // the winning line's stamp (or its absence) wins.
+                    match j.get("t_ms").and_then(Json::as_u64) {
+                        Some(t) => {
+                            read.stamps.insert(index, t);
+                        }
+                        None => {
+                            read.stamps.remove(&index);
+                        }
+                    }
                 }
                 _ => read.malformed += 1,
             },
@@ -414,12 +447,14 @@ fn finalize_state(spec: &SweepSpec, path: &Path, read: &StateRead) -> std::io::R
         ("total_cells", Json::num(read.header.total_cells as f64)),
         ("shard_index", Json::num(read.header.shard.index as f64)),
         ("shard_count", Json::num(read.header.shard.count as f64)),
+        ("created_ms", Json::num(read.header.created_ms as f64)),
     ]);
     text.push_str(&header.to_string());
     text.push('\n');
     let ids: Vec<String> = spec.cells().iter().map(|c| c.id_hex()).collect();
     for (&index, row) in &read.done {
-        text.push_str(&cell_line(index, &ids[index], row).to_string());
+        let t_ms = read.stamps.get(&index).copied();
+        text.push_str(&cell_line(index, &ids[index], row, t_ms).to_string());
         text.push('\n');
     }
     for e in read.errors.values() {
@@ -619,6 +654,12 @@ pub struct ShardProgress {
     /// Cells this shard owns.
     pub total: usize,
     pub path: PathBuf,
+    /// Completion rate in cells/sec, from the `t_ms` stamp span
+    /// (`None` with fewer than two stamped cells or zero span).
+    pub rate_cps: Option<f64>,
+    /// Estimated seconds to finish this shard's remaining cells at
+    /// `rate_cps`.
+    pub eta_s: Option<f64>,
 }
 
 /// Everything `seal sweep status` reports for one spec.
@@ -635,16 +676,37 @@ pub struct SweepStatus {
     pub shards: Vec<ShardProgress>,
 }
 
+/// Rate + ETA from the stamp span. The span is wall time between the
+/// first and last stamped completion, so it absorbs any idle gap
+/// between interrupted runs — the estimate is deliberately
+/// conservative for resumed sweeps.
+fn rate_and_eta(st: &StateRead, total: usize) -> (Option<f64>, Option<f64>) {
+    if st.stamps.len() < 2 {
+        return (None, None);
+    }
+    let first = *st.stamps.values().min().expect("nonempty");
+    let last = *st.stamps.values().max().expect("nonempty");
+    if last <= first {
+        return (None, None);
+    }
+    let rate = (st.stamps.len() - 1) as f64 / ((last - first) as f64 / 1e3);
+    let remaining = total.saturating_sub(st.done.len());
+    (Some(rate), Some(remaining as f64 / rate))
+}
+
 fn progress_of(spec: &SweepSpec, path: &Path) -> Option<ShardProgress> {
     let st = read_state(spec, path)?;
     let shard = st.header.shard;
     let total = (0..st.header.total_cells).filter(|i| i % shard.count == shard.index).count();
+    let (rate_cps, eta_s) = rate_and_eta(&st, total);
     Some(ShardProgress {
         shard,
         done: st.done.len(),
         failed: st.errors.len(),
         total,
         path: path.to_path_buf(),
+        rate_cps,
+        eta_s,
     })
 }
 
@@ -763,6 +825,44 @@ mod tests {
         let reread = read_state(&s, &path).unwrap();
         assert_eq!(reread.malformed, 0);
         assert_eq!(reread.done.len(), 2);
+        cleanup(&s);
+    }
+
+    #[test]
+    fn cell_stamps_roundtrip_and_drive_rate_eta() {
+        let s = spec("ckpt_stamps");
+        cleanup(&s);
+        let cells = s.cells();
+        let path = state_path(&s, ShardId::full());
+        let w = StateWriter::create(&path, &s, ShardId::full(), cells.len()).unwrap();
+        let row0 = runner::run_cell(&cells[0], &s);
+        let row1 = runner::run_cell(&cells[1], &s);
+        w.record(0, &cells[0], &Ok(row0));
+        w.record(1, &cells[1], &Ok(row1));
+        drop(w);
+
+        let read = read_state(&s, &path).unwrap();
+        assert!(read.header.created_ms > 0);
+        assert_eq!(read.stamps.len(), 2);
+
+        // Stamps and the header stamp survive the canonical rewrite.
+        finalize_state(&s, &path, &read).unwrap();
+        let reread = read_state(&s, &path).unwrap();
+        assert_eq!(reread.stamps, read.stamps);
+        assert_eq!(reread.header.created_ms, read.header.created_ms);
+
+        // Rate/ETA math on a controlled stamp span: 3 completions over
+        // 4 s is 0.5 cells/sec; 2 of 5 cells remaining is a 4 s ETA.
+        let mut st = reread;
+        st.stamps = [(0, 1_000u64), (1, 5_000), (2, 3_000)].into_iter().collect();
+        st.done.insert(2, st.done[&0].clone());
+        let (rate, eta) = rate_and_eta(&st, 5);
+        assert!((rate.unwrap() - 0.5).abs() < 1e-9);
+        assert!((eta.unwrap() - 4.0).abs() < 1e-9);
+
+        // Fewer than two stamps: no estimate.
+        st.stamps = [(0, 1_000u64)].into_iter().collect();
+        assert_eq!(rate_and_eta(&st, 5), (None, None));
         cleanup(&s);
     }
 

@@ -244,13 +244,16 @@ fn print_status(spec: &SweepSpec) -> anyhow::Result<()> {
     );
     println!("  store:     {}", st.store_path.display());
     match &st.state {
-        Some(p) => println!(
-            "  statefile: {}/{} done, {} failed ({})",
-            p.done,
-            p.total,
-            p.failed,
-            p.path.display()
-        ),
+        Some(p) => {
+            println!(
+                "  statefile: {}/{} done, {} failed ({})",
+                p.done,
+                p.total,
+                p.failed,
+                p.path.display()
+            );
+            print_rate(p);
+        }
         None => println!("  statefile: none"),
     }
     for p in &st.shards {
@@ -262,6 +265,33 @@ fn print_status(spec: &SweepSpec) -> anyhow::Result<()> {
             p.failed,
             p.path.display()
         );
+        print_rate(p);
     }
     Ok(())
+}
+
+/// The cells/sec + ETA line under a statefile row, from the cell
+/// `t_ms` stamps (omitted when the file has too few stamped cells —
+/// e.g. one written before stamps existed).
+fn print_rate(p: &checkpoint::ShardProgress) {
+    let (Some(rate), Some(eta)) = (p.rate_cps, p.eta_s) else {
+        return;
+    };
+    if p.done >= p.total {
+        println!("             rate {rate:.2} cells/sec (complete)");
+    } else {
+        println!("             rate {rate:.2} cells/sec, ETA {}", human_secs(eta));
+    }
+}
+
+/// `95s` / `12m30s` / `2h05m` — compact ETA rendering.
+fn human_secs(s: f64) -> String {
+    let s = s.max(0.0).round() as u64;
+    if s < 120 {
+        format!("{s}s")
+    } else if s < 7200 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    }
 }

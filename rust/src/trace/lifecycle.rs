@@ -1,0 +1,230 @@
+//! Per-scheme lifecycle reconstruction from a `seal-events/v1` stream.
+//!
+//! A [`LifecycleBook`] is the streaming fold behind `seal trace-report`
+//! (DESIGN.md §13): it consumes one [`ParsedEvent`] at a time — fed
+//! from [`crate::coordinator::telemetry::scan_events`] so the stream
+//! is never materialized — and reconstructs, per scheme stamp, the
+//! request lifecycle (Admitted → Dequeued → BatchFormed → Completed)
+//! and the session lifecycle (SessionStart → KvEvict → SessionEnd).
+//!
+//! Memory contract: state is bounded by the number of *in-flight*
+//! requests (admitted, not yet completed) plus one [`SchemeLifecycle`]
+//! per distinct scheme — never by stream length. Latency distributions
+//! live in [`Histogram`]s, whose bucket count is bounded by
+//! construction; that bound doubles as the soak driver's
+//! unbounded-growth proxy ([`Histogram::buckets`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::coordinator::telemetry::{Event, ParsedEvent, RejectReason};
+use crate::stats::Histogram;
+
+/// Everything reconstructed for one scheme stamp: lifecycle counters,
+/// the queued/service/total latency split, batch-fill and KV-eviction
+/// analytics, and the observed time span.
+#[derive(Debug, Clone, Default)]
+pub struct SchemeLifecycle {
+    /// Requests that entered the admission queue.
+    pub admitted: u64,
+    /// Refusals with `reason == "shed"` (queue full — genuine load).
+    pub rejected_shed: u64,
+    /// Refusals with `reason == "closed"` (shutdown artifact).
+    pub rejected_closed: u64,
+    /// Queue pops observed (the queued → service boundary).
+    pub dequeued: u64,
+    /// Requests that finished executing.
+    pub completed: u64,
+    /// `Completed` events with no matching `Admitted` earlier in the
+    /// stream (a truncated head, or a foreign/corrupt stream).
+    pub orphan_completions: u64,
+    /// Admitted but never completed by end of stream (in flight at
+    /// truncation — the normal tail of a crash mid-run).
+    pub unfinished: u64,
+    /// Arrival → dequeue wall time (never scheme-scaled).
+    pub queued_us: Histogram,
+    /// Dequeue → completion, scaled by the memory-scheme slowdown.
+    pub service_us: Histogram,
+    /// End-to-end: `queued_us + service_us` per request.
+    pub total_us: Histogram,
+    /// Batches formed.
+    pub batches: u64,
+    /// Batch sizes at formation (fill analytics).
+    pub batch_fill: Histogram,
+    /// Continuous mode: sessions that went live.
+    pub sessions_started: u64,
+    /// Continuous mode: sessions that completed.
+    pub sessions_ended: u64,
+    /// Continuous mode: decode steps summed over `SessionEnd` events.
+    pub session_steps: u64,
+    /// KV-eviction events observed.
+    pub evict_events: u64,
+    /// KV blocks evicted, summed.
+    pub evicted_blocks: u64,
+    /// Scheme-dependent eviction retirement cycles, summed.
+    pub evict_cycles: u64,
+    /// First event timestamp seen for this scheme (`None` = no events).
+    pub first_t_us: Option<u64>,
+    /// Last event timestamp seen for this scheme.
+    pub last_t_us: u64,
+}
+
+impl SchemeLifecycle {
+    /// Observed span in microseconds (0 when fewer than two events).
+    pub fn span_us(&self) -> u64 {
+        self.last_t_us.saturating_sub(self.first_t_us.unwrap_or(self.last_t_us))
+    }
+
+    /// Completions per second over the observed span.
+    pub fn throughput_rps(&self) -> f64 {
+        let span = self.span_us();
+        if span == 0 {
+            0.0
+        } else {
+            self.completed as f64 / (span as f64 / 1e6)
+        }
+    }
+
+    /// Distinct histogram buckets in use across the three latency
+    /// distributions — the bounded-by-construction growth proxy the
+    /// soak driver gates on.
+    pub fn hist_buckets(&self) -> usize {
+        self.queued_us.buckets() + self.service_us.buckets() + self.total_us.buckets()
+    }
+}
+
+/// The streaming fold: feed every event to [`LifecycleBook::observe`],
+/// then [`LifecycleBook::finish`] to settle open requests into
+/// [`SchemeLifecycle::unfinished`] and take the per-scheme results.
+#[derive(Debug, Default)]
+pub struct LifecycleBook {
+    schemes: BTreeMap<String, SchemeLifecycle>,
+    /// (scheme, req) admitted but not yet completed. Bounded by the
+    /// engine's in-flight population (queue capacity + workers), plus
+    /// any requests genuinely lost to a crash.
+    open: BTreeSet<(String, u64)>,
+}
+
+impl LifecycleBook {
+    /// Fold one event.
+    pub fn observe(&mut self, p: &ParsedEvent) {
+        let s = self.schemes.entry(p.scheme.clone()).or_default();
+        let t = p.event.t_us();
+        if s.first_t_us.is_none() {
+            s.first_t_us = Some(t);
+        }
+        s.last_t_us = s.last_t_us.max(t);
+        match p.event {
+            Event::Admitted { req, .. } => {
+                s.admitted += 1;
+                self.open.insert((p.scheme.clone(), req));
+            }
+            Event::Rejected { reason, .. } => match reason {
+                RejectReason::Shed => s.rejected_shed += 1,
+                RejectReason::Closed => s.rejected_closed += 1,
+            },
+            Event::Dequeued { .. } => s.dequeued += 1,
+            Event::BatchFormed { size, .. } => {
+                s.batches += 1;
+                s.batch_fill.record(size as u64);
+            }
+            Event::Completed { req, queued_us, service_us, .. } => {
+                s.completed += 1;
+                s.queued_us.record(queued_us);
+                s.service_us.record(service_us);
+                s.total_us.record(queued_us.saturating_add(service_us));
+                if !self.open.remove(&(p.scheme.clone(), req)) {
+                    s.orphan_completions += 1;
+                }
+            }
+            Event::SessionStart { .. } => s.sessions_started += 1,
+            Event::SessionEnd { steps, .. } => {
+                s.sessions_ended += 1;
+                s.session_steps += steps;
+            }
+            Event::KvEvict { blocks, cycles, .. } => {
+                s.evict_events += 1;
+                s.evicted_blocks += blocks;
+                s.evict_cycles += cycles;
+            }
+        }
+    }
+
+    /// Requests currently admitted-but-not-completed.
+    pub fn open_requests(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Settle open requests into `unfinished` and return the
+    /// per-scheme reconstruction, keyed (and therefore deterministically
+    /// ordered) by scheme name.
+    pub fn finish(mut self) -> BTreeMap<String, SchemeLifecycle> {
+        for (scheme, _req) in std::mem::take(&mut self.open) {
+            if let Some(s) = self.schemes.get_mut(&scheme) {
+                s.unfinished += 1;
+            }
+        }
+        self.schemes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(scheme: &str, event: Event) -> ParsedEvent {
+        ParsedEvent { scheme: scheme.to_string(), event }
+    }
+
+    #[test]
+    fn reconstructs_the_request_lifecycle_with_latency_split() {
+        let mut book = LifecycleBook::default();
+        for e in [
+            Event::Admitted { req: 0, t_us: 10 },
+            Event::Admitted { req: 1, t_us: 12 },
+            Event::Rejected { req: 2, reason: RejectReason::Shed, t_us: 14 },
+            Event::Dequeued { req: 0, worker: 0, t_us: 20 },
+            Event::BatchFormed { worker: 0, first_req: 0, size: 2, t_us: 21 },
+            Event::Completed { req: 0, worker: 0, queued_us: 10, service_us: 30, t_us: 50 },
+        ] {
+            book.observe(&ev("SEAL", e));
+        }
+        assert_eq!(book.open_requests(), 1);
+        let out = book.finish();
+        let s = &out["SEAL"];
+        assert_eq!((s.admitted, s.completed, s.rejected_shed), (2, 1, 1));
+        assert_eq!((s.unfinished, s.orphan_completions), (1, 0));
+        assert_eq!(s.total_us.max, 40);
+        assert_eq!(s.queued_us.max, 10);
+        assert_eq!((s.batches, s.batch_fill.max), (1, 2));
+        assert_eq!(s.span_us(), 40);
+    }
+
+    #[test]
+    fn orphan_completion_and_session_accounting() {
+        let mut book = LifecycleBook::default();
+        for e in [
+            Event::Completed { req: 9, worker: 0, queued_us: 1, service_us: 2, t_us: 5 },
+            Event::SessionStart { session: 0, prompt_tokens: 8, t_us: 10 },
+            Event::KvEvict { session: 0, blocks: 3, cycles: 700, t_us: 20 },
+            Event::SessionEnd { session: 0, steps: 16, t_us: 30 },
+        ] {
+            book.observe(&ev("Counter", e));
+        }
+        let out = book.finish();
+        let s = &out["Counter"];
+        assert_eq!(s.orphan_completions, 1);
+        assert_eq!((s.sessions_started, s.sessions_ended, s.session_steps), (1, 1, 16));
+        assert_eq!((s.evict_events, s.evicted_blocks, s.evict_cycles), (1, 3, 700));
+    }
+
+    #[test]
+    fn schemes_are_kept_separate() {
+        let mut book = LifecycleBook::default();
+        book.observe(&ev("SEAL", Event::Admitted { req: 0, t_us: 1 }));
+        book.observe(&ev("Counter", Event::Admitted { req: 0, t_us: 2 }));
+        let out = book.finish();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out["SEAL"].admitted, 1);
+        assert_eq!(out["Counter"].unfinished, 1);
+    }
+}

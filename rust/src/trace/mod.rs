@@ -1,0 +1,134 @@
+//! Trace forensics + soak: the first-class offline consumer of the
+//! `seal-events/v1` telemetry stream (DESIGN.md §13).
+//!
+//! Two entry points, both built on the same bounded-memory streaming
+//! fold ([`crate::coordinator::telemetry::scan_events`]):
+//!
+//! - **`seal trace-report <events.jsonl>...`** ([`report_cli`]) —
+//!   reconstructs per-request and per-session lifecycles
+//!   (Admitted → Dequeued → BatchFormed → Completed,
+//!   SessionStart → KvEvict → SessionEnd) and emits a
+//!   [`report::TRACE_REPORT_SCHEMA`] JSON document with per-scheme
+//!   p50/p99/p99.9/p99.99 for the queued/service/total latency split,
+//!   windowed throughput + queue-depth timelines ([`windows`]),
+//!   batch-fill and KV-eviction analytics, `--markdown` tables, and an
+//!   N-way `--compare` mode that puts scheme tails side by side
+//!   (Seculator's latency-hiding keystream vs SEAL vs counter-mode —
+//!   the contrast `BENCH_serve.json` summaries cannot show).
+//! - **`seal soak`** ([`soak_cli`]) — loops a synthesized bursty trace
+//!   through [`crate::coordinator::ServeConfig`] whole-request and/or
+//!   continuous mode for `--iterations`/`--duration`, rotating event
+//!   files, snapshotting an incremental report each iteration, and
+//!   failing on tail-regression / unbounded-growth gates ([`soak`]).
+
+pub mod lifecycle;
+pub mod report;
+pub mod soak;
+pub mod windows;
+
+pub use lifecycle::{LifecycleBook, SchemeLifecycle};
+pub use report::{
+    build_stream_report, render_markdown, report_document, StreamReport, TailSummary,
+    TRACE_REPORT_SCHEMA,
+};
+pub use soak::{run_soak, SoakCfg, SoakMode, SoakReport, SOAK_SCHEMA};
+pub use windows::{WindowTimeline, Windows};
+
+use std::path::{Path, PathBuf};
+
+use crate::sim::Scheme;
+use crate::util::cli::Args;
+
+/// `seal trace-report` CLI: fold each positional event file into a
+/// [`StreamReport`], assemble the versioned document, print it (JSON
+/// by default, `--markdown` for tables), optionally `--out` it.
+pub fn report_cli(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "usage: seal trace-report <events.jsonl>... [--window-ms w] [--compare] \
+         [--markdown] [--out report.json]"
+    );
+    let window_us = args.get_u64("window-ms", 100).max(1) * 1000;
+    let compare = args.has("compare");
+    let streams = args
+        .positional
+        .iter()
+        .map(|p| build_stream_report(Path::new(p), window_us))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    for s in &streams {
+        if s.malformed + s.unknown + s.out_of_order > 0 {
+            eprintln!(
+                "[trace-report] warn: {}: {} malformed, {} unknown, {} out-of-order of {} lines",
+                s.path, s.malformed, s.unknown, s.out_of_order, s.lines
+            );
+        }
+    }
+    let doc = report_document(&streams, compare);
+    if args.has("markdown") {
+        print!("{}", render_markdown(&streams, compare));
+    } else {
+        println!("{doc}");
+    }
+    if let Some(out) = args.get("out") {
+        crate::sweep::store::write_atomic(Path::new(&out), &format!("{doc}\n"))
+            .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+        eprintln!("[trace-report] wrote {out}");
+    }
+    Ok(())
+}
+
+/// `seal soak` CLI: flags map 1:1 onto [`SoakCfg`]; a non-empty gate
+/// failure list is a nonzero exit.
+pub fn soak_cli(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = SoakCfg::default();
+    // `--synthetic` is accepted for symmetry with `seal serve`; the
+    // soak driver only runs the synthetic backend today.
+    let schemes_arg = args.get_or("schemes", "baseline,seal");
+    cfg.schemes = schemes_arg
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            Scheme::parse(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme {:?} in --schemes", s.trim()))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    cfg.iterations = args.get_u64("iterations", cfg.iterations as u64) as usize;
+    cfg.duration_s = args.get_f64("duration", cfg.duration_s);
+    if let Some(m) = args.get("mode") {
+        cfg.mode = SoakMode::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("bad --mode {m:?} (whole|continuous|both)"))?;
+    }
+    cfg.requests = args.get_u64("requests", cfg.requests as u64).max(1) as usize;
+    cfg.burst = args.get_u64("burst", cfg.burst as u64).max(1) as usize;
+    cfg.burst_gap_us = args.get_u64("burst-gap-us", cfg.burst_gap_us).max(1);
+    cfg.sessions = args.get_u64("sessions", cfg.sessions as u64).max(1) as usize;
+    cfg.steps = args.get_u64("steps", cfg.steps as u64).max(1) as usize;
+    cfg.prompt_tokens = args.get_u64("prompt", cfg.prompt_tokens as u64).max(1) as usize;
+    cfg.kv_capacity = args.get_u64("kv-capacity", cfg.kv_capacity as u64).max(1) as usize;
+    cfg.block_tokens = args.get_u64("block-tokens", cfg.block_tokens as u64).max(1) as usize;
+    cfg.workers = args.get_u64("workers", cfg.workers as u64).max(1) as usize;
+    cfg.batch_max = args.get_u64("batch", cfg.batch_max as u64).max(1) as usize;
+    cfg.queue_cap = args.get_u64("queue", cfg.queue_cap as u64).max(1) as usize;
+    cfg.cost = args.get_u64("cost", cfg.cost as u64).max(1) as usize;
+    cfg.slowdown = args.get_f64("slowdown", cfg.slowdown);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.keep_events = args.get_u64("keep-events", cfg.keep_events as u64).max(1) as usize;
+    cfg.tail_budget = args.get_f64("tail-budget", cfg.tail_budget).max(1.0);
+    cfg.growth_budget = args.get_f64("growth-budget", cfg.growth_budget).max(1.0);
+    cfg.window_ms = args.get_u64("window-ms", cfg.window_ms).max(1);
+    cfg.out_dir = PathBuf::from(args.get_or("out-dir", "results/soak"));
+
+    let rep = run_soak(&cfg)?;
+    println!(
+        "[soak] done: {} iteration(s), snapshot {}",
+        rep.iterations_done,
+        rep.snapshot_path.display()
+    );
+    anyhow::ensure!(
+        rep.passed(),
+        "soak gates failed:\n  {}",
+        rep.failures.join("\n  ")
+    );
+    println!("[soak] all gates green");
+    Ok(())
+}

@@ -1,0 +1,370 @@
+//! `seal-trace-report/v1`: the offline tail-analytics document built
+//! from one or more `seal-events/v1` streams (DESIGN.md §13).
+//!
+//! A [`StreamReport`] is one stream folded once, in bounded memory,
+//! through [`LifecycleBook`] + [`Windows`]; [`report_document`] joins
+//! N of them into the versioned JSON document, optionally with the
+//! N-way tail comparison (`--compare`) that puts Seculator's
+//! pregenerated-keystream latency hiding, SEAL's colocation mode, and
+//! counter-mode encryption on the same p99.9/p99.99 axis — the figure
+//! no single summary JSON can show.
+//!
+//! The document is a pure function of its input bytes: no wall-clock
+//! timestamps, BTreeMap-ordered schemes, and sorted JSON keys — so
+//! running `seal trace-report` twice over the same recording yields
+//! byte-identical output (CI asserts this).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::telemetry::{self, RunMeta};
+use crate::stats::{Histogram, Table};
+use crate::util::json::Json;
+
+use super::lifecycle::{LifecycleBook, SchemeLifecycle};
+use super::windows::{WindowTimeline, Windows};
+
+/// Document schema tag (documented in README).
+pub const TRACE_REPORT_SCHEMA: &str = "seal-trace-report/v1";
+
+/// The tail summary of one latency distribution: p50 / p99 / p99.9 /
+/// p99.99 plus moments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TailSummary {
+    pub n: u64,
+    pub mean_us: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub p9999: u64,
+    pub max: u64,
+}
+
+impl TailSummary {
+    pub fn from_hist(h: &Histogram) -> TailSummary {
+        TailSummary {
+            n: h.n,
+            mean_us: h.mean(),
+            p50: h.quantile(0.5),
+            p99: h.quantile(0.99),
+            p999: h.quantile(0.999),
+            p9999: h.quantile(0.9999),
+            max: h.max,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50", Json::num(self.p50 as f64)),
+            ("p99", Json::num(self.p99 as f64)),
+            ("p999", Json::num(self.p999 as f64)),
+            ("p9999", Json::num(self.p9999 as f64)),
+            ("max", Json::num(self.max as f64)),
+        ])
+    }
+}
+
+/// One event stream, fully folded: reader accounting, per-scheme
+/// lifecycle reconstruction, and the windowed timelines.
+#[derive(Debug)]
+pub struct StreamReport {
+    pub path: String,
+    /// `run_meta`-derived label (`"<scheme> <mode>"`) or the file stem
+    /// when the stream predates the header.
+    pub label: String,
+    pub run_meta: Option<RunMeta>,
+    pub lines: usize,
+    pub malformed: usize,
+    pub unknown: usize,
+    pub out_of_order: usize,
+    pub schemes: BTreeMap<String, SchemeLifecycle>,
+    pub windows: WindowTimeline,
+}
+
+impl StreamReport {
+    /// Service-latency histogram merged across this stream's schemes
+    /// (streams normally carry one scheme; merging makes `--compare`
+    /// well-defined for mixed streams too).
+    pub fn merged_service(&self) -> Histogram {
+        let mut h = Histogram::default();
+        for s in self.schemes.values() {
+            h.merge(&s.service_us);
+        }
+        h
+    }
+
+    /// Total-latency histogram merged across this stream's schemes.
+    pub fn merged_total(&self) -> Histogram {
+        let mut h = Histogram::default();
+        for s in self.schemes.values() {
+            h.merge(&s.total_us);
+        }
+        h
+    }
+}
+
+/// Stream one event file through the tolerant reader, folding the
+/// lifecycle book and the window timelines as lines arrive — memory
+/// stays bounded no matter how long the recording ran.
+pub fn build_stream_report(path: &Path, window_us: u64) -> anyhow::Result<StreamReport> {
+    let mut book = LifecycleBook::default();
+    let mut windows = Windows::new(window_us);
+    let stats = telemetry::scan_events_path(path, |ev| {
+        book.observe(&ev);
+        windows.observe(&ev);
+    })
+    .map_err(|e| anyhow::anyhow!("trace-report {}: {e}", path.display()))?;
+    let label = match &stats.run_meta {
+        Some(m) => format!("{} {}", m.scheme, m.mode),
+        None => path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string()),
+    };
+    Ok(StreamReport {
+        path: path.display().to_string(),
+        label,
+        run_meta: stats.run_meta,
+        lines: stats.lines,
+        malformed: stats.malformed,
+        unknown: stats.unknown,
+        out_of_order: stats.out_of_order,
+        schemes: book.finish(),
+        windows: windows.finish(),
+    })
+}
+
+fn scheme_json(s: &SchemeLifecycle) -> Json {
+    Json::obj(vec![
+        ("admitted", Json::num(s.admitted as f64)),
+        ("rejected_shed", Json::num(s.rejected_shed as f64)),
+        ("rejected_closed", Json::num(s.rejected_closed as f64)),
+        ("dequeued", Json::num(s.dequeued as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("orphan_completions", Json::num(s.orphan_completions as f64)),
+        ("unfinished", Json::num(s.unfinished as f64)),
+        ("queued_us", TailSummary::from_hist(&s.queued_us).to_json()),
+        ("service_us", TailSummary::from_hist(&s.service_us).to_json()),
+        ("total_us", TailSummary::from_hist(&s.total_us).to_json()),
+        ("batches", Json::num(s.batches as f64)),
+        ("batch_fill", TailSummary::from_hist(&s.batch_fill).to_json()),
+        (
+            "sessions",
+            Json::obj(vec![
+                ("started", Json::num(s.sessions_started as f64)),
+                ("ended", Json::num(s.sessions_ended as f64)),
+                ("steps", Json::num(s.session_steps as f64)),
+                ("evict_events", Json::num(s.evict_events as f64)),
+                ("evicted_blocks", Json::num(s.evicted_blocks as f64)),
+                ("evict_cycles", Json::num(s.evict_cycles as f64)),
+            ]),
+        ),
+        ("span_us", Json::num(s.span_us() as f64)),
+        ("throughput_rps", Json::num(s.throughput_rps())),
+    ])
+}
+
+fn stream_json(r: &StreamReport) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("path", Json::str(&r.path)),
+        ("label", Json::str(&r.label)),
+        (
+            "reader",
+            Json::obj(vec![
+                ("lines", Json::num(r.lines as f64)),
+                ("malformed", Json::num(r.malformed as f64)),
+                ("unknown", Json::num(r.unknown as f64)),
+                ("out_of_order", Json::num(r.out_of_order as f64)),
+            ]),
+        ),
+        (
+            "schemes",
+            Json::obj(
+                r.schemes
+                    .iter()
+                    .map(|(name, s)| (name.as_str(), scheme_json(s)))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        ("windows", r.windows.to_json()),
+    ];
+    if let Some(m) = &r.run_meta {
+        pairs.push(("run_meta", m.to_json()));
+    }
+    Json::obj(pairs)
+}
+
+fn compare_json(streams: &[StreamReport]) -> Json {
+    let base_p999 = streams
+        .first()
+        .map(|s| TailSummary::from_hist(&s.merged_service()).p999)
+        .unwrap_or(0);
+    let rows: Vec<Json> = streams
+        .iter()
+        .map(|s| {
+            let t = TailSummary::from_hist(&s.merged_service());
+            let vs = if base_p999 == 0 { 0.0 } else { t.p999 as f64 / base_p999 as f64 };
+            Json::obj(vec![
+                ("label", Json::str(&s.label)),
+                ("path", Json::str(&s.path)),
+                ("service_us", t.to_json()),
+                ("total_us", TailSummary::from_hist(&s.merged_total()).to_json()),
+                ("vs_baseline_p999", Json::num(vs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("metric", Json::str("service_us")),
+        ("baseline", Json::str(streams.first().map(|s| s.label.as_str()).unwrap_or("?"))),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+/// Assemble the versioned document. With `compare` set (and ≥ 2
+/// streams) the N-way service-tail comparison against the first stream
+/// is included. Pure function of the folded streams — deterministic.
+pub fn report_document(streams: &[StreamReport], compare: bool) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("schema", Json::str(TRACE_REPORT_SCHEMA)),
+        ("streams", Json::arr(streams.iter().map(stream_json))),
+    ];
+    if compare && streams.len() >= 2 {
+        pairs.push(("compare", compare_json(streams)));
+    }
+    Json::obj(pairs)
+}
+
+/// Render the markdown tables (`--markdown`): one per-scheme latency
+/// table per stream, plus the compare table when requested.
+pub fn render_markdown(streams: &[StreamReport], compare: bool) -> String {
+    let mut out = String::new();
+    for r in streams {
+        let mut t = Table::new(
+            &format!("trace-report {} ({})", r.label, r.path),
+            &["n", "mean_us", "p50", "p99", "p99.9", "p99.99", "max"],
+        );
+        for (name, s) in &r.schemes {
+            for (metric, h) in
+                [("queued", &s.queued_us), ("service", &s.service_us), ("total", &s.total_us)]
+            {
+                let ts = TailSummary::from_hist(h);
+                t.row(
+                    &format!("{name} {metric}"),
+                    vec![
+                        ts.n as f64,
+                        ts.mean_us,
+                        ts.p50 as f64,
+                        ts.p99 as f64,
+                        ts.p999 as f64,
+                        ts.p9999 as f64,
+                        ts.max as f64,
+                    ],
+                );
+            }
+        }
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    if compare && streams.len() >= 2 {
+        let base = TailSummary::from_hist(&streams[0].merged_service());
+        let mut t = Table::new(
+            &format!("service-latency tail compare (baseline = {})", streams[0].label),
+            &["n", "p99", "p99.9", "p99.99", "xbase p99.9"],
+        );
+        for r in streams {
+            let ts = TailSummary::from_hist(&r.merged_service());
+            let vs = if base.p999 == 0 { 0.0 } else { ts.p999 as f64 / base.p999 as f64 };
+            t.row(
+                &r.label,
+                vec![ts.n as f64, ts.p99 as f64, ts.p999 as f64, ts.p9999 as f64, vs],
+            );
+        }
+        out.push_str(&t.to_markdown());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::{Event, EventSink, SharedBuf};
+
+    fn write_stream(path: &Path, scheme: &str, service: &[u64]) {
+        let buf = SharedBuf::default();
+        let sink = EventSink::to_writer(Box::new(buf.clone()), scheme);
+        sink.emit_meta(&RunMeta {
+            schema: telemetry::EVENTS_SCHEMA.to_string(),
+            scheme: scheme.to_string(),
+            mode: "whole_request".to_string(),
+            seed: 1,
+            config: "test".to_string(),
+        });
+        let mut t = 0u64;
+        for (i, &svc) in service.iter().enumerate() {
+            let req = i as u64;
+            sink.emit(&Event::Admitted { req, t_us: t });
+            sink.emit(&Event::Dequeued { req, worker: 0, t_us: t + 5 });
+            sink.emit(&Event::Completed {
+                req,
+                worker: 0,
+                queued_us: 5,
+                service_us: svc,
+                t_us: t + 5 + svc,
+            });
+            t += 10;
+        }
+        std::fs::write(path, buf.take_string()).unwrap();
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("seal_trace_report_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn stream_report_reconstructs_and_labels_from_run_meta() {
+        let p = tmp("basic.jsonl");
+        write_stream(&p, "SEAL", &[10, 20, 30, 40]);
+        let r = build_stream_report(&p, 1000).unwrap();
+        assert_eq!(r.label, "SEAL whole_request");
+        assert_eq!(r.malformed + r.unknown, 0);
+        let s = &r.schemes["SEAL"];
+        assert_eq!((s.admitted, s.completed, s.unfinished), (4, 4, 0));
+        assert_eq!(TailSummary::from_hist(&s.service_us).max, 40);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn document_is_deterministic_and_compare_ranks_streams() {
+        let pa = tmp("a.jsonl");
+        let pb = tmp("b.jsonl");
+        // Stream B's service tail sits strictly above stream A's.
+        write_stream(&pa, "Seculator", &[10, 10, 10, 12]);
+        write_stream(&pb, "Counter", &[20, 20, 20, 44]);
+        let build = || {
+            vec![
+                build_stream_report(&pa, 1000).unwrap(),
+                build_stream_report(&pb, 1000).unwrap(),
+            ]
+        };
+        let d1 = report_document(&build(), true).to_string();
+        let d2 = report_document(&build(), true).to_string();
+        assert_eq!(d1, d2, "same input bytes must yield byte-identical documents");
+        let doc = Json::parse(&d1).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(TRACE_REPORT_SCHEMA));
+        let rows = doc.get("compare").and_then(|c| c.get("rows")).and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        let p999 = |row: &Json| {
+            row.get("service_us").and_then(|s| s.get("p999")).and_then(Json::as_u64).unwrap()
+        };
+        assert!(p999(&rows[0]) < p999(&rows[1]), "Seculator tail must rank below Counter");
+        let vs = rows[1].get("vs_baseline_p999").and_then(Json::as_f64).unwrap();
+        assert!(vs > 1.0, "vs_baseline = {vs}");
+        let md = render_markdown(&build(), true);
+        assert!(md.contains("service-latency tail compare"));
+        assert!(md.contains("Seculator whole_request"));
+        std::fs::remove_file(&pa).unwrap();
+        std::fs::remove_file(&pb).unwrap();
+    }
+}

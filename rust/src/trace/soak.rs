@@ -1,0 +1,460 @@
+//! `seal soak`: the long-running replay driver over the serving engine
+//! (DESIGN.md §13). Loops a synthesized bursty arrival trace through
+//! [`ServeConfig`] whole-request and/or continuous mode for every
+//! requested scheme, rotating event files per iteration, folding an
+//! incremental trace-report snapshot after each one, and failing on
+//! tail-regression or unbounded-growth gates — the repo's answer to
+//! "does the serving path stay flat over hours, not just one run".
+//!
+//! Gates (all evaluated after every iteration, so a long soak fails
+//! fast instead of at the end):
+//! - **reconciliation** — every iteration's event stream must balance:
+//!   admitted == completed (block admission), `unfinished == 0`,
+//!   session starts == session ends == configured sessions.
+//! - **tail regression** — per scheme, max/min of the per-iteration
+//!   p99.9 total latency must stay within `tail_budget`.
+//! - **unbounded growth** — the RSS proxy (histogram bucket counts,
+//!   bounded by construction; see [`Histogram::buckets`]) must not
+//!   grow past `growth_budget` × the first iteration's value (+ slack).
+//!
+//! [`Histogram::buckets`]: crate::stats::Histogram::buckets
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::coordinator::backend::SynthSpec;
+use crate::coordinator::server::{Admission, ServeConfig, ServeMode, ServeOutcome};
+use crate::coordinator::telemetry::synth_arrival_trace;
+use crate::sim::Scheme;
+use crate::util::json::Json;
+
+use super::report::{build_stream_report, StreamReport};
+
+/// Snapshot schema tag (`soak_report.json`, documented in README).
+pub const SOAK_SCHEMA: &str = "seal-soak/v1";
+
+/// Which serving modes each iteration exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SoakMode {
+    Whole,
+    Continuous,
+    Both,
+}
+
+impl SoakMode {
+    pub fn parse(s: &str) -> Option<SoakMode> {
+        match s {
+            "whole" | "whole_request" => Some(SoakMode::Whole),
+            "continuous" => Some(SoakMode::Continuous),
+            "both" => Some(SoakMode::Both),
+            _ => None,
+        }
+    }
+
+    fn whole(self) -> bool {
+        matches!(self, SoakMode::Whole | SoakMode::Both)
+    }
+
+    fn continuous(self) -> bool {
+        matches!(self, SoakMode::Continuous | SoakMode::Both)
+    }
+}
+
+/// Soak configuration (CLI flags map 1:1; see `seal soak` in README).
+#[derive(Debug, Clone)]
+pub struct SoakCfg {
+    pub schemes: Vec<Scheme>,
+    /// Iterations to run; 0 = bounded by `duration_s` only.
+    pub iterations: usize,
+    /// Wall-clock budget in seconds; 0 = bounded by `iterations` only.
+    /// (With both zero, the driver defaults to 3 iterations.)
+    pub duration_s: f64,
+    pub mode: SoakMode,
+    /// Whole-request arrivals per iteration, grouped into bursts.
+    pub requests: usize,
+    /// Requests per burst (arrivals share one timestamp).
+    pub burst: usize,
+    /// Gap between bursts, microseconds.
+    pub burst_gap_us: u64,
+    pub sessions: usize,
+    pub steps: usize,
+    pub prompt_tokens: usize,
+    pub kv_capacity: usize,
+    pub block_tokens: usize,
+    pub workers: usize,
+    pub batch_max: usize,
+    pub queue_cap: usize,
+    /// Synthetic GEMV repeats per request (service-time emulation).
+    pub cost: usize,
+    /// Slowdown override; ≤ 0 uses the cycle-simulator calibration.
+    pub slowdown: f64,
+    pub seed: u64,
+    /// Event files kept per scheme × mode (older iterations rotate).
+    pub keep_events: usize,
+    /// Max allowed (max p99.9 / min p99.9) across iterations.
+    pub tail_budget: f64,
+    /// Max allowed growth factor of the histogram-bucket RSS proxy.
+    pub growth_budget: f64,
+    /// Trace-report window width, milliseconds.
+    pub window_ms: u64,
+    pub out_dir: PathBuf,
+}
+
+impl Default for SoakCfg {
+    fn default() -> SoakCfg {
+        SoakCfg {
+            schemes: vec![Scheme::BASELINE, Scheme::SEAL],
+            iterations: 3,
+            duration_s: 0.0,
+            mode: SoakMode::Both,
+            requests: 64,
+            burst: 8,
+            burst_gap_us: 2_000,
+            sessions: 32,
+            steps: 16,
+            prompt_tokens: 8,
+            kv_capacity: 24,
+            block_tokens: 4,
+            workers: 2,
+            batch_max: 8,
+            queue_cap: 32,
+            cost: 20,
+            slowdown: 0.0,
+            seed: 0x50a1,
+            keep_events: 3,
+            tail_budget: 8.0,
+            growth_budget: 2.0,
+            window_ms: 10,
+            out_dir: PathBuf::from("results/soak"),
+        }
+    }
+}
+
+/// Per-scheme series accumulated across iterations.
+#[derive(Debug, Default, Clone)]
+pub struct SchemeSeries {
+    /// Whole-request p99.9 total latency per iteration (µs).
+    pub total_p999: Vec<u64>,
+    /// Whole-request p99.9 service latency per iteration (µs).
+    pub service_p999: Vec<u64>,
+    /// Continuous-mode p99.9 step latency per iteration (µs).
+    pub step_p999: Vec<u64>,
+    /// Histogram-bucket RSS proxy per iteration.
+    pub buckets: Vec<usize>,
+}
+
+/// The soak outcome: how far it got and every gate violation.
+#[derive(Debug)]
+pub struct SoakReport {
+    pub iterations_done: usize,
+    pub failures: Vec<String>,
+    pub series: BTreeMap<&'static str, SchemeSeries>,
+    pub snapshot_path: PathBuf,
+}
+
+impl SoakReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Reconciliation gates on one iteration's whole-request stream.
+fn check_whole_stream(r: &StreamReport, scheme: &str, label: &str, failures: &mut Vec<String>) {
+    match r.schemes.get(scheme) {
+        None => failures.push(format!("{label}: no events for scheme {scheme}")),
+        Some(s) => {
+            if s.unfinished != 0 || s.orphan_completions != 0 {
+                failures.push(format!(
+                    "{label}: {} unfinished, {} orphan completions",
+                    s.unfinished, s.orphan_completions
+                ));
+            }
+            if s.admitted != s.completed {
+                failures.push(format!(
+                    "{label}: admitted {} != completed {} under block admission",
+                    s.admitted, s.completed
+                ));
+            }
+        }
+    }
+}
+
+/// Reconciliation gates on one iteration's continuous-mode stream.
+fn check_continuous_stream(
+    r: &StreamReport,
+    scheme: &str,
+    sessions: usize,
+    label: &str,
+    failures: &mut Vec<String>,
+) {
+    match r.schemes.get(scheme) {
+        None => failures.push(format!("{label}: no events for scheme {scheme}")),
+        Some(s) => {
+            if s.sessions_started != sessions as u64 || s.sessions_ended != sessions as u64 {
+                failures.push(format!(
+                    "{label}: sessions started {} / ended {} != configured {sessions}",
+                    s.sessions_started, s.sessions_ended
+                ));
+            }
+        }
+    }
+}
+
+/// Tail-regression + growth gates over the accumulated series.
+fn check_series(cfg: &SoakCfg, name: &str, series: &SchemeSeries, failures: &mut Vec<String>) {
+    for (metric, vals) in [("total_p999", &series.total_p999), ("step_p999", &series.step_p999)] {
+        if vals.len() < 2 {
+            continue;
+        }
+        let hi = *vals.iter().max().expect("nonempty");
+        let lo = (*vals.iter().min().expect("nonempty")).max(1);
+        let ratio = hi as f64 / lo as f64;
+        if ratio > cfg.tail_budget {
+            failures.push(format!(
+                "{name} {metric}: tail regression {hi} vs {lo} (x{ratio:.2} > budget {:.2})",
+                cfg.tail_budget
+            ));
+        }
+    }
+    if let (Some(&first), Some(&last)) = (series.buckets.first(), series.buckets.last()) {
+        let cap = (first as f64 * cfg.growth_budget) as usize + 16;
+        if last > cap {
+            failures.push(format!(
+                "{name} buckets: growth proxy {last} > {cap} (first iteration {first})"
+            ));
+        }
+    }
+}
+
+fn snapshot_json(
+    cfg: &SoakCfg,
+    done: usize,
+    series: &BTreeMap<&'static str, SchemeSeries>,
+    failures: &[String],
+) -> Json {
+    let nums = |v: &[u64]| Json::arr(v.iter().map(|&x| Json::num(x as f64)));
+    let schemes = series
+        .iter()
+        .map(|(name, s)| {
+            (
+                *name,
+                Json::obj(vec![
+                    ("total_p999", nums(&s.total_p999)),
+                    ("service_p999", nums(&s.service_p999)),
+                    ("step_p999", nums(&s.step_p999)),
+                    ("buckets", Json::arr(s.buckets.iter().map(|&b| Json::num(b as f64)))),
+                ]),
+            )
+        })
+        .collect::<Vec<_>>();
+    let mode = match cfg.mode {
+        SoakMode::Whole => "whole",
+        SoakMode::Continuous => "continuous",
+        SoakMode::Both => "both",
+    };
+    Json::obj(vec![
+        ("schema", Json::str(SOAK_SCHEMA)),
+        ("iterations_done", Json::num(done as f64)),
+        ("mode", Json::str(mode)),
+        ("requests", Json::num(cfg.requests as f64)),
+        ("sessions", Json::num(cfg.sessions as f64)),
+        ("tail_budget", Json::num(cfg.tail_budget)),
+        ("growth_budget", Json::num(cfg.growth_budget)),
+        ("failures", Json::arr(failures.iter().map(|f| Json::str(f)))),
+        ("schemes", Json::obj(schemes)),
+    ])
+}
+
+fn synth_cfg(cfg: &SoakCfg, scheme: Scheme, iter: usize) -> ServeConfig {
+    ServeConfig::synthetic()
+        .spec(SynthSpec { cost_repeats: cfg.cost.max(1), ..SynthSpec::default() })
+        .batch_max(cfg.batch_max)
+        .workers(cfg.workers)
+        .queue_cap(cfg.queue_cap)
+        .admission(Admission::Block)
+        .scheme(scheme)
+        .slowdown(cfg.slowdown)
+        .seed(cfg.seed ^ (iter as u64).wrapping_mul(0x9e37_79b9))
+}
+
+/// Run the soak. Gate violations are *recorded* (and snapshotted), not
+/// panicked on — the CLI turns a non-empty failure list into a nonzero
+/// exit; tests inspect the report directly. The loop stops early once
+/// any gate trips: a broken invariant only gets noisier with time.
+pub fn run_soak(cfg: &SoakCfg) -> anyhow::Result<SoakReport> {
+    anyhow::ensure!(!cfg.schemes.is_empty(), "soak needs at least one scheme");
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let snapshot_path = cfg.out_dir.join("soak_report.json");
+
+    // One bursty arrival schedule, synthesized once and replayed every
+    // iteration — so per-iteration tails are comparable by construction.
+    let times: Vec<u64> = (0..cfg.requests)
+        .map(|i| (i / cfg.burst.max(1)) as u64 * cfg.burst_gap_us)
+        .collect();
+    let trace_path = cfg.out_dir.join("arrivals.jsonl");
+    std::fs::write(&trace_path, synth_arrival_trace(&times, "soak"))?;
+
+    let mut series: BTreeMap<&'static str, SchemeSeries> = BTreeMap::new();
+    let mut failures: Vec<String> = Vec::new();
+    let t0 = Instant::now();
+    let mut iter = 0usize;
+    let max_iters = if cfg.iterations == 0 && cfg.duration_s <= 0.0 { 3 } else { cfg.iterations };
+
+    loop {
+        if max_iters > 0 && iter >= max_iters {
+            break;
+        }
+        if cfg.duration_s > 0.0 && iter > 0 && t0.elapsed().as_secs_f64() >= cfg.duration_s {
+            break;
+        }
+        let slot = iter % cfg.keep_events.max(1);
+        for &scheme in &cfg.schemes {
+            let name = scheme.name();
+            let entry = series.entry(name).or_default();
+            let mut iter_buckets = 0usize;
+
+            if cfg.mode.whole() {
+                let ev = cfg.out_dir.join(format!("events_whole_{name}_{slot}.jsonl"));
+                let outcome = synth_cfg(cfg, scheme, iter)
+                    .requests(cfg.requests)
+                    .replay(trace_path.clone())
+                    .events(ev.clone())
+                    .run()?;
+                let served = match &outcome {
+                    ServeOutcome::WholeRequest(r) => r.served,
+                    ServeOutcome::Continuous(_) => unreachable!("whole-request mode"),
+                };
+                let sr = build_stream_report(&ev, cfg.window_ms.max(1) * 1000)?;
+                let label = format!("iter {iter} {name} whole");
+                check_whole_stream(&sr, name, &label, &mut failures);
+                if let Some(s) = sr.schemes.get(name) {
+                    if s.completed != served as u64 {
+                        failures.push(format!(
+                            "{label}: stream completed {} != report served {served}",
+                            s.completed
+                        ));
+                    }
+                    entry.total_p999.push(s.total_us.quantile(0.999));
+                    entry.service_p999.push(s.service_us.quantile(0.999));
+                    iter_buckets += s.hist_buckets();
+                }
+            }
+
+            if cfg.mode.continuous() {
+                let ev = cfg.out_dir.join(format!("events_cont_{name}_{slot}.jsonl"));
+                let outcome = synth_cfg(cfg, scheme, iter)
+                    .mode(ServeMode::Continuous {
+                        sessions: cfg.sessions,
+                        steps_per_session: cfg.steps,
+                        prompt_tokens: cfg.prompt_tokens,
+                        kv_capacity_blocks: cfg.kv_capacity,
+                        block_tokens: cfg.block_tokens,
+                    })
+                    .events(ev.clone())
+                    .run()?;
+                let step_hist = match &outcome {
+                    ServeOutcome::Continuous(r) => r.step_latency_us.clone(),
+                    ServeOutcome::WholeRequest(_) => unreachable!("continuous mode"),
+                };
+                let sr = build_stream_report(&ev, cfg.window_ms.max(1) * 1000)?;
+                let label = format!("iter {iter} {name} continuous");
+                check_continuous_stream(&sr, name, cfg.sessions, &label, &mut failures);
+                entry.step_p999.push(step_hist.quantile(0.999));
+                iter_buckets += step_hist.buckets();
+            }
+
+            entry.buckets.push(iter_buckets);
+        }
+        iter += 1;
+
+        // Evaluate the regression gates and snapshot after *every*
+        // iteration, so a killed soak still leaves its latest verdict.
+        for (name, s) in &series {
+            check_series(cfg, name, s, &mut failures);
+        }
+        failures.dedup();
+        let snap = snapshot_json(cfg, iter, &series, &failures);
+        crate::sweep::store::write_atomic(&snapshot_path, &format!("{snap}\n"))?;
+        println!(
+            "[soak] iteration {iter}{}: {} scheme(s), {} gate failure(s), {:.1}s elapsed",
+            match max_iters {
+                0 => String::new(),
+                n => format!("/{n}"),
+            },
+            cfg.schemes.len(),
+            failures.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        if !failures.is_empty() {
+            break;
+        }
+    }
+
+    Ok(SoakReport { iterations_done: iter, failures, series, snapshot_path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(dir: &Path) -> SoakCfg {
+        SoakCfg {
+            schemes: vec![Scheme::BASELINE],
+            iterations: 2,
+            mode: SoakMode::Whole,
+            requests: 16,
+            burst: 4,
+            burst_gap_us: 200,
+            workers: 1,
+            batch_max: 4,
+            queue_cap: 16,
+            cost: 2,
+            slowdown: 1.0,
+            window_ms: 1,
+            out_dir: dir.to_path_buf(),
+            ..SoakCfg::default()
+        }
+    }
+
+    #[test]
+    fn two_iteration_whole_soak_passes_its_gates() {
+        let dir = std::env::temp_dir().join(format!("seal_soak_whole_{}", std::process::id()));
+        let rep = run_soak(&quick_cfg(&dir)).unwrap();
+        assert!(rep.passed(), "gate failures: {:?}", rep.failures);
+        assert_eq!(rep.iterations_done, 2);
+        let s = &rep.series[Scheme::BASELINE.name()];
+        assert_eq!(s.total_p999.len(), 2);
+        assert!(s.total_p999.iter().all(|&v| v > 0));
+        let snap = std::fs::read_to_string(&rep.snapshot_path).unwrap();
+        let j = Json::parse(snap.trim()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SOAK_SCHEMA));
+        assert_eq!(j.get("iterations_done").and_then(Json::as_u64), Some(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn continuous_soak_reconciles_sessions() {
+        let dir = std::env::temp_dir().join(format!("seal_soak_cont_{}", std::process::id()));
+        let cfg = SoakCfg {
+            mode: SoakMode::Continuous,
+            iterations: 1,
+            sessions: 8,
+            steps: 4,
+            kv_capacity: 6,
+            ..quick_cfg(&dir)
+        };
+        let rep = run_soak(&cfg).unwrap();
+        assert!(rep.passed(), "gate failures: {:?}", rep.failures);
+        assert_eq!(rep.series[Scheme::BASELINE.name()].step_p999.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SoakMode::parse("whole"), Some(SoakMode::Whole));
+        assert_eq!(SoakMode::parse("continuous"), Some(SoakMode::Continuous));
+        assert_eq!(SoakMode::parse("both"), Some(SoakMode::Both));
+        assert_eq!(SoakMode::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,189 @@
+//! Fixed-width time windowing over an event stream: throughput and
+//! queue-depth timelines for `seal trace-report` (DESIGN.md §13).
+//!
+//! Window `i` covers `[i·width_us, (i+1)·width_us)`. Three series are
+//! maintained: arrivals admitted per window, completions per window
+//! (the throughput timeline), and the queue depth at the *end* of each
+//! window — the running sum of (admitted − dequeued), i.e. how many
+//! requests sat in the admission queue when the window closed. Depth
+//! is signed: an out-of-order stream (dequeues recorded before their
+//! admissions) can push it transiently negative, which is reported
+//! rather than clamped away.
+//!
+//! Memory contract: state is `O(observed span / width)`, independent
+//! of event count, and hard-capped at [`MAX_WINDOWS`]; events past the
+//! cap are counted in [`WindowTimeline::clipped`] instead of growing
+//! the timeline without bound (the soak driver feeds multi-hour
+//! streams through this).
+
+use crate::coordinator::telemetry::{Event, ParsedEvent};
+use crate::util::json::Json;
+
+/// Hard cap on timeline length (2^20 windows ≈ 29 hours at 100 ms).
+pub const MAX_WINDOWS: usize = 1 << 20;
+
+/// The streaming windowing fold. Feed [`Windows::observe`], then take
+/// the [`WindowTimeline`] with [`Windows::finish`].
+#[derive(Debug)]
+pub struct Windows {
+    width_us: u64,
+    admitted: Vec<u64>,
+    completed: Vec<u64>,
+    depth_delta: Vec<i64>,
+    clipped: usize,
+}
+
+impl Windows {
+    pub fn new(width_us: u64) -> Windows {
+        Windows {
+            width_us: width_us.max(1),
+            admitted: Vec::new(),
+            completed: Vec::new(),
+            depth_delta: Vec::new(),
+            clipped: 0,
+        }
+    }
+
+    fn slot(&mut self, t_us: u64) -> Option<usize> {
+        let i = (t_us / self.width_us) as usize;
+        if i >= MAX_WINDOWS {
+            self.clipped += 1;
+            return None;
+        }
+        if i >= self.admitted.len() {
+            self.admitted.resize(i + 1, 0);
+            self.completed.resize(i + 1, 0);
+            self.depth_delta.resize(i + 1, 0);
+        }
+        Some(i)
+    }
+
+    /// Fold one event (non-request events are ignored).
+    pub fn observe(&mut self, p: &ParsedEvent) {
+        match p.event {
+            Event::Admitted { t_us, .. } => {
+                if let Some(i) = self.slot(t_us) {
+                    self.admitted[i] += 1;
+                    self.depth_delta[i] += 1;
+                }
+            }
+            Event::Dequeued { t_us, .. } => {
+                if let Some(i) = self.slot(t_us) {
+                    self.depth_delta[i] -= 1;
+                }
+            }
+            Event::Completed { t_us, .. } => {
+                if let Some(i) = self.slot(t_us) {
+                    self.completed[i] += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Prefix-sum the depth deltas and hand over the timelines.
+    pub fn finish(self) -> WindowTimeline {
+        let mut depth = Vec::with_capacity(self.depth_delta.len());
+        let mut running = 0i64;
+        for d in self.depth_delta {
+            running += d;
+            depth.push(running);
+        }
+        WindowTimeline {
+            width_us: self.width_us,
+            admitted: self.admitted,
+            completed: self.completed,
+            queue_depth: depth,
+            clipped: self.clipped,
+        }
+    }
+}
+
+/// The finished timelines (one entry per window, index 0 = t 0).
+#[derive(Debug, Clone)]
+pub struct WindowTimeline {
+    pub width_us: u64,
+    /// Admissions per window.
+    pub admitted: Vec<u64>,
+    /// Completions per window (the throughput timeline).
+    pub completed: Vec<u64>,
+    /// Queue depth at each window's end (admitted − dequeued, running).
+    pub queue_depth: Vec<i64>,
+    /// Events beyond [`MAX_WINDOWS`], counted instead of stored.
+    pub clipped: usize,
+}
+
+impl WindowTimeline {
+    /// Peak end-of-window queue depth.
+    pub fn peak_depth(&self) -> i64 {
+        self.queue_depth.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Peak completions in any single window.
+    pub fn peak_completed(&self) -> u64 {
+        self.completed.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("width_us", Json::num(self.width_us as f64)),
+            ("admitted", Json::arr(self.admitted.iter().map(|&v| Json::num(v as f64)))),
+            ("completed", Json::arr(self.completed.iter().map(|&v| Json::num(v as f64)))),
+            ("queue_depth", Json::arr(self.queue_depth.iter().map(|&v| Json::num(v as f64)))),
+            ("peak_depth", Json::num(self.peak_depth() as f64)),
+            ("clipped", Json::num(self.clipped as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(event: Event) -> ParsedEvent {
+        ParsedEvent { scheme: "SEAL".to_string(), event }
+    }
+
+    #[test]
+    fn windows_accumulate_throughput_and_depth() {
+        let mut w = Windows::new(100);
+        // Window 0: two admits, one dequeue → depth 1 at window end.
+        // Window 1: one dequeue, two completions → depth 0.
+        for e in [
+            Event::Admitted { req: 0, t_us: 10 },
+            Event::Admitted { req: 1, t_us: 90 },
+            Event::Dequeued { req: 0, worker: 0, t_us: 95 },
+            Event::Dequeued { req: 1, worker: 0, t_us: 130 },
+            Event::Completed { req: 0, worker: 0, queued_us: 85, service_us: 20, t_us: 115 },
+            Event::Completed { req: 1, worker: 0, queued_us: 40, service_us: 40, t_us: 170 },
+        ] {
+            w.observe(&ev(e));
+        }
+        let t = w.finish();
+        assert_eq!(t.admitted, vec![2, 0]);
+        assert_eq!(t.completed, vec![0, 2]);
+        assert_eq!(t.queue_depth, vec![1, 0]);
+        assert_eq!(t.peak_depth(), 1);
+        assert_eq!(t.peak_completed(), 2);
+        assert_eq!(t.clipped, 0);
+    }
+
+    #[test]
+    fn events_past_the_cap_are_clipped_not_stored() {
+        let mut w = Windows::new(1);
+        w.observe(&ev(Event::Admitted { req: 0, t_us: (MAX_WINDOWS as u64) * 2 }));
+        w.observe(&ev(Event::Admitted { req: 1, t_us: 0 }));
+        let t = w.finish();
+        assert_eq!(t.clipped, 1);
+        assert_eq!(t.admitted.len(), 1);
+    }
+
+    #[test]
+    fn zero_width_is_clamped() {
+        let mut w = Windows::new(0);
+        w.observe(&ev(Event::Admitted { req: 0, t_us: 3 }));
+        let t = w.finish();
+        assert_eq!(t.width_us, 1);
+        assert_eq!(t.admitted.len(), 4);
+    }
+}

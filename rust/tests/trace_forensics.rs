@@ -1,0 +1,140 @@
+//! End-to-end trace forensics: drive real serving runs through
+//! `ServeConfig` with `--events` recording, fold the recorded
+//! `seal-events/v1` streams through `seal trace-report`'s builder, and
+//! pin the contracts the CI smoke also asserts — lifecycle
+//! reconciliation against the engine's own report, the `run_meta`
+//! header round-trip, replayability of fresh recordings, and
+//! byte-identical documents from repeated report runs.
+
+use std::path::PathBuf;
+
+use seal::coordinator::{Admission, ServeConfig, ServeMode, ServeOutcome, ServeReport, SynthSpec};
+use seal::sim::Scheme;
+use seal::trace::{build_stream_report, report_document};
+use seal::util::json::Json;
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("seal_tforensics_{}_{}.jsonl", name, std::process::id()))
+}
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::synthetic()
+        .spec(SynthSpec { cost_repeats: 3, ..SynthSpec::default() })
+        .requests(40)
+        .batch_max(4)
+        .workers(2)
+        .queue_cap(16)
+        .admission(Admission::Block)
+        .scheme(Scheme::SEAL)
+        .slowdown(1.0)
+        .seed(11)
+}
+
+fn run_whole(cfg: ServeConfig) -> ServeReport {
+    match cfg.run().unwrap() {
+        ServeOutcome::WholeRequest(r) => r,
+        ServeOutcome::Continuous(_) => unreachable!("whole-request config"),
+    }
+}
+
+#[test]
+fn recorded_run_reconciles_with_the_engines_own_accounting() {
+    let ev = temp_path("record");
+    let engine = run_whole(base_cfg().events(ev.clone()));
+    assert_eq!(engine.served, 40);
+
+    let r = build_stream_report(&ev, 1_000).unwrap();
+    // The run_meta header round-trips and labels the stream.
+    let meta = r.run_meta.as_ref().expect("fresh recordings carry run_meta");
+    assert_eq!(meta.scheme, "SEAL");
+    assert_eq!(meta.mode, "whole_request");
+    assert_eq!(meta.seed, 11);
+    assert_eq!(r.label, "SEAL whole_request");
+    // The tolerant reader sees a fully well-formed stream.
+    assert_eq!((r.malformed, r.unknown, r.out_of_order), (0, 0, 0));
+
+    // Lifecycle reconstruction must agree with the engine's report.
+    let s = &r.schemes["SEAL"];
+    assert_eq!(s.admitted, engine.served as u64);
+    assert_eq!(s.completed, engine.served as u64);
+    assert_eq!((s.unfinished, s.orphan_completions), (0, 0));
+    assert_eq!(
+        s.rejected_shed + s.rejected_closed,
+        engine.rejected as u64,
+        "stream rejections must reconcile with the engine's count"
+    );
+    assert_eq!(s.queued_us.n, engine.served as u64);
+    assert_eq!(s.service_us.n, engine.served as u64);
+    // Quantiles are monotone and bounded by the observed max.
+    let q = |p: f64| s.total_us.quantile(p);
+    assert!(q(0.5) <= q(0.99) && q(0.99) <= q(0.999) && q(0.999) <= q(0.9999));
+    assert!(q(0.9999) <= s.total_us.max);
+    // The windowed timelines balance: every admission completes.
+    let admitted: u64 = r.windows.admitted.iter().sum();
+    let completed: u64 = r.windows.completed.iter().sum();
+    assert_eq!(admitted, completed);
+    assert_eq!(*r.windows.queue_depth.last().unwrap(), 0, "queue drains by end of stream");
+    let _ = std::fs::remove_file(&ev);
+}
+
+#[test]
+fn fresh_recordings_replay_and_report_byte_identically() {
+    let ev_a = temp_path("replay_src");
+    let ev_b = temp_path("replay_dst");
+    let recorded = run_whole(base_cfg().events(ev_a.clone()));
+
+    // A stream led by run_meta must replay without skipped lines or
+    // count drift (the PR-6 regression surface for the new header).
+    let replayed = run_whole(base_cfg().requests(7).replay(ev_a.clone()).events(ev_b.clone()));
+    assert_eq!(replayed.served, recorded.served);
+    assert_eq!(replayed.rejected, recorded.rejected);
+
+    // `seal trace-report` twice over one recording: identical bytes.
+    let doc = |p: &PathBuf| {
+        let streams = vec![build_stream_report(p, 1_000).unwrap()];
+        report_document(&streams, false).to_string()
+    };
+    assert_eq!(doc(&ev_b), doc(&ev_b));
+    let parsed = Json::parse(&doc(&ev_b)).unwrap();
+    assert_eq!(
+        parsed.get("schema").and_then(Json::as_str),
+        Some(seal::trace::TRACE_REPORT_SCHEMA)
+    );
+    let _ = std::fs::remove_file(&ev_a);
+    let _ = std::fs::remove_file(&ev_b);
+}
+
+#[test]
+fn continuous_recording_reconciles_sessions_and_evictions() {
+    let ev = temp_path("continuous");
+    let out = ServeConfig::synthetic()
+        .scheme(Scheme::SEAL)
+        .slowdown(1.0)
+        .seed(5)
+        .mode(ServeMode::Continuous {
+            sessions: 12,
+            steps_per_session: 6,
+            prompt_tokens: 8,
+            kv_capacity_blocks: 10,
+            block_tokens: 4,
+        })
+        .events(ev.clone())
+        .run()
+        .unwrap();
+    let cont = match out {
+        ServeOutcome::Continuous(r) => r,
+        ServeOutcome::WholeRequest(_) => unreachable!("continuous config"),
+    };
+
+    let r = build_stream_report(&ev, 1_000).unwrap();
+    assert_eq!(r.run_meta.as_ref().unwrap().mode, "continuous");
+    let s = &r.schemes["SEAL"];
+    assert_eq!((s.sessions_started, s.sessions_ended), (12, 12));
+    assert_eq!(s.session_steps, 12 * 6);
+    // A 10-block pool cannot hold 12 sessions' KV: evictions must
+    // appear in the stream, and the per-event block counts must sum to
+    // the pager's own eviction tally.
+    assert_eq!(s.evicted_blocks, cont.pager.evictions);
+    assert!(s.evict_events > 0, "tight KV pool must evict");
+    let _ = std::fs::remove_file(&ev);
+}
