@@ -378,10 +378,8 @@ pub fn document(r: &BenchReport) -> String {
             ("slowdown", Json::num(rep.slowdown)),
         ])
     });
-    Json::obj(vec![
-        ("schema", Json::str(SERVE_BENCH_SCHEMA)),
-        ("mode", Json::str(r.mode)),
-        ("generated_unix", Json::num(crate::perf::unix_now() as f64)),
+    let mut fields = crate::perf::ReportHeader::new(SERVE_BENCH_SCHEMA, r.mode).fields();
+    fields.extend(vec![
         (
             "engine",
             Json::obj(vec![
@@ -403,8 +401,8 @@ pub fn document(r: &BenchReport) -> String {
         ("scaling", Json::arr(scaling)),
         ("decode_grid", Json::arr(decode)),
         ("all_monotonic", Json::Bool(r.all_monotonic())),
-    ])
-    .to_string()
+    ]);
+    Json::obj(fields).to_string()
 }
 
 /// Human-readable summary (markdown + results/ CSV).

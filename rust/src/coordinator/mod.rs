@@ -50,10 +50,6 @@ pub use server::{
     poisson_gap_ms, run_engine, Admission, ArrivalPlan, CalWorkload, Calibration, EngineCfg,
     EngineStats, ServeBackend, ServeConfig, ServeMode, ServeOutcome, ServeReport,
 };
-#[allow(deprecated)]
-pub use server::{
-    scheme_slowdown, scheme_slowdown_for, serve, serve_synthetic, ServeCfg, SynthServeCfg,
-};
 pub use session::{run_continuous, ContinuousCfg, ContinuousReport, DecodeSession};
 pub use telemetry::{
     Event, EventSink, ParsedEvent, RejectReason, RunMeta, ScanStats, SharedBuf, Trace,

@@ -9,9 +9,9 @@
 //! decode batching over many live sessions with a paged encrypted KV
 //! cache, implemented in [`super::session`]). Build with
 //! [`ServeConfig::synthetic`] / [`ServeConfig::pjrt`], chain setters,
-//! call [`ServeConfig::run`]. The pre-PR-7 `ServeCfg`/`SynthServeCfg`
-//! pair and the `scheme_slowdown*` free functions survive one release
-//! as deprecated shims over this API.
+//! call [`ServeConfig::run`]. This is the only serving entry point —
+//! the pre-PR-7 per-backend config shims and slowdown free functions
+//! served their one deprecation release and are gone.
 //!
 //! Whole-request path: a request producer (Poisson by default, or a
 //! deterministic recorded/synthesized schedule via
@@ -431,109 +431,6 @@ impl ServeConfig {
     }
 }
 
-// -- deprecated pre-unification shims ----------------------------------------
-
-/// Pre-PR-7 `seal serve` configuration (the PJRT/artifact path).
-#[deprecated(note = "superseded by ServeConfig::pjrt(model, artifacts) — one unified \
-                     serving-session config for both backends and modes")]
-#[derive(Debug, Clone)]
-pub struct ServeCfg {
-    pub model: String,
-    pub artifacts: PathBuf,
-    pub n_requests: usize,
-    pub batch_max: usize,
-    pub n_workers: usize,
-    pub queue_cap: usize,
-    pub admission: Admission,
-    pub scheme: Scheme,
-    pub se_ratio: f64,
-    pub arrival_per_ms: f64,
-    pub seed: Option<u64>,
-    pub events: Option<PathBuf>,
-    pub replay: Option<PathBuf>,
-    pub use_pallas: bool,
-}
-
-#[allow(deprecated)]
-impl ServeCfg {
-    fn into_config(self) -> ServeConfig {
-        let mut cfg = ServeConfig::pjrt(self.model, self.artifacts).use_pallas(self.use_pallas);
-        cfg.n_requests = self.n_requests;
-        cfg.batch_max = self.batch_max;
-        cfg.n_workers = self.n_workers;
-        cfg.queue_cap = self.queue_cap;
-        cfg.admission = self.admission;
-        cfg.scheme = self.scheme;
-        cfg.se_ratio = self.se_ratio;
-        cfg.arrival_per_ms = self.arrival_per_ms;
-        cfg.seed = self.seed;
-        cfg.events = self.events;
-        cfg.replay = self.replay;
-        cfg
-    }
-}
-
-/// Pre-PR-7 synthetic-backend serving configuration.
-#[deprecated(note = "superseded by ServeConfig::synthetic() — one unified serving-session \
-                     config for both backends and modes")]
-#[derive(Debug, Clone)]
-pub struct SynthServeCfg {
-    pub spec: SynthSpec,
-    pub n_requests: usize,
-    pub batch_max: usize,
-    pub n_workers: usize,
-    pub queue_cap: usize,
-    pub admission: Admission,
-    pub scheme: Scheme,
-    pub se_ratio: f64,
-    pub arrival_per_ms: f64,
-    /// `> 0.0` skips calibration and uses this factor directly;
-    /// `0.0` calibrates through the CNN workload.
-    pub slowdown: f64,
-    pub seed: Option<u64>,
-    pub events: Option<PathBuf>,
-    pub replay: Option<PathBuf>,
-}
-
-#[allow(deprecated)]
-impl SynthServeCfg {
-    fn as_config(&self) -> ServeConfig {
-        let mut cfg = ServeConfig::synthetic().spec(self.spec).slowdown(self.slowdown);
-        cfg.n_requests = self.n_requests;
-        cfg.batch_max = self.batch_max;
-        cfg.n_workers = self.n_workers;
-        cfg.queue_cap = self.queue_cap;
-        cfg.admission = self.admission;
-        cfg.scheme = self.scheme;
-        cfg.se_ratio = self.se_ratio;
-        cfg.arrival_per_ms = self.arrival_per_ms;
-        cfg.seed = self.seed;
-        cfg.events = self.events.clone();
-        cfg.replay = self.replay.clone();
-        cfg
-    }
-}
-
-/// Pre-PR-7 entry point for the PJRT path.
-#[deprecated(note = "use ServeConfig::pjrt(model, artifacts).run()")]
-#[allow(deprecated)]
-pub fn serve(cfg: ServeCfg) -> crate::Result<ServeReport> {
-    match cfg.into_config().run()? {
-        ServeOutcome::WholeRequest(r) => Ok(r),
-        ServeOutcome::Continuous(_) => unreachable!("ServeCfg always runs whole-request mode"),
-    }
-}
-
-/// Pre-PR-7 entry point for the synthetic path.
-#[deprecated(note = "use ServeConfig::synthetic().run()")]
-#[allow(deprecated)]
-pub fn serve_synthetic(cfg: &SynthServeCfg) -> crate::Result<ServeReport> {
-    match cfg.as_config().run()? {
-        ServeOutcome::WholeRequest(r) => Ok(r),
-        ServeOutcome::Continuous(_) => unreachable!("SynthServeCfg always runs whole-request mode"),
-    }
-}
-
 // -- the whole-request report ------------------------------------------------
 
 #[derive(Debug)]
@@ -713,18 +610,6 @@ impl Calibration {
         memo.lock().unwrap().insert(key, f);
         f
     }
-}
-
-/// Pre-PR-7 free function (CNN workload).
-#[deprecated(note = "use Calibration::new(CalWorkload::Cnn).slowdown(scheme, se_ratio)")]
-pub fn scheme_slowdown(scheme: Scheme, se_ratio: f64) -> f64 {
-    Calibration::new(CalWorkload::Cnn).slowdown(scheme, se_ratio)
-}
-
-/// Pre-PR-7 free function (explicit workload).
-#[deprecated(note = "use Calibration::new(workload).slowdown(scheme, se_ratio)")]
-pub fn scheme_slowdown_for(scheme: Scheme, se_ratio: f64, workload: CalWorkload) -> f64 {
-    Calibration::new(workload).slowdown(scheme, se_ratio)
 }
 
 // -- request generation ------------------------------------------------------

@@ -1,18 +1,44 @@
 //! AES-128 block cipher, implemented from scratch (FIPS-197).
 //!
 //! This is the functional model of the memory-controller encryption
-//! engine (paper Table 2). It is a straightforward table-free
-//! implementation — clarity over speed; the *hot* path in this repo is
-//! the cycle simulator, not byte encryption, and the serving path
-//! encrypts model bytes once at load. Verified against the official
-//! FIPS-197 / NIST SP 800-38A / AESAVS known-answer vectors in the
-//! unit tests below (the RustCrypto `aes` cross-check is unavailable
-//! offline).
+//! engine (paper Table 2). The portable path is a straightforward
+//! table-free scalar implementation; with the `fast-aes` cargo feature
+//! the hardware AES-NI path (`core::arch::x86_64`) is compiled in and
+//! engaged at runtime when the CPU reports the `aes` feature —
+//! [`fast_path_active`] tells you which path [`Aes128::encrypt_block`]
+//! dispatches to. Both paths are byte-identical by construction and
+//! pinned so by the official FIPS-197 / NIST SP 800-38A / AESAVS
+//! known-answer vectors below plus the differential tests (the
+//! RustCrypto `aes` cross-check is unavailable offline). The scalar
+//! bodies stay public ([`Aes128::encrypt_block_scalar`]) so the
+//! differential suite can compare the two paths on the same machine.
 
 /// AES-128: 10 rounds, 16-byte blocks, 16-byte key.
 #[derive(Clone)]
 pub struct Aes128 {
     round_keys: [[u8; 16]; 11],
+    /// Equivalent-inverse-cipher decryption keys for AES-NI: the
+    /// middle round keys passed through InvMixColumns (`aesimc`), as
+    /// `aesdec` requires. Only materialized when the fast path can
+    /// actually run; equal to `round_keys` otherwise.
+    #[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+    dec_round_keys: [[u8; 16]; 11],
+}
+
+/// True when AES block operations will dispatch to the hardware AES-NI
+/// path: the `fast-aes` feature is compiled in *and* the CPU reports
+/// the `aes` feature at runtime. Tests use this to assert they are
+/// exercising (or deliberately skipping) the SIMD path rather than
+/// silently passing on the scalar one.
+#[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+pub fn fast_path_active() -> bool {
+    std::arch::is_x86_feature_detected!("aes")
+}
+
+/// Scalar-only build: the fast path never engages.
+#[cfg(not(all(feature = "fast-aes", target_arch = "x86_64")))]
+pub fn fast_path_active() -> bool {
+    false
 }
 
 const SBOX: [u8; 256] = build_sbox();
@@ -103,10 +129,44 @@ impl Aes128 {
                 }
             }
         }
+        #[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+        {
+            let dec_round_keys = if fast_path_active() {
+                // SAFETY: `aes` was just detected at runtime.
+                unsafe { aesni::inv_mix_round_keys(&rk) }
+            } else {
+                rk
+            };
+            return Aes128 { round_keys: rk, dec_round_keys };
+        }
+        #[cfg(not(all(feature = "fast-aes", target_arch = "x86_64")))]
         Aes128 { round_keys: rk }
     }
 
+    /// Encrypt one block, dispatching to AES-NI when available
+    /// ([`fast_path_active`]) and the scalar path otherwise.
     pub fn encrypt_block(&self, block: &[u8; 16]) -> [u8; 16] {
+        #[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+        if fast_path_active() {
+            // SAFETY: `aes` was detected at runtime.
+            return unsafe { aesni::encrypt_block(&self.round_keys, block) };
+        }
+        self.encrypt_block_scalar(block)
+    }
+
+    /// Decrypt one block, dispatching like [`Aes128::encrypt_block`].
+    pub fn decrypt_block(&self, block: &[u8; 16]) -> [u8; 16] {
+        #[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+        if fast_path_active() {
+            // SAFETY: `aes` was detected at runtime.
+            return unsafe { aesni::decrypt_block(&self.dec_round_keys, block) };
+        }
+        self.decrypt_block_scalar(block)
+    }
+
+    /// The portable table-free encrypt path (always available; the
+    /// reference the differential tests compare AES-NI against).
+    pub fn encrypt_block_scalar(&self, block: &[u8; 16]) -> [u8; 16] {
         let mut s = *block;
         add_round_key(&mut s, &self.round_keys[0]);
         for r in 1..10 {
@@ -121,7 +181,8 @@ impl Aes128 {
         s
     }
 
-    pub fn decrypt_block(&self, block: &[u8; 16]) -> [u8; 16] {
+    /// The portable table-free decrypt path.
+    pub fn decrypt_block_scalar(&self, block: &[u8; 16]) -> [u8; 16] {
         let mut s = *block;
         add_round_key(&mut s, &self.round_keys[10]);
         inv_shift_rows(&mut s);
@@ -134,6 +195,65 @@ impl Aes128 {
         }
         add_round_key(&mut s, &self.round_keys[0]);
         s
+    }
+}
+
+/// Hardware AES-NI round functions. One `aesenc` retires a whole
+/// SubBytes+ShiftRows+MixColumns+AddRoundKey round; decryption uses
+/// the equivalent inverse cipher (FIPS-197 §5.3.5), whose middle round
+/// keys must be passed through InvMixColumns (`aesimc`) — that
+/// transform happens once at key schedule time in [`Aes128::new`].
+#[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+mod aesni {
+    use core::arch::x86_64::{
+        __m128i, _mm_aesdec_si128, _mm_aesdeclast_si128, _mm_aesenc_si128, _mm_aesenclast_si128,
+        _mm_aesimc_si128, _mm_loadu_si128, _mm_storeu_si128, _mm_xor_si128,
+    };
+
+    #[inline]
+    unsafe fn load(k: &[u8; 16]) -> __m128i {
+        _mm_loadu_si128(k.as_ptr() as *const __m128i)
+    }
+
+    #[inline]
+    unsafe fn store(v: __m128i) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, v);
+        out
+    }
+
+    /// # Safety
+    /// The CPU must support AES-NI (runtime-detected by the caller).
+    #[target_feature(enable = "aes")]
+    pub unsafe fn inv_mix_round_keys(rk: &[[u8; 16]; 11]) -> [[u8; 16]; 11] {
+        let mut out = *rk;
+        for key in &mut out[1..10] {
+            *key = store(_mm_aesimc_si128(load(key)));
+        }
+        out
+    }
+
+    /// # Safety
+    /// The CPU must support AES-NI (runtime-detected by the caller).
+    #[target_feature(enable = "aes")]
+    pub unsafe fn encrypt_block(rk: &[[u8; 16]; 11], block: &[u8; 16]) -> [u8; 16] {
+        let mut s = _mm_xor_si128(load(block), load(&rk[0]));
+        for key in &rk[1..10] {
+            s = _mm_aesenc_si128(s, load(key));
+        }
+        store(_mm_aesenclast_si128(s, load(&rk[10])))
+    }
+
+    /// # Safety
+    /// The CPU must support AES-NI (runtime-detected by the caller).
+    /// `dec_rk[1..10]` must already be `aesimc`-transformed.
+    #[target_feature(enable = "aes")]
+    pub unsafe fn decrypt_block(dec_rk: &[[u8; 16]; 11], block: &[u8; 16]) -> [u8; 16] {
+        let mut s = _mm_xor_si128(load(block), load(&dec_rk[10]));
+        for key in dec_rk[1..10].iter().rev() {
+            s = _mm_aesdec_si128(s, load(key));
+        }
+        store(_mm_aesdeclast_si128(s, load(&dec_rk[0])))
     }
 }
 
@@ -210,11 +330,16 @@ mod tests {
         out
     }
 
+    /// Pins BOTH paths to the vector: the dispatched entry points
+    /// (AES-NI when compiled in and detected) and the scalar reference
+    /// must each reproduce the official answer.
     fn assert_kat(key: &str, pt: &str, ct: &str) {
         let aes = Aes128::new(&hex16(key));
         let (pt, ct) = (hex16(pt), hex16(ct));
         assert_eq!(aes.encrypt_block(&pt), ct, "encrypt KAT key={key}");
         assert_eq!(aes.decrypt_block(&ct), pt, "decrypt KAT key={key}");
+        assert_eq!(aes.encrypt_block_scalar(&pt), ct, "scalar encrypt KAT key={key}");
+        assert_eq!(aes.decrypt_block_scalar(&ct), pt, "scalar decrypt KAT key={key}");
     }
 
     /// FIPS-197 Appendix C.1 known-answer test.
@@ -281,6 +406,39 @@ mod tests {
             let ours = Aes128::new(&key);
             assert_eq!(ours.decrypt_block(&ours.encrypt_block(&pt)), pt);
         }
+    }
+
+    /// Dispatched vs scalar over random keys and blocks: byte-identical
+    /// on every machine. Without AES-NI (or without `fast-aes`) both
+    /// sides run the scalar code, so this can't fail spuriously — the
+    /// loud asserted-skip for that case lives in `tests/fast_path.rs`.
+    #[test]
+    fn dispatched_path_matches_scalar_on_random_blocks() {
+        let mut rng = crate::util::rng::Rng::seeded(0xfa57);
+        for _ in 0..500 {
+            let mut key = [0u8; 16];
+            let mut pt = [0u8; 16];
+            for b in key.iter_mut().chain(pt.iter_mut()) {
+                *b = rng.below(256) as u8;
+            }
+            let aes = Aes128::new(&key);
+            let ct = aes.encrypt_block(&pt);
+            assert_eq!(ct, aes.encrypt_block_scalar(&pt), "encrypt diverged, key {key:02x?}");
+            assert_eq!(
+                aes.decrypt_block(&ct),
+                aes.decrypt_block_scalar(&ct),
+                "decrypt diverged, key {key:02x?}"
+            );
+            assert_eq!(aes.decrypt_block(&ct), pt, "roundtrip broke, key {key:02x?}");
+        }
+    }
+
+    /// With `fast-aes` compiled in, dispatch must track CPU detection
+    /// exactly — engaged on AES-NI hardware, scalar elsewhere.
+    #[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+    #[test]
+    fn fast_path_tracks_cpu_detection() {
+        assert_eq!(fast_path_active(), std::arch::is_x86_feature_detected!("aes"));
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //! confidentiality, not just timing.
 //!
 //! [`aes128`] is a from-scratch AES-128 (verified against the
-//! FIPS-197 / NIST SP 800-38A / AESAVS known-answer vectors in tests);
-//! [`ctr`] builds the paper's three line-cipher modes on top of it.
+//! FIPS-197 / NIST SP 800-38A / AESAVS known-answer vectors in tests;
+//! the `fast-aes` cargo feature adds a runtime-detected AES-NI path
+//! pinned byte-identical to the scalar one); [`ctr`] builds the
+//! paper's three line-cipher modes on top of it.
 
 pub mod aes128;
 pub mod ctr;
 
-pub use aes128::Aes128;
+pub use aes128::{fast_path_active, Aes128};
 pub use ctr::{CounterModeCipher, DirectCipher, LINE_BYTES};

@@ -257,8 +257,11 @@ fn network(args: &Args) -> anyhow::Result<()> {
         zoo::by_name_seq(&name, seq).ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
     let ratio = args.get_f64("ratio", 0.5);
     let sample = seal::sweep::resolve_sample(args.get("sample"), 720);
-    let cfg = GpuConfig::default();
-    let rows = traffic::network::run_all_schemes_phased(&net, phase, ratio, &cfg, sample);
+    let rows = seal::sim::SimSession::new()
+        .phase(phase)
+        .se_ratio(ratio)
+        .sample_tiles(sample)
+        .run_schemes(&net, &SchemeRegistry::paper_six());
     let base_ipc = rows[0].1.ipc.max(1e-12);
     let base_lat = rows[0].1.latency_cycles.max(1e-12);
     let title = if zoo::is_transformer(&name) {

@@ -24,10 +24,10 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::model::zoo;
-use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine};
+use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine, SimSession};
 use crate::stats::Table;
 use crate::traffic::attention::Phase;
-use crate::traffic::{self, gemm, layers, network};
+use crate::traffic::{self, gemm, layers};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -39,8 +39,56 @@ pub const DEFAULT_BASELINE_PATH: &str = "benches/baseline_perf.json";
 /// against (quick and full rates are not comparable, so the nightly
 /// lane carries its own file).
 pub const DEFAULT_FULL_BASELINE_PATH: &str = "benches/baseline_perf_full.json";
+/// Committed baseline for `--features fast-aes` builds (CI's second
+/// perf-smoke leg). Fast and scalar builds measure different code, so
+/// the fast lane carries its own mode-tagged file.
+pub const DEFAULT_FAST_BASELINE_PATH: &str = "benches/baseline_perf_fast.json";
 /// A case regresses when `cycles_per_sec < baseline / REGRESSION_FACTOR`.
 pub const REGRESSION_FACTOR: f64 = 2.0;
+
+/// The basket mode string a run is tagged with. Builds with the
+/// `fast-aes` feature get a `-fast` suffix: their rates are gated
+/// against [`DEFAULT_FAST_BASELINE_PATH`] and must never be compared
+/// with scalar-build numbers (the mode-mismatch skip enforces that).
+pub fn basket_mode(quick: bool) -> &'static str {
+    match (quick, cfg!(feature = "fast-aes")) {
+        (true, false) => "quick",
+        (false, false) => "full",
+        (true, true) => "quick-fast",
+        (false, true) => "full-fast",
+    }
+}
+
+/// The `(schema, mode, generated_unix)` header triple shared by every
+/// benchmark/report document the repo emits (`seal-perf/v1`,
+/// `seal-serve/v3`, the soak report). One constructor keeps the field
+/// names and timestamp source identical across documents; callers
+/// append their own fields after [`ReportHeader::fields`].
+///
+/// Deliberately NOT used by byte-compared documents (the serve trace
+/// report is `cmp`'d between runs in CI, so it must stay
+/// timestamp-free).
+#[derive(Debug, Clone)]
+pub struct ReportHeader {
+    pub schema: &'static str,
+    pub mode: String,
+}
+
+impl ReportHeader {
+    pub fn new(schema: &'static str, mode: impl Into<String>) -> ReportHeader {
+        ReportHeader { schema, mode: mode.into() }
+    }
+
+    /// The header fields, in canonical order, ready to extend with the
+    /// document body.
+    pub fn fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("schema", Json::str(self.schema)),
+            ("mode", Json::str(&self.mode)),
+            ("generated_unix", Json::num(unix_now() as f64)),
+        ]
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PerfOptions {
@@ -113,7 +161,8 @@ struct PerfCase {
 
 /// The fixed workload basket. Trace generation for single-layer cases
 /// happens here, outside the timed region; the fig 13 sweep times the
-/// full `run_network_seeded` path — exactly what `seal sweep` pays.
+/// full `SimSession::run_network` path — exactly what `seal sweep`
+/// pays, including the session's tile-walk memoization.
 fn basket(quick: bool) -> Vec<PerfCase> {
     let cfg = GpuConfig::default();
     let mut cases: Vec<PerfCase> = Vec::new();
@@ -173,13 +222,15 @@ fn basket(quick: bool) -> Vec<PerfCase> {
             name: "fig13_networks",
             kind: "network_sweep",
             run: Box::new(move |e| {
-                let cfg = cfg.clone().with_engine(e);
+                let session = SimSession::new()
+                    .config(cfg.clone().with_engine(e))
+                    .se_ratio(0.5)
+                    .sample_tiles(sample);
                 let mut cycles = 0u64;
                 let mut instrs = 0u64;
                 for net_name in &nets {
                     let net = zoo::by_name(net_name).expect("paper network");
-                    for scheme in SchemeRegistry::paper_six() {
-                        let run = network::run_network_seeded(&net, scheme, 0.5, &cfg, sample, 0);
+                    for (_, run) in session.run_schemes(&net, &SchemeRegistry::paper_six()) {
                         for (_, s, _) in &run.per_layer {
                             cycles += s.cycles;
                             instrs += s.instrs;
@@ -202,13 +253,16 @@ fn basket(quick: bool) -> Vec<PerfCase> {
             name: "registry_new_schemes",
             kind: "network_sweep",
             run: Box::new(move |e| {
-                let cfg = cfg.clone().with_engine(e);
+                let session = SimSession::new()
+                    .config(cfg.clone().with_engine(e))
+                    .se_ratio(0.5)
+                    .sample_tiles(sample);
                 let net = zoo::by_name("vgg16").expect("paper network");
                 let mut cycles = 0u64;
                 let mut instrs = 0u64;
                 for name in ["GuardNN", "Seculator"] {
                     let scheme = Scheme::parse(name).expect("registered scheme");
-                    let run = network::run_network_seeded(&net, scheme, 0.5, &cfg, sample, 0);
+                    let run = session.run_network_for(&net, scheme);
                     for (_, s, _) in &run.per_layer {
                         cycles += s.cycles;
                         instrs += s.instrs;
@@ -235,22 +289,18 @@ fn basket(quick: bool) -> Vec<PerfCase> {
             name: "transformer_decode",
             kind: "network_sweep",
             run: Box::new(move |e| {
-                let cfg = cfg.clone().with_engine(e);
                 let mut cycles = 0u64;
                 let mut instrs = 0u64;
                 for &(name, seq, sample) in &nets {
+                    let session = SimSession::new()
+                        .config(cfg.clone().with_engine(e))
+                        .phase(Phase::Decode)
+                        .se_ratio(0.5)
+                        .sample_tiles(sample);
                     let net = zoo::by_name_seq(name, seq).expect("zoo transformer");
                     for s in ["SEAL", "GuardNN", "Seculator"] {
                         let scheme = Scheme::parse(s).expect("registered scheme");
-                        let run = network::run_network_phased(
-                            &net,
-                            Phase::Decode,
-                            scheme,
-                            0.5,
-                            &cfg,
-                            sample,
-                            0,
-                        );
+                        let run = session.run_network_for(&net, scheme);
                         for (_, s, _) in &run.per_layer {
                             cycles += s.cycles;
                             instrs += s.instrs;
@@ -411,7 +461,6 @@ pub struct PerfReport {
 
 /// Serialize the BENCH document (`seal-perf/v1` — schema in README).
 pub fn document(report: &PerfReport, opts: &PerfOptions, baseline_path: &Path) -> String {
-    let generated = unix_now();
     let cases = report.results.iter().map(|r| {
         let mut fields = vec![
             ("name", Json::str(r.name)),
@@ -433,24 +482,24 @@ pub fn document(report: &PerfReport, opts: &PerfOptions, baseline_path: &Path) -
         }
         Json::obj(fields)
     });
-    Json::obj(vec![
-        ("schema", Json::str("seal-perf/v1")),
-        ("mode", Json::str(if opts.quick { "quick" } else { "full" })),
-        ("generated_unix", Json::num(generated as f64)),
-        ("cases", Json::arr(cases)),
-        (
-            "baseline",
-            Json::obj(vec![
-                ("path", Json::str(&baseline_path.display().to_string())),
-                ("found", Json::Bool(report.baseline_found)),
-                ("provisional", Json::Bool(report.baseline_provisional)),
-                ("mode_mismatch", Json::Bool(report.baseline_mode_mismatch)),
-                ("regression_factor", Json::num(REGRESSION_FACTOR)),
-            ]),
-        ),
-        ("regressed", Json::Bool(report.regressed)),
-    ])
-    .to_string()
+    let mut fields = ReportHeader::new("seal-perf/v1", basket_mode(opts.quick)).fields();
+    // Whether the AES-NI path actually engaged at runtime (false on a
+    // scalar build OR a fast-aes build on a CPU without `aes`) — the
+    // CI speedup merge reads this to label the ratio it records.
+    fields.push(("fast_aes", Json::Bool(crate::crypto::fast_path_active())));
+    fields.push(("cases", Json::arr(cases)));
+    fields.push((
+        "baseline",
+        Json::obj(vec![
+            ("path", Json::str(&baseline_path.display().to_string())),
+            ("found", Json::Bool(report.baseline_found)),
+            ("provisional", Json::Bool(report.baseline_provisional)),
+            ("mode_mismatch", Json::Bool(report.baseline_mode_mismatch)),
+            ("regression_factor", Json::num(REGRESSION_FACTOR)),
+        ]),
+    ));
+    fields.push(("regressed", Json::Bool(report.regressed)));
+    Json::obj(fields).to_string()
 }
 
 /// Human-readable summary table (markdown + results/ CSV).
@@ -484,7 +533,7 @@ pub fn print_table(report: &PerfReport) {
 /// document. Does not exit on regression — callers decide (the CLI
 /// fails, the bench binary only reports).
 pub fn run(opts: &PerfOptions, out: &Path, baseline_path: &Path) -> anyhow::Result<PerfReport> {
-    let mode = if opts.quick { "quick" } else { "full" };
+    let mode = basket_mode(opts.quick);
     let results = run_basket(opts);
     let baseline = load_baseline(baseline_path)?;
     let (gate_rows, found, provisional, mode_mismatch) = match &baseline {
@@ -541,10 +590,14 @@ pub fn cli(args: &Args) -> anyhow::Result<()> {
         compare_lockstep: args.has("compare-lockstep") || !quick,
     };
     let out = args.get_or("out", DEFAULT_BENCH_PATH);
-    let baseline_path = args.get_or("baseline", DEFAULT_BASELINE_PATH);
+    // fast-aes builds gate against their own baseline file by default
+    // (rates from the two builds are not comparable).
+    let default_baseline =
+        if cfg!(feature = "fast-aes") { DEFAULT_FAST_BASELINE_PATH } else { DEFAULT_BASELINE_PATH };
+    let baseline_path = args.get_or("baseline", default_baseline);
     let report = run(&opts, Path::new(&out), Path::new(&baseline_path))?;
     if args.has("bless-baseline") {
-        let mode = if quick { "quick" } else { "full" };
+        let mode = basket_mode(quick);
         let doc = baseline_document(
             &report.results,
             false,
@@ -622,7 +675,8 @@ mod tests {
         assert_eq!(parsed.get("missing"), None);
     }
 
-    /// Basket case names (shared by both committed baseline files).
+    /// Basket case names (shared by all three committed baseline
+    /// files: quick, full, and quick-fast).
     const BASKET_NAMES: [&str; 6] = [
         "conv0_seal",
         "fig13_networks",
@@ -643,6 +697,40 @@ mod tests {
         let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
         names.sort_unstable();
         assert_eq!(names, BASKET_NAMES);
+    }
+
+    #[test]
+    fn committed_fast_baseline_parses_and_matches_basket_names() {
+        // The fast-aes perf-smoke leg's baseline: quick-fast mode, same
+        // case names (the basket is feature-invariant).
+        let text =
+            std::fs::read_to_string(DEFAULT_FAST_BASELINE_PATH).expect("committed fast baseline");
+        let b = parse_baseline(&text).expect("valid fast baseline");
+        assert_eq!(b.mode.as_deref(), Some("quick-fast"));
+        let mut names: Vec<&str> = b.cases.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        assert_eq!(names, BASKET_NAMES);
+    }
+
+    #[test]
+    fn basket_mode_is_feature_and_flag_consistent() {
+        let fast = cfg!(feature = "fast-aes");
+        assert_eq!(basket_mode(true).contains("-fast"), fast);
+        assert_eq!(basket_mode(false).contains("-fast"), fast);
+        assert!(basket_mode(true).starts_with("quick"));
+        assert!(basket_mode(false).starts_with("full"));
+    }
+
+    #[test]
+    fn report_header_emits_the_canonical_triple() {
+        let fields = ReportHeader::new("seal-perf/v1", "quick").fields();
+        let names: Vec<&str> = fields.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["schema", "mode", "generated_unix"]);
+        let doc = Json::obj(fields).to_string();
+        let j = Json::parse(&doc).expect("valid json");
+        assert_eq!(j.req("schema").as_str(), Some("seal-perf/v1"));
+        assert_eq!(j.req("mode").as_str(), Some("quick"));
+        assert!(j.req("generated_unix").as_f64().is_some());
     }
 
     #[test]
@@ -687,7 +775,10 @@ mod tests {
         let doc = document(&report, &opts, Path::new("benches/baseline_perf.json"));
         let j = Json::parse(&doc).expect("valid json");
         assert_eq!(j.req("schema").as_str(), Some("seal-perf/v1"));
-        assert_eq!(j.req("mode").as_str(), Some("quick"));
+        // "quick" on a scalar build, "quick-fast" under --features
+        // fast-aes (this test runs in both CI legs).
+        assert_eq!(j.req("mode").as_str(), Some(basket_mode(true)));
+        assert_eq!(j.req("fast_aes").as_bool(), Some(crate::crypto::fast_path_active()));
         assert_eq!(j.req("regressed").as_bool(), Some(true));
         let case = &j.req("cases").as_arr().unwrap()[0];
         assert_eq!(case.req("event_speedup").as_f64(), Some(5.0));

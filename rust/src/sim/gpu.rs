@@ -104,6 +104,11 @@ pub struct Gpu {
     /// popped no earlier than their cycle, and registrations always
     /// happen strictly before it).
     mc_next_reg: Vec<u64>,
+    /// Reusable buffer for MC read completions: `step()` runs once per
+    /// executed cycle and drains every channel, so popping into a
+    /// fresh `Vec` per channel per cycle was the simulator's hottest
+    /// allocation site. Taken/restored around the drain loops.
+    completed_scratch: Vec<u64>,
     /// Idle-gap jumps taken by the event engine (diagnostics).
     jumps: u64,
     now: u64,
@@ -112,10 +117,26 @@ pub struct Gpu {
 const REQ_Q_CAP: usize = 32;
 
 impl Gpu {
+    /// Deprecated positional constructor; forwards to
+    /// [`Gpu::with_streams`]. Most callers want the
+    /// [`crate::sim::SimSession`] builder instead and never construct
+    /// a `Gpu` directly.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use sim::SimSession (or Gpu::with_streams for raw stream construction)"
+    )]
+    pub fn new(
+        cfg: GpuConfig,
+        enc_map: Arc<dyn EncMap>,
+        streams: Vec<Box<dyn AccessStream>>,
+    ) -> Gpu {
+        Gpu::with_streams(cfg, enc_map, streams)
+    }
+
     /// Build a GPU with one stream per (sm, warp); `streams.len()` must
     /// be `n_sms * warps_per_sm` (use `Slot::Compute(0)`-free empty
     /// vecs for unused warps).
-    pub fn new(
+    pub fn with_streams(
         cfg: GpuConfig,
         enc_map: Arc<dyn EncMap>,
         mut streams: Vec<Box<dyn AccessStream>>,
@@ -146,6 +167,7 @@ impl Gpu {
             enc_map,
             cfg,
             wheel,
+            completed_scratch: Vec::new(),
             jumps: 0,
             now: 0,
         }
@@ -236,13 +258,18 @@ impl Gpu {
 
     fn step(&mut self) {
         let now = self.now;
-        // 1. MC completions -> L2 fill -> SM response queues.
+        // 1. MC completions -> L2 fill -> SM response queues. The
+        //    scratch buffer is taken out of `self` for the duration
+        //    because `fill_slice` needs `&mut self`.
+        let mut completed = std::mem::take(&mut self.completed_scratch);
         for ch in 0..self.cfg.n_channels {
-            let completed = self.mcs[ch].completed(now);
-            for line in completed {
+            completed.clear();
+            self.mcs[ch].drain_completed(now, &mut completed);
+            for &line in &completed {
                 self.fill_slice(ch, line, now);
             }
         }
+        self.completed_scratch = completed;
         // 2. L2 slices consume the request crossbar.
         for ch in 0..self.cfg.n_channels {
             for _ in 0..self.cfg.l2_ports {
@@ -373,16 +400,21 @@ impl Gpu {
                 self.writeback(ch, line, self.now);
             }
         }
-        // Drain the MCs.
+        // Drain the MCs (completions are discarded: nothing waits on
+        // flush-phase reads, the scratch only avoids reallocation).
         let mut guard = 0u64;
+        let mut completed = std::mem::take(&mut self.completed_scratch);
         while !self.mcs.iter().all(|m| m.idle()) && guard < 10_000_000 {
             for mc in &mut self.mcs {
                 mc.tick(self.now);
-                mc.completed(self.now);
+                completed.clear();
+                mc.drain_completed(self.now, &mut completed);
             }
             self.now += 1;
             guard += 1;
         }
+        completed.clear();
+        self.completed_scratch = completed;
         for mc in &mut self.mcs {
             mc.flush_scheme_state(self.now);
         }
@@ -433,7 +465,7 @@ mod tests {
                 Box::new(v.into_iter()) as Box<dyn AccessStream>
             })
             .collect();
-        Gpu::new(cfg, Arc::new(AllEncrypted), streams)
+        Gpu::with_streams(cfg, Arc::new(AllEncrypted), streams)
     }
 
     #[test]
@@ -449,7 +481,7 @@ mod tests {
                 Box::new(v.into_iter()) as Box<dyn AccessStream>
             })
             .collect();
-        let mut gpu = Gpu::new(cfg, Arc::new(AllEncrypted), streams);
+        let mut gpu = Gpu::with_streams(cfg, Arc::new(AllEncrypted), streams);
         let s = gpu.run();
         let ipc = s.ipc();
         assert!(

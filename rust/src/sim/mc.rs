@@ -189,9 +189,10 @@ impl MemoryController {
         }
     }
 
-    /// Pop reads completed by `now`: (line) list.
-    pub fn completed(&mut self, now: u64) -> Vec<u64> {
-        let mut out = Vec::new();
+    /// Pop reads completed by `now` into `out` (appended). The hot
+    /// `Gpu::step` loop passes one reusable scratch buffer instead of
+    /// allocating a fresh `Vec` per channel per executed cycle.
+    pub fn drain_completed(&mut self, now: u64, out: &mut Vec<u64>) {
         while let Some(&Reverse((done, line))) = self.inflight.peek() {
             if done > now {
                 break;
@@ -199,6 +200,13 @@ impl MemoryController {
             self.inflight.pop();
             out.push(line);
         }
+    }
+
+    /// Pop reads completed by `now`: (line) list. Allocating
+    /// convenience wrapper over [`MemoryController::drain_completed`].
+    pub fn completed(&mut self, now: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.drain_completed(now, &mut out);
         out
     }
 

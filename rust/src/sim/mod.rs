@@ -20,6 +20,12 @@
 //! scheme-agnostic — it delegates every encrypted access to the
 //! configured pipeline through the narrow [`scheme::McResources`]
 //! facade.
+//!
+//! [`session::SimSession`] (DESIGN.md §14) is the front door: one
+//! builder configures scheme/phase/ratio/sample/seed and runs
+//! workloads or whole networks, owning the tile-walk memoization
+//! cache. The former `traffic::network::run_network*` free functions
+//! and `Gpu::new` survive one release as `#[deprecated]` wrappers.
 
 pub mod aes_engine;
 pub mod cache;
@@ -31,6 +37,7 @@ pub mod event;
 pub mod gpu;
 pub mod mc;
 pub mod scheme;
+pub mod session;
 
 pub use config::{GpuConfig, SimEngine, LINE};
 pub use event::EventWheel;
@@ -38,3 +45,4 @@ pub use gpu::{Gpu, SimStats};
 pub use scheme::{
     CipherPipeline, CounterLifecycle, McResources, Scheme, SchemeRegistry, SchemeSpec,
 };
+pub use session::SimSession;

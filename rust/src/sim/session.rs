@@ -1,0 +1,289 @@
+//! `SimSession` — the one front door for configuring and running
+//! cycle simulations (DESIGN.md §14).
+//!
+//! Every consumer that used to thread `(net, phase, scheme, se_ratio,
+//! cfg, sample, seed)` positionally through the `traffic::network`
+//! free functions now builds a session once and runs workloads or
+//! whole networks through it:
+//!
+//! ```text
+//! SimSession::new()
+//!     .config(GpuConfig::default())
+//!     .scheme(Scheme::SEAL)
+//!     .phase(Phase::Decode)
+//!     .se_ratio(0.5)
+//!     .sample_tiles(48)
+//!     .seed(0)
+//!     .run_network(&net)
+//! ```
+//!
+//! Beyond the API consolidation, the session owns the **tile-walk
+//! memoization layer**: per-layer workload construction (the tile
+//! walks of `traffic::{layers,attention,gemm}`) is a pure function of
+//! (layer shape, phase, resolved per-layer SE ratio, mask seed, sample
+//! budget, GPU geometry) — scheme identity and the raw `se_ratio` only
+//! reach a workload *through* the resolved ratio, and the emitted slot
+//! programs never read the SE masks at all. So the first walk per key
+//! is cached and every later request replays the identical `Workload`
+//! by reference. Concretely: a 9-scheme registry sweep resolves every
+//! non-smart scheme to `ratio = None`, so all of them share one cached
+//! walk per layer and the smart schemes share another — layer
+//! workloads are built at most twice per network instead of nine
+//! times, and `SimStats` are byte-identical by construction because
+//! the simulator consumes the exact same `Workload` value either way
+//! (pinned by `tests/fast_path.rs` across the whole registry).
+//!
+//! The cache lives behind a `RefCell` and the session is deliberately
+//! `!Sync`: sweep cells, perf cases and serve calibration each build
+//! their own session, so there is no cross-thread sharing to reason
+//! about. Builder setters that change workload inputs clear the cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::model::zoo::{Layer, Network};
+use crate::traffic::attention::Phase;
+use crate::traffic::layers::{layer_workload_phased, DEFAULT_SAMPLE_TILES};
+use crate::traffic::network::{layer_se_ratio, NetworkRun};
+use crate::traffic::{self, Workload};
+
+use super::config::GpuConfig;
+use super::gpu::SimStats;
+use super::scheme::Scheme;
+
+/// Memoization key for one layer walk. The ratio is keyed by bit
+/// pattern with `u64::MAX` as the `None` sentinel (ratios are finite
+/// policy fractions, never NaN, so the sentinel cannot collide).
+type WalkKey = (String, Phase, u64, u64);
+
+/// Builder + runner for cycle simulations. See the module docs.
+pub struct SimSession {
+    cfg: GpuConfig,
+    scheme: Scheme,
+    se_ratio: f64,
+    phase: Phase,
+    sample_tiles: usize,
+    seed: u64,
+    memoize: bool,
+    walks: RefCell<HashMap<WalkKey, Rc<Workload>>>,
+}
+
+impl Default for SimSession {
+    fn default() -> Self {
+        SimSession::new()
+    }
+}
+
+impl SimSession {
+    /// A session with the paper-default configuration: baseline
+    /// scheme, prefill phase, SE ratio 0.5, the default sample budget.
+    pub fn new() -> SimSession {
+        SimSession {
+            cfg: GpuConfig::default(),
+            scheme: Scheme::BASELINE,
+            se_ratio: 0.5,
+            phase: Phase::Prefill,
+            sample_tiles: DEFAULT_SAMPLE_TILES,
+            seed: 0,
+            memoize: true,
+            walks: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// GPU configuration. The config's scheme becomes the session
+    /// scheme (call [`SimSession::scheme`] after to override).
+    pub fn config(mut self, cfg: GpuConfig) -> Self {
+        self.scheme = cfg.scheme;
+        self.cfg = cfg;
+        self.walks.borrow_mut().clear();
+        self
+    }
+
+    /// Encryption scheme applied to every run.
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// SE encryption ratio (consulted only for smart schemes).
+    pub fn se_ratio(mut self, ratio: f64) -> Self {
+        self.se_ratio = ratio;
+        self
+    }
+
+    /// Transformer phase (CNN layers ignore it; `Phase::Prefill`
+    /// reproduces the historical CNN paths byte for byte).
+    pub fn phase(mut self, phase: Phase) -> Self {
+        self.phase = phase;
+        self.walks.borrow_mut().clear();
+        self
+    }
+
+    /// Wave-sampling budget in tiles (DESIGN.md §5).
+    pub fn sample_tiles(mut self, sample_tiles: usize) -> Self {
+        self.sample_tiles = sample_tiles;
+        self.walks.borrow_mut().clear();
+        self
+    }
+
+    /// Base seed: layer `idx` draws its synthetic SE masks from
+    /// `seed + idx + 1`; 0 reproduces the historical per-figure runs.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self.walks.borrow_mut().clear();
+        self
+    }
+
+    /// Disable the walk cache (the differential-test escape hatch;
+    /// leave on everywhere else).
+    pub fn memoize(mut self, on: bool) -> Self {
+        self.memoize = on;
+        self.walks.borrow_mut().clear();
+        self
+    }
+
+    /// Simulate one pre-built workload under the session scheme.
+    pub fn run_workload(&self, w: &Workload) -> SimStats {
+        traffic::simulate(w, self.cfg.clone().with_scheme(self.scheme))
+    }
+
+    /// Simulate the whole network under the session scheme.
+    pub fn run_network(&self, net: &Network) -> NetworkRun {
+        self.run_network_for(net, self.scheme)
+    }
+
+    /// Simulate the whole network under an explicit scheme, reusing
+    /// the session's walk cache (the multi-scheme fast path: schemes
+    /// that resolve a layer to the same per-layer ratio replay the
+    /// same cached walk).
+    pub fn run_network_for(&self, net: &Network, scheme: Scheme) -> NetworkRun {
+        let mut out = NetworkRun::default();
+        let mut total_instrs = 0.0;
+        for (idx, layer) in net.layers.iter().enumerate() {
+            let ratio = if scheme.smart() {
+                layer_se_ratio(net, idx, self.se_ratio)
+            } else {
+                None // full encryption
+            };
+            let w = self.layer_walk(layer, ratio, self.seed + idx as u64 + 1);
+            let stats = traffic::simulate(&w, self.cfg.clone().with_scheme(scheme));
+            let scale = 1.0 / w.sampled_fraction.max(1e-12);
+            out.latency_cycles += stats.cycles as f64 * scale;
+            total_instrs += stats.instrs as f64 * scale;
+            out.plain_accesses += (stats.mc.plain_reads + stats.mc.plain_writes) as f64 * scale;
+            out.enc_accesses += (stats.mc.enc_reads + stats.mc.enc_writes) as f64 * scale;
+            out.ctr_accesses += (stats.mc.ctr_reads + stats.mc.ctr_writes) as f64 * scale;
+            out.per_layer.push((w.name.clone(), stats, scale));
+        }
+        // Time-weighted whole-run IPC (the paper's metric): total
+        // issued instructions over total cycles.
+        out.ipc = if out.latency_cycles > 0.0 { total_instrs / out.latency_cycles } else { 0.0 };
+        out
+    }
+
+    /// Run several schemes over one network through one shared walk
+    /// cache; returns (name, run) rows in the given order.
+    pub fn run_schemes(
+        &self,
+        net: &Network,
+        schemes: &[Scheme],
+    ) -> Vec<(&'static str, NetworkRun)> {
+        schemes.iter().map(|&s| (s.name(), self.run_network_for(net, s))).collect()
+    }
+
+    /// The memoized layer walk: build on first use, replay the cached
+    /// `Workload` afterwards. Construction is deterministic in exactly
+    /// the key fields plus the session-fixed sample budget and GPU
+    /// geometry (setters clear the cache), so a cache hit returns a
+    /// value byte-identical to a fresh build.
+    fn layer_walk(&self, layer: &Layer, ratio: Option<f64>, seed: u64) -> Rc<Workload> {
+        let build = || {
+            Rc::new(layer_workload_phased(
+                layer,
+                self.phase,
+                ratio,
+                &self.cfg,
+                self.sample_tiles,
+                seed,
+            ))
+        };
+        if !self.memoize {
+            return build();
+        }
+        let key =
+            (format!("{layer:?}"), self.phase, ratio.map(f64::to_bits).unwrap_or(u64::MAX), seed);
+        if let Some(w) = self.walks.borrow().get(&key) {
+            return Rc::clone(w);
+        }
+        let w = build();
+        self.walks.borrow_mut().insert(key, Rc::clone(&w));
+        w
+    }
+
+    /// How many distinct layer walks are currently cached (tests).
+    pub fn cached_walks(&self) -> usize {
+        self.walks.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::sim::SchemeRegistry;
+
+    #[test]
+    fn memoized_network_run_matches_unmemoized() {
+        let net = zoo::by_name("resnet18").expect("resnet18 in zoo");
+        for scheme in [Scheme::BASELINE, Scheme::SEAL] {
+            let fast = SimSession::new().scheme(scheme).sample_tiles(24).run_network(&net);
+            let slow =
+                SimSession::new().scheme(scheme).sample_tiles(24).memoize(false).run_network(&net);
+            assert_eq!(fast.latency_cycles, slow.latency_cycles, "{}", scheme.name());
+            assert_eq!(fast.ipc, slow.ipc, "{}", scheme.name());
+            assert_eq!(fast.per_layer.len(), slow.per_layer.len());
+            for ((nf, sf, cf), (ns, ss, cs)) in fast.per_layer.iter().zip(slow.per_layer.iter()) {
+                assert_eq!(nf, ns);
+                assert_eq!(sf, ss, "layer {nf} under {}", scheme.name());
+                assert_eq!(cf, cs);
+            }
+        }
+    }
+
+    #[test]
+    fn walk_cache_is_shared_across_schemes() {
+        let net = zoo::bert_tiny(16);
+        let session = SimSession::new().sample_tiles(4).phase(Phase::Decode);
+        let rows = session.run_schemes(&net, &SchemeRegistry::all());
+        assert_eq!(rows.len(), SchemeRegistry::all().len());
+        // Each layer resolves to at most two distinct ratios (None for
+        // non-smart + protected layers, Some(r) for smart interiors),
+        // so the cache stays far below layers x schemes.
+        let n_layers = net.layers.len();
+        assert!(session.cached_walks() <= 2 * n_layers, "{}", session.cached_walks());
+        assert!(session.cached_walks() >= n_layers);
+    }
+
+    #[test]
+    fn setters_invalidate_the_walk_cache() {
+        let net = zoo::bert_tiny(16);
+        let session = SimSession::new().sample_tiles(4);
+        session.run_network(&net);
+        assert!(session.cached_walks() > 0);
+        let session = session.sample_tiles(8);
+        assert_eq!(session.cached_walks(), 0, "sample change must drop cached walks");
+    }
+
+    #[test]
+    fn same_key_walks_are_replayed_by_reference() {
+        let net = zoo::bert_tiny(16);
+        let session = SimSession::new().sample_tiles(4);
+        // Two non-smart schemes: every layer resolves to ratio = None,
+        // so the second run must add zero new walks.
+        session.run_network_for(&net, Scheme::BASELINE);
+        let after_first = session.cached_walks();
+        session.run_network_for(&net, Scheme::DIRECT);
+        assert_eq!(session.cached_walks(), after_first);
+    }
+}

@@ -26,8 +26,8 @@ use crate::model::zoo::{self, Layer};
 use crate::sim::aes_engine::AesEngine;
 use crate::sim::config::LINE;
 use crate::sim::dram::Channel;
-use crate::sim::{GpuConfig, Scheme};
-use crate::traffic::{self, gemm, layers, network};
+use crate::sim::{GpuConfig, Scheme, SimSession};
+use crate::traffic::{self, gemm, layers};
 
 use super::spec::{CellKey, SweepSpec, SweepTarget};
 use super::store::{CellRow, SimSummary};
@@ -50,15 +50,10 @@ impl RunnerCfg {
 
     /// Pure form of [`RunnerCfg::from_env`] (unit-testable without
     /// touching process environment). Unparseable or zero values fall
-    /// back to the machine's parallelism.
+    /// back to the machine's parallelism
+    /// ([`crate::util::knob::threads_from_str`] holds the semantics).
     pub fn from_threads_str(s: Option<&str>) -> RunnerCfg {
-        let threads = s
-            .and_then(|s| s.trim().parse().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-            });
-        RunnerCfg { threads }
+        RunnerCfg { threads: crate::util::knob::threads_from_str(s) }
     }
 
     /// Whether this config runs sweeps inline (no worker pool).
@@ -110,7 +105,13 @@ pub fn run_cell(key: &CellKey, spec: &SweepSpec) -> CellRow {
             let net = zoo::by_name(name)
                 .unwrap_or_else(|| panic!("unknown network {name:?} in sweep"));
             let scheme = scheme_of(key);
-            let run = network::run_network_seeded(&net, scheme, key.ratio, &cfg, sample, seed);
+            let run = SimSession::new()
+                .config(cfg.clone())
+                .scheme(scheme)
+                .se_ratio(key.ratio)
+                .sample_tiles(sample)
+                .seed(seed)
+                .run_network(&net);
             CellRow {
                 target: label,
                 scheme: key.scheme.clone(),
@@ -125,8 +126,14 @@ pub fn run_cell(key: &CellKey, spec: &SweepSpec) -> CellRow {
             let net = zoo::by_name_seq(name, *seq)
                 .unwrap_or_else(|| panic!("unknown network {name:?} in sweep"));
             let scheme = scheme_of(key);
-            let run =
-                network::run_network_phased(&net, *phase, scheme, key.ratio, &cfg, sample, seed);
+            let run = SimSession::new()
+                .config(cfg.clone())
+                .scheme(scheme)
+                .phase(*phase)
+                .se_ratio(key.ratio)
+                .sample_tiles(sample)
+                .seed(seed)
+                .run_network(&net);
             CellRow {
                 target: label,
                 scheme: key.scheme.clone(),

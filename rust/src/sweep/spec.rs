@@ -318,16 +318,10 @@ pub fn resolve_sample(flag: Option<&str>, default: u64) -> usize {
 /// process environment). An explicit flag must parse — it is a direct
 /// user input, so garbage is a hard error like `Args::get_u64` — while
 /// an unparsable env value falls through to the default (matching the
-/// historical `SEAL_NET_SAMPLE` behaviour).
+/// historical `SEAL_NET_SAMPLE` behaviour). The shared semantics live
+/// in [`crate::util::knob::resolve_flag_env`].
 pub fn resolve_sample_from(flag: Option<&str>, env: Option<&str>, default: u64) -> usize {
-    if let Some(s) = flag {
-        let v: u64 = s
-            .trim()
-            .parse()
-            .unwrap_or_else(|_| panic!("--sample expects an integer, got {s:?}"));
-        return v as usize;
-    }
-    env.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(default) as usize
+    crate::util::knob::resolve_flag_env(flag, "--sample", env, default)
 }
 
 /// The networks of the paper's whole-network figures.

@@ -253,17 +253,17 @@ fn snapshot_json(
         SoakMode::Continuous => "continuous",
         SoakMode::Both => "both",
     };
-    Json::obj(vec![
-        ("schema", Json::str(SOAK_SCHEMA)),
+    let mut fields = crate::perf::ReportHeader::new(SOAK_SCHEMA, mode).fields();
+    fields.extend(vec![
         ("iterations_done", Json::num(done as f64)),
-        ("mode", Json::str(mode)),
         ("requests", Json::num(cfg.requests as f64)),
         ("sessions", Json::num(cfg.sessions as f64)),
         ("tail_budget", Json::num(cfg.tail_budget)),
         ("growth_budget", Json::num(cfg.growth_budget)),
         ("failures", Json::arr(failures.iter().map(|f| Json::str(f)))),
         ("schemes", Json::obj(schemes)),
-    ])
+    ]);
+    Json::obj(fields)
 }
 
 fn synth_cfg(cfg: &SoakCfg, scheme: Scheme, iter: usize) -> ServeConfig {

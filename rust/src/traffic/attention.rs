@@ -317,17 +317,34 @@ impl Emitter<'_> {
 /// GEMV weight stream: sample `take` of the `rows × lines_per_row`
 /// weight lines with strided coverage (the FC streaming pattern —
 /// every line is touched once, no reuse).
+///
+/// Every allocator stripe is `round_up(.., LINE)`-sized, so the global
+/// line index `g = row * lines_per_row + l` addresses a *contiguous*
+/// line array: `row * stripe + l * LINE == g * LINE` exactly, and the
+/// walk replays as base-plus-offset without the per-line div/mod. The
+/// general decomposition stays as the fallback for (hypothetical)
+/// non-line-aligned stripes and as the reference the fast path is
+/// pinned against (`stream_addressing_fast_path_matches_divmod`).
 fn stream_weight_rows(em: &mut Emitter, w: Operand, take: usize, total: usize) {
-    let lines_per_row = (w.stripe / LINE).max(1) as usize;
     let step = (total as f64 / take as f64).max(1.0);
     for i in 0..take {
         let g = (i as f64 * step) as usize;
-        let (row, l) = (g / lines_per_row, g % lines_per_row);
         em.push(&[
-            Slot::Load(w.base + row as u64 * w.stripe + l as u64 * LINE),
+            Slot::Load(stream_line_addr(w, g)),
             Slot::Compute(FC_COMPUTE_PER_LINE),
         ]);
     }
+}
+
+/// Address of the `g`-th weight line of a striped operand (see
+/// `stream_weight_rows` for the aligned-stripe replay argument).
+fn stream_line_addr(w: Operand, g: usize) -> u64 {
+    if w.stripe % LINE == 0 && w.stripe > 0 {
+        return w.base + g as u64 * LINE;
+    }
+    let lines_per_row = (w.stripe / LINE).max(1) as usize;
+    let (row, l) = (g / lines_per_row, g % lines_per_row);
+    w.base + row as u64 * w.stripe + l as u64 * LINE
 }
 
 /// Every line of one token stripe.
@@ -715,6 +732,23 @@ mod tests {
 
     fn ffn_layer() -> Layer {
         Layer::Ffn { d_model: 128, d_ff: 512, seq: 64 }
+    }
+
+    /// The aligned-stripe replay shortcut in `stream_line_addr` must
+    /// agree with the general row/line decomposition on every index,
+    /// and misaligned stripes must keep taking the general path.
+    #[test]
+    fn stream_addressing_fast_path_matches_divmod() {
+        let aligned = Operand { base: 0x4_0000, stripe: 4 * LINE, rows: 64 };
+        let lines_per_row = (aligned.stripe / LINE) as usize;
+        for g in 0..(aligned.rows * lines_per_row) {
+            let (row, l) = (g / lines_per_row, g % lines_per_row);
+            let reference = aligned.base + row as u64 * aligned.stripe + l as u64 * LINE;
+            assert_eq!(stream_line_addr(aligned, g), reference, "g={g}");
+        }
+        // A stripe that is not a line multiple cannot replay linearly.
+        let ragged = Operand { base: 0x8_0000, stripe: 3 * LINE / 2, rows: 8 };
+        assert_eq!(stream_line_addr(ragged, 3), ragged.base + 3 * ragged.stripe);
     }
 
     #[test]

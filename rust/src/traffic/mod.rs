@@ -74,7 +74,7 @@ pub fn simulate(
     cfg: crate::sim::GpuConfig,
 ) -> crate::sim::SimStats {
     let map = std::sync::Arc::new(workload.map.clone());
-    let mut gpu = crate::sim::Gpu::new(cfg, map, workload.streams());
+    let mut gpu = crate::sim::Gpu::with_streams(cfg, map, workload.streams());
     gpu.run()
 }
 

@@ -3,12 +3,18 @@
 //! whole-run IPC (paper §4.3 methodology; wave sampling per DESIGN.md
 //! §5 — each layer's measured cycles are scaled back by its sampled
 //! fraction).
+//!
+//! The `run_network*`/`run_all_schemes*` free functions below are
+//! `#[deprecated]` one-call wrappers over [`crate::sim::SimSession`]
+//! (DESIGN.md §14), kept for one release so out-of-tree callers get a
+//! pointed warning instead of a break. [`NetworkRun`] and
+//! [`layer_se_ratio`] (the paper's §3.4.1 SE policy) stay here — the
+//! session consumes both.
 
 use crate::model::zoo::{Layer, Network};
-use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimStats};
+use crate::sim::{GpuConfig, Scheme, SchemeRegistry, SimSession, SimStats};
 
 use super::attention::Phase;
-use super::layers::layer_workload_phased;
 
 /// Combined whole-network result.
 #[derive(Debug, Clone, Default)]
@@ -61,6 +67,7 @@ pub fn layer_se_ratio(net: &Network, idx: usize, ratio: f64) -> Option<f64> {
 
 /// Simulate an entire network under `scheme`. `se_ratio` is the SE
 /// encryption ratio (used only when `scheme.smart()`).
+#[deprecated(since = "0.1.0", note = "use sim::SimSession::run_network")]
 pub fn run_network(
     net: &Network,
     scheme: Scheme,
@@ -68,7 +75,12 @@ pub fn run_network(
     cfg_base: &GpuConfig,
     sample_tiles: usize,
 ) -> NetworkRun {
-    run_network_seeded(net, scheme, se_ratio, cfg_base, sample_tiles, 0)
+    SimSession::new()
+        .config(cfg_base.clone())
+        .scheme(scheme)
+        .se_ratio(se_ratio)
+        .sample_tiles(sample_tiles)
+        .run_network(net)
 }
 
 /// [`run_network`] with an explicit base seed: layer `idx` draws its
@@ -76,6 +88,7 @@ pub fn run_network(
 /// the mask draw while `base_seed = 0` reproduces the historical
 /// per-figure seeding. The run is fully deterministic in its inputs —
 /// the property the parallel sweep engine's byte-identity rests on.
+#[deprecated(since = "0.1.0", note = "use sim::SimSession::run_network with .seed(..)")]
 pub fn run_network_seeded(
     net: &Network,
     scheme: Scheme,
@@ -84,13 +97,20 @@ pub fn run_network_seeded(
     sample_tiles: usize,
     base_seed: u64,
 ) -> NetworkRun {
-    run_network_phased(net, Phase::Prefill, scheme, se_ratio, cfg_base, sample_tiles, base_seed)
+    SimSession::new()
+        .config(cfg_base.clone())
+        .scheme(scheme)
+        .se_ratio(se_ratio)
+        .sample_tiles(sample_tiles)
+        .seed(base_seed)
+        .run_network(net)
 }
 
 /// [`run_network_seeded`] with an explicit transformer phase: prefill
 /// runs the prompt GEMMs (KV cache written), decode one generated
 /// token (KV cache streamed). CNN layers ignore the phase, so
 /// `Phase::Prefill` reproduces the historical CNN paths byte for byte.
+#[deprecated(since = "0.1.0", note = "use sim::SimSession::run_network with .phase(..)")]
 pub fn run_network_phased(
     net: &Network,
     phase: Phase,
@@ -100,50 +120,34 @@ pub fn run_network_phased(
     sample_tiles: usize,
     base_seed: u64,
 ) -> NetworkRun {
-    let mut out = NetworkRun::default();
-    let mut total_instrs = 0.0;
-    for (idx, layer) in net.layers.iter().enumerate() {
-        let ratio = if scheme.smart() {
-            layer_se_ratio(net, idx, se_ratio)
-        } else {
-            None // full encryption
-        };
-        let w = layer_workload_phased(
-            layer,
-            phase,
-            ratio,
-            cfg_base,
-            sample_tiles,
-            base_seed + idx as u64 + 1,
-        );
-        let cfg = cfg_base.clone().with_scheme(scheme);
-        let stats = super::simulate(&w, cfg);
-        let scale = 1.0 / w.sampled_fraction.max(1e-12);
-        out.latency_cycles += stats.cycles as f64 * scale;
-        total_instrs += stats.instrs as f64 * scale;
-        out.plain_accesses += (stats.mc.plain_reads + stats.mc.plain_writes) as f64 * scale;
-        out.enc_accesses += (stats.mc.enc_reads + stats.mc.enc_writes) as f64 * scale;
-        out.ctr_accesses += (stats.mc.ctr_reads + stats.mc.ctr_writes) as f64 * scale;
-        out.per_layer.push((w.name.clone(), stats, scale));
-    }
-    // Time-weighted whole-run IPC (the paper's metric): total issued
-    // instructions over total cycles.
-    out.ipc = if out.latency_cycles > 0.0 { total_instrs / out.latency_cycles } else { 0.0 };
-    out
+    SimSession::new()
+        .config(cfg_base.clone())
+        .scheme(scheme)
+        .phase(phase)
+        .se_ratio(se_ratio)
+        .sample_tiles(sample_tiles)
+        .seed(base_seed)
+        .run_network(net)
 }
 
 /// Run the six paper schemes over a network; returns (name, run) rows.
+#[deprecated(since = "0.1.0", note = "use sim::SimSession::run_schemes")]
 pub fn run_all_schemes(
     net: &Network,
     se_ratio: f64,
     cfg: &GpuConfig,
     sample_tiles: usize,
 ) -> Vec<(&'static str, NetworkRun)> {
-    run_all_schemes_phased(net, Phase::Prefill, se_ratio, cfg, sample_tiles)
+    SimSession::new()
+        .config(cfg.clone())
+        .se_ratio(se_ratio)
+        .sample_tiles(sample_tiles)
+        .run_schemes(net, &SchemeRegistry::paper_six())
 }
 
 /// [`run_all_schemes`] at an explicit transformer phase (the `seal
 /// network` path; CNN layers ignore the phase).
+#[deprecated(since = "0.1.0", note = "use sim::SimSession::run_schemes with .phase(..)")]
 pub fn run_all_schemes_phased(
     net: &Network,
     phase: Phase,
@@ -151,12 +155,12 @@ pub fn run_all_schemes_phased(
     cfg: &GpuConfig,
     sample_tiles: usize,
 ) -> Vec<(&'static str, NetworkRun)> {
-    SchemeRegistry::paper_six()
-        .iter()
-        .map(|&scheme| {
-            (scheme.name(), run_network_phased(net, phase, scheme, se_ratio, cfg, sample_tiles, 0))
-        })
-        .collect()
+    SimSession::new()
+        .config(cfg.clone())
+        .phase(phase)
+        .se_ratio(se_ratio)
+        .sample_tiles(sample_tiles)
+        .run_schemes(net, &SchemeRegistry::paper_six())
 }
 
 // NOTE: the former per-bench `cached_all_schemes` JSON cache lived
@@ -197,8 +201,9 @@ mod tests {
     fn baseline_beats_direct_on_tiny_net() {
         let net = tiny_net();
         let cfg = GpuConfig::default();
-        let base = run_network(&net, Scheme::BASELINE, 0.5, &cfg, 64);
-        let dir = run_network(&net, Scheme::DIRECT, 0.5, &cfg, 64);
+        let session = SimSession::new().config(cfg).sample_tiles(64);
+        let base = session.run_network_for(&net, Scheme::BASELINE);
+        let dir = session.run_network_for(&net, Scheme::DIRECT);
         assert!(dir.latency_cycles > base.latency_cycles);
         assert!(dir.enc_accesses > 0.0);
         assert_eq!(base.enc_accesses, 0.0);
@@ -219,8 +224,11 @@ mod tests {
     fn decode_phase_runs_and_differs_from_prefill() {
         let net = zoo::bert_tiny(32);
         let cfg = GpuConfig::default();
-        let pre = run_network_phased(&net, Phase::Prefill, Scheme::SEAL, 0.5, &cfg, 16, 0);
-        let dec = run_network_phased(&net, Phase::Decode, Scheme::SEAL, 0.5, &cfg, 16, 0);
+        let session = |phase| {
+            SimSession::new().config(cfg.clone()).scheme(Scheme::SEAL).phase(phase).sample_tiles(16)
+        };
+        let pre = session(Phase::Prefill).run_network(&net);
+        let dec = session(Phase::Decode).run_network(&net);
         assert!(!pre.per_layer.iter().any(|(_, s, _)| s.hit_max_cycles));
         assert!(!dec.per_layer.iter().any(|(_, s, _)| s.hit_max_cycles));
         assert!(dec.enc_accesses > 0.0);

@@ -1,0 +1,86 @@
+//! Shared parsing for runtime tuning knobs (CLI flags + environment
+//! variables).
+//!
+//! Two knob families used to carry private copies of the same
+//! semantics — `SEAL_SWEEP_THREADS` in `sweep::runner` and
+//! `--sample`/`SEAL_NET_SAMPLE` in `sweep::spec` — and their
+//! garbage-handling rules had to be kept aligned by hand. This module
+//! is the single home for both:
+//!
+//! - [`threads_from_str`]: *lenient* — a thread count is machine
+//!   tuning, so unparseable or zero values silently fall back to the
+//!   machine's parallelism.
+//! - [`resolve_flag_env`]: flag > env > default resolution where an
+//!   explicit flag must parse (direct user input — garbage is a hard
+//!   error naming the flag, like `Args::get_u64`) while a garbage env
+//!   value falls through to the default (historical `SEAL_NET_SAMPLE`
+//!   behaviour; env vars leak from outer scopes, so they must never
+//!   abort a run).
+
+/// Parse a worker-thread count. Unparseable or zero values fall back
+/// to the machine's available parallelism (or 4 when even that is
+/// unknowable). Never panics: thread counts are tuning, not input.
+pub fn threads_from_str(s: Option<&str>) -> usize {
+    s.and_then(|s| s.trim().parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// Resolve a numeric knob with the one documented precedence order:
+/// explicit flag > environment variable > default. `flag_name` is the
+/// user-facing spelling (e.g. `"--sample"`) used in the panic message
+/// when an explicit flag fails to parse. Zero is accepted — whether 0
+/// is meaningful is the caller's policy, not the parser's.
+pub fn resolve_flag_env(
+    flag: Option<&str>,
+    flag_name: &str,
+    env: Option<&str>,
+    default: u64,
+) -> usize {
+    if let Some(s) = flag {
+        let v: u64 = s
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("{flag_name} expects an integer, got {s:?}"));
+        return v as usize;
+    }
+    env.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(default) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_parse_and_fall_back() {
+        assert_eq!(threads_from_str(Some("3")), 3);
+        assert_eq!(threads_from_str(Some(" 3 ")), 3);
+        // Garbage, zero, negative, empty, unset: machine fallback (>0).
+        for bad in [Some("0"), Some("-2"), Some("three"), Some(""), Some(" "), None] {
+            assert!(threads_from_str(bad) > 0, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn flag_env_precedence() {
+        assert_eq!(resolve_flag_env(Some("96"), "--sample", Some("48"), 240), 96);
+        assert_eq!(resolve_flag_env(Some(" 96 "), "--sample", None, 240), 96);
+        assert_eq!(resolve_flag_env(None, "--sample", Some("48"), 240), 48);
+        assert_eq!(resolve_flag_env(None, "--sample", Some(" 48 "), 240), 48);
+        assert_eq!(resolve_flag_env(None, "--sample", None, 240), 240);
+        assert_eq!(resolve_flag_env(Some("0"), "--sample", None, 240), 0);
+    }
+
+    #[test]
+    fn garbage_env_values_fall_back_silently() {
+        for bad in ["lots", "", " ", "12.5", "-1", "0x10"] {
+            assert_eq!(resolve_flag_env(None, "--sample", Some(bad), 240), 240, "{bad:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "--cell-budget expects an integer")]
+    fn garbage_flag_panics_with_the_flag_name() {
+        resolve_flag_env(Some("many"), "--cell-budget", None, 240);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod knob;
 pub mod rng;
 
 /// Round `a` up to a multiple of `m`.

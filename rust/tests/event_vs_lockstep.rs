@@ -7,14 +7,14 @@
 //! the open registry** — the paper's six plus ColoE and the
 //! registry-only GuardNN/Seculator pipelines, and anything registered
 //! later — plus a whole-network differential through the wave-sampled
-//! `run_network_seeded` path. Field-by-field equality covers cycles,
-//! per-class DRAM traffic, cache hit/miss counters, AES line counts,
-//! and stall accounting — if the event wheel ever skips a cycle that
-//! did work, one of these diverges.
+//! `SimSession::run_network` path. Field-by-field equality covers
+//! cycles, per-class DRAM traffic, cache hit/miss counters, AES line
+//! counts, and stall accounting — if the event wheel ever skips a
+//! cycle that did work, one of these diverges.
 
 use seal::model::zoo;
-use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine, SimStats};
-use seal::traffic::{self, attention, gemm, layers, network, Phase};
+use seal::sim::{GpuConfig, Scheme, SchemeRegistry, SimEngine, SimSession, SimStats};
+use seal::traffic::{self, attention, gemm, layers, Phase};
 
 fn run(w: &traffic::Workload, scheme: Scheme, engine: SimEngine) -> SimStats {
     traffic::simulate(w, GpuConfig::default().with_scheme(scheme).with_engine(engine))
@@ -85,8 +85,9 @@ fn transformer_layer_workloads_identical() {
 
 /// Whole-transformer differential: bert_tiny and gpt2_small × the
 /// whole registry × both phases through the sampled
-/// `run_network_phased` path — the acceptance bar for the transformer
-/// workload family (tight seq/sample budgets keep the suite fast).
+/// `SimSession::run_network` path — the acceptance bar for the
+/// transformer workload family (tight seq/sample budgets keep the
+/// suite fast).
 #[test]
 fn transformer_networks_identical_all_schemes() {
     let cfg = GpuConfig::default();
@@ -95,15 +96,13 @@ fn transformer_networks_identical_all_schemes() {
         for phase in [Phase::Prefill, Phase::Decode] {
             for scheme in all_registered() {
                 let run = |engine| {
-                    network::run_network_phased(
-                        net,
-                        phase,
-                        scheme,
-                        0.5,
-                        &cfg.clone().with_engine(engine),
-                        4,
-                        0,
-                    )
+                    SimSession::new()
+                        .config(cfg.clone().with_engine(engine))
+                        .scheme(scheme)
+                        .phase(phase)
+                        .se_ratio(0.5)
+                        .sample_tiles(4)
+                        .run_network(net)
                 };
                 let ev = run(SimEngine::Event);
                 let ls = run(SimEngine::Lockstep);
@@ -127,7 +126,8 @@ fn transformer_networks_identical_all_schemes() {
 
 /// Whole-network differential: every per-layer `SimStats` and the
 /// derived whole-run aggregates must match through the sampled
-/// `run_network_seeded` path (the `seal sweep` / fig 13–15 hot path).
+/// `SimSession::run_network` path (the `seal sweep` / fig 13–15 hot
+/// path).
 #[test]
 fn network_run_identical_through_sampling() {
     let net = zoo::by_name("vgg16").expect("vgg16 in zoo");
@@ -139,22 +139,15 @@ fn network_run_identical_through_sampling() {
         Scheme::parse("seculator").expect("registered scheme"),
     ];
     for scheme in schemes {
-        let ev = network::run_network_seeded(
-            &net,
-            scheme,
-            0.5,
-            &cfg.clone().with_engine(SimEngine::Event),
-            12,
-            0,
-        );
-        let ls = network::run_network_seeded(
-            &net,
-            scheme,
-            0.5,
-            &cfg.clone().with_engine(SimEngine::Lockstep),
-            12,
-            0,
-        );
+        let session = |engine| {
+            SimSession::new()
+                .config(cfg.clone().with_engine(engine))
+                .scheme(scheme)
+                .se_ratio(0.5)
+                .sample_tiles(12)
+        };
+        let ev = session(SimEngine::Event).run_network(&net);
+        let ls = session(SimEngine::Lockstep).run_network(&net);
         assert_eq!(ev.latency_cycles, ls.latency_cycles, "{}", scheme.name());
         assert_eq!(ev.ipc, ls.ipc, "{}", scheme.name());
         assert_eq!(ev.enc_accesses, ls.enc_accesses, "{}", scheme.name());

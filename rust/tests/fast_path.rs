@@ -1,0 +1,209 @@
+//! Differential acceptance suite for the fast-path simulator core
+//! (DESIGN.md §14): the AES-NI block cipher and the tile-walk
+//! memoization layer must each be *byte-identical* to their slow
+//! reference paths.
+//!
+//! AES: the dispatched entry points ([`Aes128::encrypt_block`] /
+//! `decrypt_block`) are compared against the portable scalar bodies
+//! over the full official KAT corpus (FIPS-197, NIST SP 800-38A,
+//! AESAVS) plus randomized blocks. On machines where the hardware path
+//! cannot engage (no `fast-aes` feature, non-x86_64, or no `aes` CPU
+//! flag) the differential still runs scalar-vs-scalar — and the suite
+//! *asserts* the skip loudly instead of silently passing as if the
+//! SIMD path had been exercised.
+//!
+//! Memoization: `SimSession` with the walk cache on vs off, across
+//! every scheme in the open registry × a CNN and a transformer target
+//! × both phases, through the event-wheel engine. A cache hit replays
+//! the identical `Workload` value, so every `SimStats` field must
+//! match exactly — no tolerance.
+
+use seal::crypto::{fast_path_active, Aes128};
+use seal::model::zoo;
+use seal::sim::{GpuConfig, SchemeRegistry, SimEngine, SimSession};
+use seal::traffic::network::NetworkRun;
+use seal::traffic::Phase;
+use seal::util::rng::Rng;
+
+/// Decode "00112233..." hex into a 16-byte block.
+fn hex16(s: &str) -> [u8; 16] {
+    assert_eq!(s.len(), 32);
+    let mut out = [0u8; 16];
+    for (i, b) in out.iter_mut().enumerate() {
+        *b = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap();
+    }
+    out
+}
+
+/// The official known-answer corpus: FIPS-197 Appendix B/C.1, NIST SP
+/// 800-38A F.1 ECB-AES128 (all four blocks), AESAVS GFSbox + KeySbox.
+const KAT_CORPUS: &[(&str, &str, &str)] = &[
+    (
+        "000102030405060708090a0b0c0d0e0f",
+        "00112233445566778899aabbccddeeff",
+        "69c4e0d86a7b0430d8cdb78070b4c55a",
+    ),
+    (
+        "2b7e151628aed2a6abf7158809cf4f3c",
+        "3243f6a8885a308d313198a2e0370734",
+        "3925841d02dc09fbdc118597196a0b32",
+    ),
+    (
+        "2b7e151628aed2a6abf7158809cf4f3c",
+        "6bc1bee22e409f96e93d7e117393172a",
+        "3ad77bb40d7a3660a89ecaf32466ef97",
+    ),
+    (
+        "2b7e151628aed2a6abf7158809cf4f3c",
+        "ae2d8a571e03ac9c9eb76fac45af8e51",
+        "f5d3d58503b9699de785895a96fdbaaf",
+    ),
+    (
+        "2b7e151628aed2a6abf7158809cf4f3c",
+        "30c81c46a35ce411e5fbc1191a0a52ef",
+        "43b1cd7f598ece23881b00e3ed030688",
+    ),
+    (
+        "2b7e151628aed2a6abf7158809cf4f3c",
+        "f69f2445df4f9b17ad2b417be66c3710",
+        "7b0c785e27e8ad3f8223207104725dd4",
+    ),
+    (
+        "00000000000000000000000000000000",
+        "f34481ec3cc627bacd5dc3fb08f273e6",
+        "0336763e966d92595a567cc9ce537f5e",
+    ),
+    (
+        "10a58869d74be5a374cf867cfb473859",
+        "00000000000000000000000000000000",
+        "6d251e6944b051e04eaa6fb4dbf78465",
+    ),
+];
+
+/// Loudly record (and pin) that the hardware path is not running here,
+/// so a green suite on scalar-only machines can't be mistaken for
+/// AES-NI coverage.
+fn note_skip_if_scalar(test: &str) {
+    if !fast_path_active() {
+        eprintln!(
+            "SKIP({test}): AES-NI path inactive \
+             (fast-aes feature off, non-x86_64, or CPU lacks `aes`) — \
+             differential ran scalar-vs-scalar only"
+        );
+    }
+}
+
+/// Dispatched vs scalar over the whole official KAT corpus: both paths
+/// must reproduce the official ciphertext, byte for byte.
+#[test]
+fn aes_dispatched_matches_scalar_on_kat_corpus() {
+    note_skip_if_scalar("aes_dispatched_matches_scalar_on_kat_corpus");
+    for &(key, pt, ct) in KAT_CORPUS {
+        let aes = Aes128::new(&hex16(key));
+        let (pt, ct) = (hex16(pt), hex16(ct));
+        assert_eq!(aes.encrypt_block(&pt), ct, "dispatched encrypt, key {key}");
+        assert_eq!(aes.encrypt_block_scalar(&pt), ct, "scalar encrypt, key {key}");
+        assert_eq!(aes.decrypt_block(&ct), pt, "dispatched decrypt, key {key}");
+        assert_eq!(aes.decrypt_block_scalar(&ct), pt, "scalar decrypt, key {key}");
+    }
+}
+
+/// Property test: dispatched and scalar agree on random keys/blocks,
+/// and decrypt inverts encrypt, for every machine this runs on.
+#[test]
+fn aes_dispatched_matches_scalar_on_random_blocks() {
+    note_skip_if_scalar("aes_dispatched_matches_scalar_on_random_blocks");
+    let mut rng = Rng::seeded(0x5ea1_fa57);
+    for round in 0..1000 {
+        let mut key = [0u8; 16];
+        let mut pt = [0u8; 16];
+        for b in key.iter_mut().chain(pt.iter_mut()) {
+            *b = rng.below(256) as u8;
+        }
+        let aes = Aes128::new(&key);
+        let ct = aes.encrypt_block(&pt);
+        assert_eq!(ct, aes.encrypt_block_scalar(&pt), "round {round}: encrypt diverged");
+        assert_eq!(
+            aes.decrypt_block(&ct),
+            aes.decrypt_block_scalar(&ct),
+            "round {round}: decrypt diverged"
+        );
+        assert_eq!(aes.decrypt_block(&ct), pt, "round {round}: roundtrip broke");
+    }
+}
+
+/// With the feature compiled in on x86_64, dispatch must track runtime
+/// CPU detection exactly — this is the leg CI's `--features fast-aes`
+/// build runs on AES-NI hardware.
+#[cfg(all(feature = "fast-aes", target_arch = "x86_64"))]
+#[test]
+fn aes_fast_path_engages_exactly_when_cpu_supports_it() {
+    assert_eq!(fast_path_active(), std::arch::is_x86_feature_detected!("aes"));
+}
+
+/// Assert two `NetworkRun`s are field-for-field identical (exact float
+/// equality: replay feeds the simulator the same `Workload` value, so
+/// every arithmetic step is the same).
+fn assert_runs_identical(tag: &str, a: &NetworkRun, b: &NetworkRun) {
+    assert_eq!(a.latency_cycles, b.latency_cycles, "{tag}: latency");
+    assert_eq!(a.ipc, b.ipc, "{tag}: ipc");
+    assert_eq!(a.plain_accesses, b.plain_accesses, "{tag}: plain");
+    assert_eq!(a.enc_accesses, b.enc_accesses, "{tag}: enc");
+    assert_eq!(a.ctr_accesses, b.ctr_accesses, "{tag}: ctr");
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{tag}: layer count");
+    for ((na, sa, ca), (nb, sb, cb)) in a.per_layer.iter().zip(b.per_layer.iter()) {
+        assert_eq!(na, nb, "{tag}");
+        assert_eq!(sa, sb, "{tag}: layer {na} SimStats");
+        assert_eq!(ca, cb, "{tag}: layer {na} scale");
+        assert!(!sa.hit_max_cycles, "{tag}: layer {na} hit the cycle cap");
+    }
+}
+
+/// The tentpole acceptance differential: memoized walk replay produces
+/// byte-identical `SimStats` across the *whole* scheme registry, on a
+/// CNN and a transformer, in both phases, through the event-wheel
+/// engine. The memoized side runs all schemes through ONE shared
+/// session (maximum cache reuse); the reference side rebuilds every
+/// walk from scratch.
+#[test]
+fn memoized_walks_replay_byte_identical_stats_across_registry() {
+    let schemes = SchemeRegistry::all();
+    assert!(schemes.len() >= 9, "registry lost built-ins? {schemes:?}");
+    let cfg = GpuConfig::default().with_engine(SimEngine::Event);
+
+    let cnn = zoo::by_name("vgg16").expect("vgg16 in zoo");
+    let transformer = zoo::bert_tiny(16);
+    let targets: [(&zoo::Network, &[Phase]); 2] = [
+        (&cnn, &[Phase::Prefill]),
+        (&transformer, &[Phase::Prefill, Phase::Decode]),
+    ];
+
+    for (net, phases) in targets {
+        for &phase in phases {
+            let memoized = SimSession::new()
+                .config(cfg.clone())
+                .phase(phase)
+                .se_ratio(0.5)
+                .sample_tiles(8);
+            let rows = memoized.run_schemes(net, &schemes);
+            assert!(
+                memoized.cached_walks() < schemes.len() * net.layers.len(),
+                "{}/{}: cache did not deduplicate walks",
+                net.name,
+                phase.name()
+            );
+            for (&scheme, (name, fast)) in schemes.iter().zip(&rows) {
+                assert_eq!(*name, scheme.name(), "run_schemes must preserve order");
+                let slow = SimSession::new()
+                    .config(cfg.clone())
+                    .phase(phase)
+                    .se_ratio(0.5)
+                    .sample_tiles(8)
+                    .memoize(false)
+                    .run_network_for(net, scheme);
+                let tag = format!("{}/{}/{}", net.name, phase.name(), name);
+                assert_runs_identical(&tag, fast, &slow);
+            }
+        }
+    }
+}

@@ -118,7 +118,7 @@ fn golden_stats_and_parallel_identity() {
 
 #[test]
 fn network_sweep_parallel_identity() {
-    // Whole-network cells take the run_network_seeded path; verify the
+    // Whole-network cells take the seeded SimSession path; verify the
     // same byte-identity there with a tightly sampled VGG-16.
     let spec = SweepSpec {
         name: "golden_net".to_string(),

@@ -3,9 +3,10 @@
 //! cause), worker scaling accounting, deadlock-free shutdown on
 //! backend failure, record→replay determinism over the JSONL
 //! telemetry stream, continuous-batching decode over the paged
-//! encrypted KV cache, the deprecated-shim equivalence contract, and
-//! the `seal serve-bench` document contract. Everything runs on the
-//! synthetic backend — no artifacts, no PJRT.
+//! encrypted KV cache, replay determinism of the unified
+//! [`ServeConfig`] entry point, and the `seal serve-bench` document
+//! contract. Everything runs on the synthetic backend — no artifacts,
+//! no PJRT.
 
 use std::time::Duration;
 
@@ -213,44 +214,28 @@ fn continuous_mode_completes_every_session_with_lifecycle_telemetry() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_whole_request_shims_match_serve_config() {
-    // The pre-PR-7 entry points survive as thin wrappers over
-    // ServeConfig: under a deterministic trace the shim and the
-    // unified API must produce identical admission accounting.
-    use seal::coordinator::{serve_synthetic, SynthServeCfg};
-
+fn serve_config_replay_is_deterministic_across_runs() {
+    // With the pre-PR-7 shims retired, ServeConfig is the only serving
+    // entry point; under a deterministic trace two independent runs
+    // must produce identical admission accounting (the equivalence
+    // guarantee the shim-parity test used to pin, now stated directly
+    // on the unified API).
     let mut times = Vec::new();
     for i in 0..10u64 {
         times.push(i * 100);
     }
-    let trace_path = temp_path("shim_equiv");
+    let trace_path = temp_path("replay_det");
     std::fs::write(&trace_path, telemetry::synth_arrival_trace(&times, "hand")).unwrap();
 
-    let via_config = run_whole(
-        base_cfg().workers(2).requests(1).replay(trace_path.clone()),
-    );
-    let via_shim = serve_synthetic(&SynthServeCfg {
-        spec: SynthSpec::default(),
-        n_requests: 1,
-        batch_max: 8,
-        n_workers: 2,
-        queue_cap: 8,
-        admission: Admission::Block,
-        scheme: Scheme::BASELINE,
-        se_ratio: 0.5,
-        arrival_per_ms: 1000.0,
-        slowdown: 1.0,
-        seed: None,
-        events: None,
-        replay: Some(trace_path.clone()),
-    })
-    .unwrap();
-    assert_eq!(via_shim.served, via_config.served);
-    assert_eq!(via_shim.served, 10, "trace length drives both paths");
-    assert_eq!(via_shim.rejected, via_config.rejected);
-    assert_eq!(via_shim.scheme, via_config.scheme);
-    assert_eq!(via_shim.admission, via_config.admission);
+    let first = run_whole(base_cfg().workers(2).requests(1).replay(trace_path.clone()));
+    let second = run_whole(base_cfg().workers(2).requests(1).replay(trace_path.clone()));
+    assert_eq!(first.served, 10, "trace length drives the run, not n_requests");
+    assert_eq!(second.served, first.served);
+    assert_eq!(second.rejected, first.rejected);
+    assert_eq!(second.rejected_shed, first.rejected_shed);
+    assert_eq!(second.rejected_closed, first.rejected_closed);
+    assert_eq!(second.scheme, first.scheme);
+    assert_eq!(second.admission, first.admission);
     let _ = std::fs::remove_file(&trace_path);
 }
 
